@@ -1,0 +1,95 @@
+"""Paper Figure 17 (memory panel) / §5.3-5.4: conditional tasking keeps
+memory FLAT as the iteration count grows, while DAG frameworks must
+statically unroll.
+
+Two levels, both measured:
+* host TDG: task count + graph bytes of the cyclic conditional taskflow vs
+  an unrolled DAG, across iteration counts;
+* in-XLA (the TPU-native layer): HLO size + compile artifacts of a
+  `jaxgraph` while-loop program vs the same loop fully unrolled.
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import STOP, JaxGraph, Taskflow
+
+
+def _host_graph_bytes(tf: Taskflow) -> int:
+    total = 0
+    for n in tf._nodes:
+        total += sys.getsizeof(n)
+        total += sys.getsizeof(n.successors)
+    return total
+
+
+def bench(iters=(8, 64, 512)):
+    rows = []
+    for k in iters:
+        # cyclic conditional: constant 3 tasks for ANY k
+        tf = Taskflow()
+        state = {"i": 0}
+        body = tf.static(lambda: None)
+
+        def cond(k=k, state=state) -> int:
+            state["i"] += 1
+            return 1 if state["i"] >= k else 0
+
+        c = tf.condition(cond)
+        stop = tf.static(lambda: None)
+        body.precede(c)
+        c.precede(body, stop)
+        rows.append((f"fig17/host/cyclic_k{k}_tasks", tf.num_tasks(),
+                     "constant"))
+        rows.append((f"fig17/host/cyclic_k{k}_bytes", _host_graph_bytes(tf),
+                     "constant"))
+
+        # unrolled: k tasks
+        tfu = Taskflow()
+        prev = None
+        for _ in range(k):
+            t = tfu.static(lambda: None)
+            if prev is not None:
+                prev.precede(t)
+            prev = t
+        rows.append((f"fig17/host/unrolled_k{k}_tasks", tfu.num_tasks(),
+                     "grows with k"))
+        rows.append((f"fig17/host/unrolled_k{k}_bytes",
+                     _host_graph_bytes(tfu), "grows with k"))
+
+    # in-XLA comparison at fixed k
+    k = 256
+    x = jnp.ones((256, 256), jnp.float32)
+
+    g = JaxGraph()
+    stp = g.task(lambda s: {"i": s["i"] + 1, "x": s["x"] @ s["x"] * 0.5})
+    cnd = g.cond(lambda s: (jnp.where(s["i"] >= k, 1, 0), s))
+    stp.precede(cnd)
+    cnd.precede(stp, STOP)
+    st = {"i": jnp.int32(0), "x": x}
+    loop_hlo = jax.jit(g.lower()).lower(st).compile().as_text()
+
+    def unrolled(s):
+        xx = s["x"]
+        for _ in range(k):
+            xx = xx @ xx * 0.5
+        return xx
+
+    unrolled_hlo = jax.jit(unrolled).lower(st).compile().as_text()
+    rows += [
+        (f"fig17/xla/while_hlo_bytes_k{k}", len(loop_hlo),
+         "conditional in-graph"),
+        (f"fig17/xla/unrolled_hlo_bytes_k{k}", len(unrolled_hlo),
+         "static unroll"),
+        (f"fig17/xla/hlo_ratio", len(unrolled_hlo) / len(loop_hlo),
+         "unrolled / conditional"),
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, derived in bench():
+        print(f"{name},{val:.1f},{derived}")

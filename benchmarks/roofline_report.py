@@ -1,0 +1,93 @@
+"""Roofline table (§Roofline deliverable): post-processes the dry-run
+records in results/dryrun.jsonl into the EXPERIMENTS.md table — the three
+terms, dominant bottleneck, useful-flops fraction, fits-HBM flag, and a
+kind-aware efficiency metric (decode cells are judged against mandatory
+bytes: params + cache must stream from HBM each step).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import get_config
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def load(path="results/dryrun.jsonl", tag=""):
+    seen = {}
+    p = Path(path)
+    if not p.exists():
+        return {}
+    for line in p.read_text().splitlines():
+        try:
+            r = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        if r.get("ok") and r.get("tag", "") == tag:
+            seen[(r["arch"], r["shape"], r["mesh"])] = r
+    return seen
+
+
+def decode_min_bytes(arch, shape, chips):
+    """Mandatory per-step HBM traffic for decode: every (active) param +
+    the whole KV cache / SSM state is read once."""
+    cfg = get_config(arch)
+    pbytes = cfg.active_param_count() * (2 if cfg.param_dtype == "bfloat16"
+                                         else 4)
+    return pbytes / chips  # cache bytes are in the record's argument bytes
+
+
+def rows(path="results/dryrun.jsonl", tag=""):
+    out = []
+    for (a, s, m), r in sorted(load(path, tag).items()):
+        rf = r["roofline"]
+        rec = {
+            "arch": a, "shape": s, "mesh": m,
+            "peak_gb": r["memory"]["peak_bytes"] / 1e9,
+            "fits": r["memory"]["fits_16gb"],
+            "compute_s": rf["compute_s"],
+            "memory_s": rf["memory_s"],
+            "collective_s": rf["collective_s"],
+            "dominant": rf["dominant"],
+            "useful": rf["useful_flops_frac"],
+            "frac": rf["roofline_frac"],
+        }
+        if r["kind"] == "decode":
+            minb = decode_min_bytes(a, s, r["chips"]) \
+                + r["memory"]["argument_bytes"] * 0.9
+            rec["frac"] = min(1.0, (minb / HBM_BW)
+                              / max(rf["memory_s"], rf["collective_s"],
+                                    rf["compute_s"], 1e-12))
+            rec["dominant"] += " (bw-bound)"
+        out.append(rec)
+    return out
+
+
+def bench():
+    rs = rows()
+    out = []
+    for r in rs:
+        out.append((f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+                    r["frac"],
+                    f"dom={r['dominant']} peak={r['peak_gb']:.1f}GB"))
+    return out
+
+
+def markdown(path="results/dryrun.jsonl", tag="") -> str:
+    lines = ["| arch | shape | mesh | peak GB | fits | compute s | "
+             "memory s | collective s | dominant | useful | frac |",
+             "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows(path, tag):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['peak_gb']:.2f} | {'Y' if r['fits'] else 'N'} | "
+            f"{r['compute_s']:.3f} | {r['memory_s']:.3f} | "
+            f"{r['collective_s']:.3f} | {r['dominant']} | "
+            f"{r['useful']:.2f} | {r['frac']:.3f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown())

@@ -1,0 +1,59 @@
+# One function per paper table. Prints ``name,value,derived`` CSV.
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig9,...]
+
+table2  — task/edge creation overheads (paper Table 2)
+fig9    — random-DAG runtime/memory vs baselines (paper Figure 9)
+fig11   — co-run throughput + utilization (paper Figure 11)
+fig13   — LSDNN inference (paper Figure 13, §5.3)
+fig17   — conditional-vs-unrolled memory (paper Figure 17 memory panel)
+fig21   — incremental timing propagation (paper Figure 21, §5.5)
+roofline— the dry-run roofline table (§Roofline), from results/dryrun.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    from . import (fig9_micro_random_dag, fig11_corun_throughput,
+                   fig13_lsdnn, fig17_conditional_memory,
+                   fig21_incremental_timing, roofline_report,
+                   table2_task_overhead)
+
+    suites = {
+        "table2": lambda: table2_task_overhead.bench(200_000),
+        "fig9": fig9_micro_random_dag.bench,
+        "fig11": fig11_corun_throughput.bench,
+        "fig13": fig13_lsdnn.bench,
+        "fig17": fig17_conditional_memory.bench,
+        "fig21": fig21_incremental_timing.bench,
+        "roofline": roofline_report.bench,
+    }
+    only = [s for s in args.only.split(",") if s]
+    failures = 0
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            for row_name, val, derived in fn():
+                print(f"{row_name},{val},{derived}", flush=True)
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"# {name} FAILED: {type(e).__name__}: {e}", flush=True)
+            traceback.print_exc()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,83 @@
+"""VLSI-placement-style optimization loop (paper §5.4 analogue): an
+iterative matching/refinement algorithm with a data-dependent convergence
+condition, expressed as ONE cyclic TDG — device phase (gradient-ish
+refinement of cell coordinates) + host phase (overlap scoring) + condition
+task deciding convergence. No unrolling; the same 5 tasks run any number
+of iterations.
+
+    PYTHONPATH=src python examples/placement_loop.py
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ACCEL, Executor, HOST, Taskflow
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cells", type=int, default=4096)
+    ap.add_argument("--nets", type=int, default=8192)
+    ap.add_argument("--tol", type=float, default=1e-3)
+    ap.add_argument("--max-iters", type=int, default=100)
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(0)
+    pos = jnp.asarray(rng.random((args.cells, 2)).astype(np.float32))
+    nets = jnp.asarray(rng.integers(0, args.cells,
+                                    size=(args.nets, 2)).astype(np.int32))
+
+    @jax.jit
+    def wirelength(p):
+        a, b = p[nets[:, 0]], p[nets[:, 1]]
+        return jnp.sum(jnp.abs(a - b))
+
+    @jax.jit
+    def refine(p):
+        # one smoothed-gradient step on the quadratic wirelength proxy
+        g = jax.grad(lambda q: jnp.sum((q[nets[:, 0]] - q[nets[:, 1]])**2))(p)
+        return jnp.clip(p - 0.002 * g, 0.0, 1.0)
+
+    state = {"pos": pos, "wl": float(wirelength(pos)), "it": 0,
+             "history": [float(wirelength(pos))]}
+
+    ex = Executor(domains={HOST: 2, ACCEL: 1})
+    tf = Taskflow("placement")
+
+    init = tf.static(lambda: print(f"initial wirelength "
+                                   f"{state['wl']:.1f}"))
+
+    def device_refine():
+        state["pos"] = refine(state["pos"])
+
+    t_refine = tf.static(device_refine, name="refine", domain=ACCEL)
+
+    def score() -> int:
+        wl = float(wirelength(state["pos"]))
+        rel = (state["wl"] - wl) / max(state["wl"], 1e-9)
+        state["wl"] = wl
+        state["it"] += 1
+        state["history"].append(wl)
+        converged = rel < args.tol or state["it"] >= args.max_iters
+        return 1 if converged else 0
+
+    t_cond = tf.condition(score, name="converged?")
+    t_done = tf.static(lambda: None, name="done")
+
+    init.precede(t_refine)
+    t_refine.precede(t_cond)
+    t_cond.precede(t_refine, t_done)    # 0 -> iterate, 1 -> stop
+
+    ex.run(tf).wait()
+    ex.shutdown()
+    h = state["history"]
+    print(f"converged after {state['it']} iterations "
+          f"(graph has {tf.num_tasks()} tasks, constant for any count)")
+    print(f"wirelength {h[0]:.1f} -> {h[-1]:.1f} "
+          f"({100 * (1 - h[-1]/h[0]):.1f}% reduction)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Quickstart: the five task types of the paper on one page.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import ACCEL, DeviceFlow, Executor, HOST, Taskflow
+
+# -- Listing 1: static tasking -------------------------------------------------
+executor = Executor(domains={HOST: 4, ACCEL: 1})
+taskflow = Taskflow("quickstart")
+
+A, B, C, D = taskflow.emplace(
+    lambda: print("Task A"),
+    lambda: print("Task B"),
+    lambda: print("Task C"),
+    lambda: print("Task D"),
+)
+A.precede(B, C)     # A runs before B and C
+D.succeed(B, C)     # D runs after  B and C
+executor.run(taskflow).wait()
+
+# -- Listing 2: dynamic tasking (subflow) -------------------------------------
+tf2 = Taskflow()
+A2 = tf2.static(lambda: print("A"))
+
+
+def make_subflow(sf):
+    print("B spawns B1,B2,B3")
+    b1 = sf.static(lambda: print("  B1"))
+    b2 = sf.static(lambda: print("  B2"))
+    b3 = sf.static(lambda: print("  B3 (joins B1,B2)"))
+    b3.succeed(b1, b2)
+
+
+B2 = tf2.dynamic(make_subflow)
+C2 = tf2.static(lambda: print("C"))
+D2 = tf2.static(lambda: print("D (after subflow joined)"))
+A2.precede(B2, C2)
+D2.succeed(B2, C2)
+executor.run(tf2).wait()
+
+# -- Listing 3: composable tasking ---------------------------------------------
+inner = Taskflow("inner")
+ia = inner.static(lambda: print("inner A"))
+ib = inner.static(lambda: print("inner B"))
+ia.precede(ib)
+outer = Taskflow("outer")
+c = outer.static(lambda: print("outer C"))
+mod = outer.composed_of(inner)
+d = outer.static(lambda: print("outer D"))
+c.precede(mod)
+mod.precede(d)
+executor.run(outer).wait()
+
+# -- Listing 4: conditional tasking (cycles!) ----------------------------------
+tf4 = Taskflow()
+state = {"n": 0}
+init = tf4.static(lambda: print("init"))
+
+
+def coin() -> int:
+    state["n"] += 1
+    print(f"  flip #{state['n']}")
+    return 1 if state["n"] >= 3 else 0   # 0 -> loop back, 1 -> continue
+
+
+cond = tf4.condition(coin)
+stop = tf4.static(lambda: print("stop"))
+init.precede(cond)
+cond.precede(cond, stop)   # successor 0 is itself: a cycle, not a DAG
+executor.run(tf4).wait()
+
+# -- Listing 5: device tasking (DeviceFlow = cudaFlow analogue) -----------------
+tf5 = Taskflow()
+
+
+def saxpy(df: DeviceFlow):
+    import jax.numpy as jnp
+    n = 1 << 16
+    df.copy("x", np.ones(n, np.float32))
+    df.copy("y", np.full(n, 2.0, np.float32))
+    df.kernel(lambda x, y: 2.0 * x + y, ["x", "y"], ["z"])  # one XLA launch
+    df.fetch("z")
+    df._result_holder = df     # keep a handle for the check below
+    tf5._df = df
+
+
+dev = tf5.device(saxpy)
+check = tf5.static(lambda: print(
+    "saxpy ok:", bool((tf5._df.result("z") == 4.0).all())))
+dev.precede(check)
+executor.run(tf5).wait()
+
+executor.shutdown()
+print("quickstart complete")

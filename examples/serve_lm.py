@@ -1,0 +1,51 @@
+"""Batched serving demo: compiled prefill + chunked decode (N tokens per
+XLA launch — the cudaFlow single-launch effect) with request batching on
+the host executor.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch qwen3-14b --batch 8
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serve.engine import ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-14b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--max-new", type=int, default=48)
+    ap.add_argument("--decode-chunk", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).smoke()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, decode_chunk=args.decode_chunk)
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            size=args.prompt_len).astype(np.int32)
+               for _ in range(args.batch)]
+    # warm-up compiles prefill + decode-chunk programs
+    eng.generate(prompts[:1] * len(prompts), max_new=args.decode_chunk + 1)
+
+    t0 = time.time()
+    outs = eng.generate(prompts, max_new=args.max_new)
+    dt = time.time() - t0
+    total = args.batch * args.max_new
+    launches = 1 + (args.max_new - 1 + args.decode_chunk - 1) \
+        // args.decode_chunk
+    print(f"{cfg.name}: {total} tokens in {dt:.2f}s "
+          f"({total/dt:.1f} tok/s) using ~{launches} device launches "
+          f"(chunked decode)")
+    print("first sample:", outs[0][:24].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""repro.core — Taskflow-JAX: the paper's task-graph system.
+
+Host layer (faithful reproduction of the paper):
+    Taskflow / Task / Subflow       task-graph model (§3)
+    Executor / Topology             heterogeneous work stealing (§4)
+    EventNotifier / WorkStealingQueue  runtime data structures (§4.3)
+
+Device layer (TPU-native adaptation):
+    JaxGraph / STOP                 in-XLA conditional task graphs (§3.4)
+    DeviceFlow                      cudaFlow analogue, single-launch (§3.5)
+"""
+from .atomic import AtomicInt
+from .deviceflow import DeviceFlow
+from .executor import Executor, TaskError, Topology
+from .graph import ACCEL, HOST, GraphBuilder, Subflow, Task, Taskflow, TaskType
+from .jaxgraph import STOP, JaxGraph
+from .notifier import EventNotifier, Waiter
+from .observer import Observer, Profiler
+from .wsq import WorkStealingQueue
+from . import algorithms
+
+__all__ = [
+    "AtomicInt", "DeviceFlow", "Executor", "TaskError", "Topology",
+    "ACCEL", "HOST", "GraphBuilder", "Subflow", "Task", "Taskflow",
+    "TaskType", "STOP", "JaxGraph", "EventNotifier", "Waiter",
+    "Observer", "Profiler", "WorkStealingQueue", "algorithms",
+]

@@ -1,0 +1,113 @@
+"""DeviceFlow — the cudaFlow analogue (paper §3.5) for JAX/TPU.
+
+A DeviceFlow task *captures* a graph of device operations at its execution
+context (stateful parameter capture, paper §3.5.2) and offloads the whole
+graph with **one host call**: the captured program is ``jax.jit``-compiled
+once and launched as a single XLA executable — the TPU-native equivalent of
+CUDA Graph's single-launch of many dependent GPU ops (paper's first design
+advantage), with closure capture providing the stateful execution (second
+advantage), and arbitrary nested :class:`repro.core.jaxgraph.JaxGraph`
+programs providing extensibility (third advantage).
+
+Differences from cudaFlow, and why (DESIGN.md §2.3): JAX op graphs are
+*dataflow-captured* — dependencies between captured ops are discovered from
+array use-def by XLA, so explicit ``precede`` between device ops is
+unnecessary; insertion order is only a recording order. H2D/D2H transfers map
+to ``device_put`` / ``device_get`` tasks at the program boundary.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+__all__ = ["DeviceFlow"]
+
+
+class DeviceFlow:
+    """Capture-and-launch accelerator graph, bound to a worker's device."""
+
+    def __init__(self, device: Any = None) -> None:
+        self.device = device
+        self._inputs: Dict[str, Any] = {}
+        self._ops: List[Tuple[Callable, List[str], List[str], str]] = []
+        self._fetch: List[str] = []
+        self._results: Dict[str, Any] = {}
+        self._compiled = None
+        self._num_launches = 0
+
+    # -- capture API ------------------------------------------------------------
+    def copy(self, name: str, host_array: Any) -> "DeviceFlow":
+        """H2D transfer task: make ``host_array`` available as ``name``."""
+        self._inputs[name] = host_array
+        return self
+
+    def kernel(self, fn: Callable, inputs: List[str], outputs: List[str],
+               name: str = "") -> "DeviceFlow":
+        """Device op task: ``outputs = fn(*inputs)`` (any JAX computation —
+        including a lowered JaxGraph program for in-graph control flow)."""
+        self._ops.append((fn, list(inputs), list(outputs),
+                          name or getattr(fn, "__name__", "op")))
+        return self
+
+    def fetch(self, *names: str) -> "DeviceFlow":
+        """D2H transfer task: copy ``names`` back after the launch."""
+        self._fetch.extend(names)
+        return self
+
+    def call(self, fn: Callable, *args: Any, out: str = "out") -> "DeviceFlow":
+        """Convenience: capture ``out = fn(*args)`` with positional host args
+        (the dominant trainer use: one compiled step function)."""
+        arg_names = []
+        for i, a in enumerate(args):
+            n = f"__arg{len(self._inputs)}_{i}"
+            self._inputs[n] = a
+            arg_names.append(n)
+        self._ops.append((fn, arg_names, [out], getattr(fn, "__name__", "call")))
+        self._fetch.append(out)
+        return self
+
+    # -- launch -------------------------------------------------------------------
+    def _build(self):
+        import jax
+
+        ops = list(self._ops)
+        fetch = list(self._fetch)
+
+        def program(env: Dict[str, Any]) -> Dict[str, Any]:
+            env = dict(env)
+            for fn, ins, outs, _ in ops:
+                vals = fn(*[env[i] for i in ins])
+                if len(outs) == 1:
+                    env[outs[0]] = vals
+                else:
+                    for o, v in zip(outs, vals):
+                        env[o] = v
+            return {k: env[k] for k in fetch}
+
+        return jax.jit(program)
+
+    def _offload(self, launches: int = 1) -> Dict[str, Any]:
+        """Compile once, launch ``launches`` times (paper cudaFlow offload)."""
+        import jax
+
+        if self._compiled is None:
+            self._compiled = self._build()
+        env = self._inputs
+        if self.device is not None:
+            env = {k: jax.device_put(v, self.device) for k, v in env.items()}
+        out: Dict[str, Any] = {}
+        for _ in range(max(1, launches)):
+            out = self._compiled(env)
+            self._num_launches += 1
+        # block + D2H at the graph boundary (one sync per launch batch)
+        self._results = jax.device_get(out)
+        return self._results
+
+    def offload(self, n: int = 1) -> Dict[str, Any]:
+        return self._offload(n)
+
+    def result(self, name: str) -> Any:
+        return self._results[name]
+
+    @property
+    def num_launches(self) -> int:
+        return self._num_launches

@@ -1,0 +1,311 @@
+"""In-XLA conditional task-graph engine — the TPU-native form of §3.4.
+
+The paper's *conditional tasking* lets a task graph contain branches and
+cycles so that iterative workloads need neither static unrolling (memory
+blow-up, paper Fig. 13/17) nor per-iteration host launches. On TPU the
+equivalent mechanism is control flow *inside* the XLA program:
+
+* a task graph whose tasks are **pure functions over a shared state pytree**
+  is lowered to ONE compiled program;
+* a DAG lowers to a fused topological composition;
+* a graph with condition tasks (possibly cyclic) lowers to a
+  **program-counter machine**: ``lax.while_loop`` whose body dispatches the
+  current *basic block* with ``lax.switch``. Chains of single-entry
+  single-exit static tasks are merged into superblocks to keep the switch
+  small.
+
+Scheduling-semantics parity with the host runtime: static edges are strong
+dependencies (a block runs when its chain predecessor finished), condition
+out-edges are weak (the returned index picks the next block) — but because a
+single SPMD program is sequential-in-control, *parallel* DAG branches obtain
+their parallelism from XLA fusion/SPMD rather than from threads (DESIGN.md
+§2.3).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["JaxGraph", "STOP"]
+
+
+class _Stop:
+    def __repr__(self) -> str:
+        return "STOP"
+
+
+#: Sentinel successor: leaving through it terminates the graph program.
+STOP = _Stop()
+
+
+class JNode:
+    __slots__ = ("fn", "kind", "name", "successors", "idx")
+
+    def __init__(self, fn: Callable, kind: str, name: str) -> None:
+        self.fn = fn
+        self.kind = kind  # "task" | "cond"
+        self.name = name
+        self.successors: List[Any] = []  # JNode or STOP
+        self.idx = -1
+
+
+class JTask:
+    __slots__ = ("_node",)
+
+    def __init__(self, node: JNode) -> None:
+        self._node = node
+
+    def precede(self, *others: Any) -> "JTask":
+        for o in others:
+            self._node.successors.append(o if o is STOP else o._node)
+        return self
+
+    def succeed(self, *others: "JTask") -> "JTask":
+        for o in others:
+            o._node.successors.append(self._node)
+        return self
+
+    @property
+    def name(self) -> str:
+        return self._node.name
+
+
+class JaxGraph:
+    """Build a (possibly cyclic) graph of pure state transformers."""
+
+    def __init__(self, name: str = "") -> None:
+        self.name = name
+        self._nodes: List[JNode] = []
+
+    # -- construction -----------------------------------------------------------
+    def task(self, fn: Callable[[Any], Any], name: str = "") -> JTask:
+        """Static task: ``state -> state``."""
+        n = JNode(fn, "task", name or f"t{len(self._nodes)}")
+        self._nodes.append(n)
+        return JTask(n)
+
+    def cond(self, fn: Callable[[Any], Tuple[Any, Any]], name: str = "") -> JTask:
+        """Condition task: ``state -> (successor_index, state)`` (traced
+        int32 index selecting among this task's successors, paper §3.4)."""
+        n = JNode(fn, "cond", name or f"c{len(self._nodes)}")
+        self._nodes.append(n)
+        return JTask(n)
+
+    # -- analysis ------------------------------------------------------------------
+    def _preds(self) -> Dict[JNode, List[JNode]]:
+        preds: Dict[JNode, List[JNode]] = {n: [] for n in self._nodes}
+        for n in self._nodes:
+            for s in n.successors:
+                if s is not STOP:
+                    preds[s].append(n)
+        return preds
+
+    def _is_dag(self) -> bool:
+        if any(n.kind == "cond" for n in self._nodes):
+            return False
+        color: Dict[JNode, int] = {}
+
+        def dfs(n: JNode) -> bool:
+            color[n] = 1
+            for s in n.successors:
+                if s is STOP:
+                    continue
+                c = color.get(s, 0)
+                if c == 1 or (c == 0 and not dfs(s)):
+                    return False
+            color[n] = 2
+            return True
+
+        return all(dfs(n) for n in self._nodes if color.get(n, 0) == 0)
+
+    def _topo_order(self) -> List[JNode]:
+        preds = self._preds()
+        indeg = {n: len(ps) for n, ps in preds.items()}
+        stack = [n for n in self._nodes if indeg[n] == 0]
+        order = []
+        while stack:
+            n = stack.pop()
+            order.append(n)
+            for s in n.successors:
+                if s is STOP:
+                    continue
+                indeg[s] -= 1
+                if indeg[s] == 0:
+                    stack.append(s)
+        if len(order) != len(self._nodes):
+            raise ValueError("graph has a cycle but no condition task")
+        return order
+
+    # -- lowering ----------------------------------------------------------------
+    def lower(self, *, max_iters: Optional[int] = None) -> Callable[[Any], Any]:
+        """Lower to a single pure function ``state -> state`` (jit-able).
+
+        DAG graphs become a fused composition; conditional/cyclic graphs
+        become a PC machine (`lax.while_loop` + `lax.switch`).
+        ``max_iters`` optionally bounds the trip count (safety rail).
+        """
+        if not self._nodes:
+            return lambda state: state
+        if self._is_dag():
+            order = self._topo_order()
+
+            def run_dag(state):
+                for n in order:
+                    state = n.fn(state)
+                return state
+
+            return run_dag
+        return self._lower_pc(max_iters)
+
+    def compile(self, example_state: Any, **kw) -> Callable[[Any], Any]:
+        """``lower()`` + ``jax.jit`` — ONE launch for the whole graph, the
+        cudaFlow/CUDA-Graph effect of paper §3.5."""
+        fn = self.lower(**kw)
+        return jax.jit(fn)
+
+    # .. PC machine ..
+    def _blocks(self) -> Tuple[List[List[JNode]], Dict[JNode, int]]:
+        """Partition into superblocks: maximal chains of single-pred static
+        tasks, each optionally terminated by a condition task."""
+        preds = self._preds()
+        # entry = unique node with no STRONG predecessor (weak back-edges
+        # from condition tasks do not gate the start — paper §3.4.1 applied
+        # to the do-while idiom).
+        sources = [n for n in self._nodes
+                   if not any(p.kind != "cond" for p in preds[n])]
+        if len(sources) > 1:  # prefer a true zero-dependency source
+            no_pred = [n for n in sources if not preds[n]]
+            if len(no_pred) == 1:
+                sources = no_pred
+        if len(sources) != 1:
+            raise ValueError(
+                f"cyclic graph must have exactly one entry task, got "
+                f"{[n.name for n in sources]}")
+        for n in self._nodes:
+            if n.kind == "task" and len(n.successors) > 1:
+                raise ValueError(
+                    f"static task {n.name!r} has multiple successors in a "
+                    "conditional graph; merge the fan-out into one task "
+                    "(SPMD control flow cannot fork threads — DESIGN.md §2.3)")
+        # jump targets begin blocks
+        targets = {sources[0]}
+        for n in self._nodes:
+            if n.kind == "cond":
+                for s in n.successors:
+                    if s is not STOP:
+                        targets.add(s)
+            if len(preds[n]) > 1:
+                targets.add(n)
+        blocks: List[List[JNode]] = []
+        block_of: Dict[JNode, int] = {}
+        for t in self._nodes:
+            if t not in targets:
+                continue
+            chain = [t]
+            cur = t
+            while cur.kind == "task":  # cond terminators end the chain
+                succs = cur.successors
+                if not succs or succs[0] is STOP or succs[0] in targets:
+                    break
+                cur = succs[0]
+                chain.append(cur)
+            blocks.append(chain)
+            for n in chain:
+                block_of[n] = len(blocks) - 1
+        # sanity: every node must live in exactly one block
+        placed = sum(len(b) for b in blocks)
+        if placed != len(self._nodes):
+            unplaced = [n.name for n in self._nodes if n not in block_of]
+            raise ValueError(f"unreachable tasks (no path from source): "
+                             f"{unplaced}")
+        return blocks, block_of
+
+    def _lower_pc(self, max_iters: Optional[int]) -> Callable[[Any], Any]:
+        blocks, block_of = self._blocks()
+        nblocks = len(blocks)
+        stop_pc = nblocks
+
+        def make_branch(chain: List[JNode]) -> Callable:
+            term = chain[-1]
+
+            def branch(state):
+                for n in chain[:-1]:
+                    state = n.fn(state)
+                if term.kind == "cond":
+                    idx, state = term.fn(state)
+                    # out-of-range index => no successor taken (Taskflow
+                    # semantics): route to STOP via a trailing sentinel slot.
+                    k = len(term.successors)
+                    succ_pc = jnp.array(
+                        [stop_pc if s is STOP else block_of[s]
+                         for s in term.successors] + [stop_pc],
+                        dtype=jnp.int32)
+                    idx = jnp.asarray(idx, jnp.int32)
+                    idx = jnp.where((idx >= 0) & (idx < k), idx, k)
+                    nxt = succ_pc[idx]
+                else:
+                    state = term.fn(state)
+                    if term.successors and term.successors[0] is not STOP:
+                        nxt = jnp.int32(block_of[term.successors[0]])
+                    else:
+                        nxt = jnp.int32(stop_pc)
+                return nxt, state
+
+            return branch
+
+        branches = [make_branch(b) for b in blocks]
+
+        def run(state):
+            def cond_fn(carry):
+                pc, _, it = carry
+                alive = pc < stop_pc
+                if max_iters is not None:
+                    alive = jnp.logical_and(alive, it < max_iters)
+                return alive
+
+            def body_fn(carry):
+                pc, st, it = carry
+                nxt, st = lax.switch(pc, branches, st)
+                return nxt, st, it + 1
+
+            _, final, _ = lax.while_loop(
+                cond_fn, body_fn, (jnp.int32(0), state, jnp.int32(0)))
+            return final
+
+        return run
+
+    # -- eager reference interpreter (oracle for tests/benchmarks) --------------------
+    def run_reference(self, state: Any, max_iters: int = 10_000) -> Any:
+        """Execute the graph eagerly in Python — the unrolled / host-driven
+        semantics the paper's DAG baselines use. Oracle for ``lower()``."""
+        if self._is_dag():
+            for n in self._topo_order():
+                state = n.fn(state)
+            return state
+        blocks, block_of = self._blocks()
+        pc = 0
+        for _ in range(max_iters):
+            chain = blocks[pc]
+            for n in chain[:-1]:
+                state = n.fn(state)
+            term = chain[-1]
+            if term.kind == "cond":
+                idx, state = term.fn(state)
+                idx = int(idx)
+                if 0 <= idx < len(term.successors):
+                    s = term.successors[idx]
+                    pc = len(blocks) if s is STOP else block_of[s]
+                else:
+                    pc = len(blocks)  # out-of-range: no successor taken
+            else:
+                state = term.fn(state)
+                if term.successors and term.successors[0] is not STOP:
+                    pc = block_of[term.successors[0]]
+                else:
+                    pc = len(blocks)
+            if pc >= len(blocks):
+                return state
+        raise RuntimeError("reference interpreter exceeded max_iters")

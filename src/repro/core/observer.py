@@ -1,0 +1,84 @@
+"""Executor observer interface + a profiler.
+
+The profiler exposes the counters the paper's evaluation reads off the
+runtime: per-worker executed-task counts, steal successes/failures,
+sleep/active residency (the paper's energy-efficiency mechanism: fewer
+busy-wait cycles), and per-domain utilization — used by the co-run
+throughput benchmark (paper Figure 11) and reported in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import defaultdict
+from typing import Any, Dict
+
+__all__ = ["Observer", "Profiler"]
+
+
+class Observer:
+    """Override any subset of hooks; all are called from worker threads."""
+
+    def on_entry(self, worker_id: int, domain: str, task: Any) -> None: ...
+    def on_exit(self, worker_id: int, domain: str, task: Any) -> None: ...
+    def on_steal(self, worker_id: int, domain: str, ok: bool) -> None: ...
+    def on_sleep(self, worker_id: int, domain: str) -> None: ...
+    def on_wake(self, worker_id: int, domain: str) -> None: ...
+
+
+class Profiler(Observer):
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.tasks_executed: Dict[int, int] = defaultdict(int)
+        self.task_time: Dict[int, float] = defaultdict(float)
+        self.steal_ok: Dict[int, int] = defaultdict(int)
+        self.steal_fail: Dict[int, int] = defaultdict(int)
+        self.sleeps: Dict[int, int] = defaultdict(int)
+        self.sleep_time: Dict[int, float] = defaultdict(float)
+        self._entry_t: Dict[int, float] = {}
+        self._sleep_t: Dict[int, float] = {}
+        self._t0 = time.perf_counter()
+
+    def on_entry(self, worker_id, domain, task):
+        self._entry_t[worker_id] = time.perf_counter()
+
+    def on_exit(self, worker_id, domain, task):
+        dt = time.perf_counter() - self._entry_t.get(worker_id, time.perf_counter())
+        with self._lock:
+            self.tasks_executed[worker_id] += 1
+            self.task_time[worker_id] += dt
+
+    def on_steal(self, worker_id, domain, ok):
+        with self._lock:
+            if ok:
+                self.steal_ok[worker_id] += 1
+            else:
+                self.steal_fail[worker_id] += 1
+
+    def on_sleep(self, worker_id, domain):
+        self._sleep_t[worker_id] = time.perf_counter()
+
+    def on_wake(self, worker_id, domain):
+        t = self._sleep_t.pop(worker_id, None)
+        if t is not None:
+            with self._lock:
+                self.sleeps[worker_id] += 1
+                self.sleep_time[worker_id] += time.perf_counter() - t
+
+    # -- summaries ----------------------------------------------------------
+    def summary(self) -> Dict[str, Any]:
+        wall = time.perf_counter() - self._t0
+        total_tasks = sum(self.tasks_executed.values())
+        busy = sum(self.task_time.values())
+        asleep = sum(self.sleep_time.values())
+        nworkers = max(len(self.tasks_executed), 1)
+        return {
+            "wall_s": wall,
+            "tasks": total_tasks,
+            "busy_s": busy,
+            "sleep_s": asleep,
+            "steals_ok": sum(self.steal_ok.values()),
+            "steals_fail": sum(self.steal_fail.values()),
+            "utilization": busy / (wall * nworkers) if wall > 0 else 0.0,
+            "sleep_residency": asleep / (wall * nworkers) if wall > 0 else 0.0,
+        }

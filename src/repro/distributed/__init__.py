@@ -1,0 +1,1 @@
+from .sharding import ShardCtx, constrain, param_specs, use_shard_ctx

@@ -1,0 +1,175 @@
+"""Sharding rules: map logical tensor axes onto the production mesh.
+
+Logical axes used by the model code:
+    ``dp``   — data-parallel axes for the batch dim (``("pod","data")`` on
+               the multi-pod mesh, ``("data",)`` single-pod)
+    ``fsdp`` — parameter/optimizer sharding axis (ZeRO-3 style), = "data"
+    ``tp``   — tensor/expert-parallel axis, = "model"
+    ``sp``   — sequence-parallel axis for long-context KV caches, = "model"
+
+The model calls :func:`constrain` on activations; :func:`param_specs`
+assigns a PartitionSpec to every parameter by path-based rules (Megatron
+column/row pattern for attention/MLP, expert-dim sharding for MoE, inner-dim
+sharding for Mamba). Everything degrades to no-ops when no mesh is active so
+the same model code runs single-device smoke tests unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardCtx", "use_shard_ctx", "current_ctx", "constrain",
+           "param_specs", "named_sharding", "logical_to_spec"]
+
+
+@dataclass
+class ShardCtx:
+    mesh: Optional[Mesh]
+    dp: Tuple[str, ...] = ("data",)
+    #: fsdp may span multiple mesh axes (("pod","data") on the multi-pod
+    #: mesh, so parameter/optimizer state scales with TOTAL chips)
+    fsdp: Optional[Any] = "data"
+    tp: Optional[str] = "model"
+    sp: Optional[str] = "model"
+
+    def axis_size(self, logical: str) -> int:
+        if self.mesh is None:
+            return 1
+
+        def tup(x):
+            if x is None:
+                return ()
+            return x if isinstance(x, tuple) else (x,)
+
+        names = {"dp": self.dp, "fsdp": tup(self.fsdp),
+                 "tp": tup(self.tp), "sp": tup(self.sp)}[logical]
+        size = 1
+        for n in names:
+            size *= self.mesh.shape[n]
+        return size
+
+
+_local = threading.local()
+
+
+def current_ctx() -> Optional[ShardCtx]:
+    return getattr(_local, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_shard_ctx(ctx: Optional[ShardCtx]):
+    prev = current_ctx()
+    _local.ctx = ctx
+    try:
+        yield ctx
+    finally:
+        _local.ctx = prev
+
+
+def logical_to_spec(ctx: ShardCtx, logical: Sequence[Any]) -> P:
+    """Translate ('dp', None, 'tp') style logical specs to a PartitionSpec."""
+    out = []
+    for a in logical:
+        if a is None:
+            out.append(None)
+        elif a == "dp":
+            out.append(ctx.dp if len(ctx.dp) > 1 else ctx.dp[0])
+        elif a == "fsdp":
+            out.append(ctx.fsdp)
+        elif a in ("tp", "sp"):
+            out.append(getattr(ctx, a))
+        else:  # raw mesh axis name
+            out.append(a)
+    return P(*out)
+
+
+def constrain(x: Any, *logical: Any) -> Any:
+    """with_sharding_constraint under the active ShardCtx (no-op without)."""
+    ctx = current_ctx()
+    if ctx is None or ctx.mesh is None:
+        return x
+    spec = logical_to_spec(ctx, logical)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))
+
+
+def named_sharding(ctx: ShardCtx, *logical: Any) -> NamedSharding:
+    return NamedSharding(ctx.mesh, logical_to_spec(ctx, logical))
+
+
+# --------------------------------------------------------------------------- #
+# parameter sharding rules
+# --------------------------------------------------------------------------- #
+
+def _divisible(dim: int, ctx: ShardCtx, axis) -> bool:
+    if axis is None or ctx.mesh is None:
+        return False
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    size = 1
+    for a in axes:
+        size *= ctx.mesh.shape[a]
+    return dim % size == 0
+
+
+def _rule(path: str, shape: Tuple[int, ...], ctx: ShardCtx) -> P:
+    """PartitionSpec for one parameter (path is '/'-joined key names)."""
+    tp, fsdp = ctx.tp, ctx.fsdp
+    leaf = path.rsplit("/", 1)[-1]
+
+    def guard(spec_axes):
+        """Drop mesh axes that do not divide the dim (uneven shards)."""
+        fixed = []
+        for dim, ax in zip(shape, spec_axes):
+            fixed.append(ax if _divisible(dim, ctx, ax) else None)
+        return P(*fixed)
+
+    if leaf in ("embed", "pos_embed"):
+        return guard((tp, fsdp))                       # (V, D)
+    if leaf == "lm_head":
+        return guard((fsdp, tp))                       # (D, V)
+    if leaf in ("wq", "wk", "wv", "wi", "wg", "in_proj", "dt_proj",
+                "shared_wi", "shared_wg", "dense_wi", "dense_wg",
+                "fused_proj"):
+        return guard((fsdp, tp))                       # column parallel
+    if leaf in ("wo", "wd", "out_proj", "shared_wd", "dense_wd"):
+        return guard((tp, fsdp))                       # row parallel
+    if leaf in ("bq", "bk", "bv"):
+        return guard((tp,))
+    if leaf == "router":
+        return guard((fsdp, None))                     # (D, E)
+    if leaf in ("e_wi", "e_wg"):                       # (E, D, F)
+        if _divisible(shape[0], ctx, tp):
+            return guard((tp, fsdp, None))
+        return guard((None, fsdp, tp))
+    if leaf == "e_wd":                                 # (E, F, D)
+        if _divisible(shape[0], ctx, tp):
+            return guard((tp, None, fsdp))
+        return guard((None, tp, fsdp))
+    if leaf in ("conv_w", "conv_b", "x_proj", "A_log", "ssm_D", "dt_bias",
+                "ssm_norm"):
+        return guard((tp,) + (None,) * (len(shape) - 1))  # (dI, ...)
+    # norms / scalars / biases: replicated
+    return P(*([None] * len(shape)))
+
+
+def param_specs(params: Any, ctx: ShardCtx, stacked_prefixes=("blocks",)) -> Any:
+    """Tree of PartitionSpec matching ``params``; arrays under a stacked
+    prefix (scan-over-layers) get a leading unsharded layer dim."""
+
+    def visit(path_keys, leaf):
+        path = "/".join(str(getattr(k, "key", k)) for k in path_keys)
+        shape = tuple(np.shape(leaf))
+        stacked = any(path.startswith(p) for p in stacked_prefixes)
+        if stacked:
+            spec = _rule(path, shape[1:], ctx)
+            return P(*((None,) + tuple(spec)))
+        return _rule(path, shape, ctx)
+
+    return jax.tree_util.tree_map_with_path(visit, params)

@@ -1,0 +1,34 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Selects the execution mode per backend: Mosaic lowering on TPU,
+interpreter on CPU (correctness validation — this container is CPU-only;
+TPU v5e is the target, DESIGN.md §2.3).
+"""
+from __future__ import annotations
+
+import jax
+
+from .flash_attention import flash_attention as _flash
+from .lsdnn_layer import lsdnn_layer as _lsdnn
+from .mamba_scan import mamba_scan as _mamba_scan
+
+__all__ = ["flash_attention", "mamba_scan", "lsdnn_layer", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128):
+    return _flash(q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+                  interpret=not on_tpu())
+
+
+def mamba_scan(dt, x, Bc, Cc, A, block_d: int = 512, chunk: int = 128):
+    return _mamba_scan(dt, x, Bc, Cc, A, block_d=block_d, chunk=chunk,
+                       interpret=not on_tpu())
+
+
+def lsdnn_layer(y, w, b, cap: float = 32.0, **blocks):
+    return _lsdnn(y, w, b, cap=cap, interpret=not on_tpu(), **blocks)

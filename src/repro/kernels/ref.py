@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each kernel's test sweeps shapes/dtypes and asserts allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_ref", "mamba_scan_ref", "lsdnn_layer_ref"]
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """q: (B,S,H,hd); k,v: (B,T,KV,hd); GQA causal softmax attention.
+    Returns (B,S,H,hd) in q.dtype; softmax in fp32."""
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    if causal:
+        mask = jnp.arange(S)[:, None] >= jnp.arange(T)[None, :]
+        s = jnp.where(mask[None, None, None], s, -2.0 ** 30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v)
+    return o.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def mamba_scan_ref(dt, A, Bc, Cc, x, h0=None):
+    """Sequential selective-scan oracle.
+
+    dt, x: (B,S,dI); A: (dI,N); Bc,Cc: (B,S,N). fp32 recurrence.
+    Returns y (B,S,dI) fp32 and final state (B,dI,N).
+    """
+    Bb, S, dI = x.shape
+    N = A.shape[1]
+    dt = dt.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    Bc = Bc.astype(jnp.float32)
+    Cc = Cc.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((Bb, dI, N), jnp.float32)
+
+    def step(h, inp):
+        dt_t, x_t, b_t, c_t = inp
+        a = jnp.exp(dt_t[..., None] * A)              # (B,dI,N)
+        h = a * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    hT, ys = jax.lax.scan(step, h0, (dt.swapaxes(0, 1), x.swapaxes(0, 1),
+                                     Bc.swapaxes(0, 1), Cc.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1), hT
+
+
+def lsdnn_layer_ref(y, w, b, cap: float = 32.0):
+    """One LSDNN inference layer (paper §5.3 workload, HPEC sparse-DNN
+    challenge semantics): Y' = clamp(relu(Y @ W + b), 0, cap)."""
+    z = jnp.einsum("tf,fg->tg", y, w,
+                   preferred_element_type=jnp.float32)
+    z = z + b.astype(jnp.float32)
+    return jnp.clip(z, 0.0, cap).astype(y.dtype)

@@ -1,0 +1,297 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# (test hook — must come after the two mandated lines above; jax is not
+# imported yet so the flag still applies at first init)
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this script:
+  1. builds the production mesh (16x16 single pod / 2x16x16 multi-pod)
+     out of 512 virtual host devices,
+  2. lowers the appropriate step (train_step for train shapes, prefill /
+     decode serve steps otherwise) with fully-sharded ShapeDtypeStruct
+     inputs (NO device allocation),
+  3. compiles, prints memory_analysis() (proves the per-device footprint)
+     and cost_analysis() (FLOPs / bytes for the roofline),
+  4. parses the post-SPMD optimized HLO for collective ops and sums their
+     shaped bytes (all-gather / all-reduce / reduce-scatter / all-to-all /
+     collective-permute),
+  5. derives the three roofline terms (EXPERIMENTS.md §Roofline) against
+     TPU v5e constants, and appends a JSON record to the results file.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2.5-32b --shape train_4k
+  python -m repro.launch.dryrun --all [--mesh single|multi|both]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from ..configs import ARCHS, SHAPES_BY_NAME, get_config, shape_applicable
+from ..distributed.hlo_analysis import analyze_hlo
+from ..train.train_step import (make_decode_step, make_prefill_step,
+                                train_input_specs)
+from .mesh import make_ctx, make_production_mesh
+
+# ------------------------------------------------------------ TPU v5e model
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (per-chip aggregate model)
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(f64|f32|f16|bf16|s64|u64|s32|u32|s16|u16|s8|u8|"
+                       r"pred|f8e4m3fn|f8e5m2|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str):
+    """Sum result-shape bytes of every collective op, by op type."""
+    out = {c: 0 for c in _COLLECTIVES}
+    counts = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # "%name = TYPE op-name(...)" — match the op right after the type
+        m = re.match(r"^%?[\w\.\-]+\s*=\s*(\(?[^=]*?)\s+"
+                     r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute)(-start)?\(", s)
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        if m.group(3) == "-start" or "-done(" in s:
+            pass
+        b = _shape_bytes(type_str)
+        out[op] += b
+        counts[op] += 1
+    return out, counts
+
+
+def apply_variant(cfg, variant: str):
+    """'opt' switches on the beyond-paper §Perf optimizations; baseline
+    keeps the paper-faithful first implementation."""
+    if variant != "opt":
+        return cfg
+    import dataclasses
+    pad = 0
+    if cfg.moe and (cfg.num_experts % 16):
+        pad = -cfg.num_experts % 16       # 60 -> 64 inert experts
+    # H2 (hoist the FSDP gather out of the microbatch loop) trades ~2 bytes
+    # per param of HBM for 16x less gather traffic — affordable below ~5B
+    # params on 16GB v5e (measured: +7.5GB at 33B, rejected there).
+    hoist = cfg.param_count() < 5e9
+    return dataclasses.replace(
+        cfg, attn_bwd_remat=True, hoist_weight_gather=hoist,
+        ssm_scan_constrain=True, moe_expert_pad=pad)
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool,
+               variant: str = ""):
+    cfg = apply_variant(get_config(arch), variant)
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = make_ctx(mesh)
+    if shape.kind == "train":
+        from ..optim.adamw import OptConfig
+        # >100B params: bf16 moments, or optimizer state alone exceeds HBM
+        opt = OptConfig(moment_dtype="bfloat16"
+                        if cfg.param_count() > 1e11 else "float32")
+        step, specs, _ = train_input_specs(cfg, ctx, shape, opt=opt)
+    elif shape.kind == "prefill":
+        step, specs, _ = make_prefill_step(cfg, ctx, shape)
+    else:
+        step, specs, _ = make_decode_step(cfg, ctx, shape)
+    return cfg, shape, mesh, ctx, step, specs
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N_active*D tokens (train: fwd+bwd; serve: 2*N per token)."""
+    n = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    if shape.kind == "train":
+        return 6.0 * n * tokens
+    return 2.0 * n * tokens
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             donate: bool = True, extra_tag: str = "",
+             variant: str = "") -> dict:
+    t0 = time.time()
+    cfg, shape, mesh, ctx, step, specs = build_cell(arch, shape_name,
+                                                    multi_pod, variant)
+    chips = int(np.prod(list(mesh.shape.values())))
+    donate_argnums = ()
+    if donate and shape.kind == "train":
+        donate_argnums = (0, 1)
+    elif donate and shape.kind == "decode":
+        donate_argnums = (1,)
+    jitted = jax.jit(step, donate_argnums=donate_argnums)
+    with mesh:
+        lowered = jitted.lower(*specs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    # trip-count-aware analysis (cost_analysis counts while bodies ONCE —
+    # verified; see distributed/hlo_analysis.py)
+    hc = analyze_hlo(hlo)
+    coll = hc.collective_bytes
+    coll_counts = hc.collective_counts
+    coll_total = hc.collective_total
+
+    flops_per_dev = float(hc.flops)
+    bytes_per_dev = float(hc.bytes_accessed)
+    flops_raw = float(cost.get("flops", 0.0))
+    bytes_raw = float(cost.get("bytes accessed", 0.0))
+    compute_s = flops_per_dev / PEAK_FLOPS
+    memory_s = bytes_per_dev / HBM_BW
+    collective_s = coll_total / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound_s = max(compute_s, memory_s, collective_s)
+    mf = model_flops(cfg, shape)
+    mf_per_dev = mf / chips
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "kind": shape.kind, "tag": extra_tag,
+        "ok": True,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes": (mem.argument_size_in_bytes
+                           + mem.temp_size_in_bytes),
+            "fits_16gb": (mem.argument_size_in_bytes
+                          + mem.temp_size_in_bytes) < 16e9,
+        },
+        "flops_per_dev": flops_per_dev,
+        "bytes_per_dev": bytes_per_dev,
+        "flops_per_dev_rawca": flops_raw,    # cost_analysis (loops once)
+        "bytes_per_dev_rawca": bytes_raw,
+        "unknown_trip_loops": hc.unknown_trip_loops,
+        "collective_bytes": coll, "collective_counts": coll_counts,
+        "collective_bytes_total": coll_total,
+        "roofline": {
+            **terms, "dominant": dominant,
+            "step_lower_bound_s": bound_s,
+            "model_flops_global": mf,
+            "model_flops_per_dev": mf_per_dev,
+            "useful_flops_frac": (mf_per_dev / flops_per_dev
+                                  if flops_per_dev else 0.0),
+            "roofline_frac": (mf_per_dev / PEAK_FLOPS) / bound_s
+            if bound_s else 0.0,
+        },
+    }
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--variant", default="", choices=["", "opt"])
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+    if args.variant and not args.tag:
+        args.tag = args.variant
+
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    done = set()
+    if args.skip_done and out.exists():
+        for line in out.read_text().splitlines():
+            try:
+                r = json.loads(line)
+                if r.get("ok"):
+                    done.add((r["arch"], r["shape"], r["mesh"], r.get("tag", "")))
+            except json.JSONDecodeError:
+                pass
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES_BY_NAME)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape_name in shapes:
+            ok, why = shape_applicable(cfg, SHAPES_BY_NAME[shape_name])
+            if not ok:
+                print(f"[skip] {arch} x {shape_name}: {why}", flush=True)
+                with out.open("a") as f:
+                    f.write(json.dumps({
+                        "arch": arch, "shape": shape_name, "mesh": "-",
+                        "ok": False, "skipped": True, "why": why,
+                        "tag": args.tag}) + "\n")
+                n_skip += 1
+                continue
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                if (arch, shape_name, mesh_name, args.tag) in done:
+                    print(f"[done] {arch} x {shape_name} x {mesh_name}",
+                          flush=True)
+                    continue
+                print(f"[run ] {arch} x {shape_name} x {mesh_name} ...",
+                      flush=True)
+                try:
+                    rec = run_cell(arch, shape_name, mp, extra_tag=args.tag,
+                                   variant=args.variant)
+                    r = rec["roofline"]
+                    print(f"       ok  compile={rec['compile_s']}s "
+                          f"peak={rec['memory']['peak_bytes']/1e9:.2f}GB "
+                          f"dom={r['dominant']} "
+                          f"roofline_frac={r['roofline_frac']:.3f}",
+                          flush=True)
+                    n_ok += 1
+                except Exception as e:  # noqa: BLE001
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "ok": False, "tag": args.tag,
+                           "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                    print(f"       FAIL {type(e).__name__}: {e}", flush=True)
+                    n_fail += 1
+                with out.open("a") as f:
+                    f.write(json.dumps(rec) + "\n")
+    print(f"dryrun complete: ok={n_ok} skip={n_skip} fail={n_fail}",
+          flush=True)
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

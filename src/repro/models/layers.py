@@ -1,0 +1,63 @@
+"""Shared layer primitives: norms, RoPE, positional embeddings, init."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+
+__all__ = ["rms_norm", "rope", "sinusoidal_positions", "dense_init",
+           "normal_init", "dtype_of"]
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def normal_init(key, shape, scale: float = 0.02, dtype=jnp.float32):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def dense_init(key, shape, dtype=jnp.float32):
+    """Fan-in scaled init (LeCun normal)."""
+    fan_in = shape[0] if len(shape) == 2 else int(np.prod(shape[:-1]))
+    scale = 1.0 / max(1.0, fan_in) ** 0.5
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def _rope_freqs(hd: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, hd, 2, dtype=np.float32) / hd))
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(_rope_freqs(hd, theta))                  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs    # (..,S,hd/2)
+    cos = jnp.cos(angles)[..., None, :]                          # (..,S,1,hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(positions: jnp.ndarray, d_model: int) -> jnp.ndarray:
+    """(..., S) int32 -> (..., S, D) sinusoidal embedding (musicgen)."""
+    half = d_model // 2
+    freqs = jnp.exp(-np.log(10_000.0) * jnp.arange(half, dtype=jnp.float32)
+                    / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

@@ -1,0 +1,474 @@
+"""Unified decoder LM covering all 10 assigned architectures.
+
+Families:
+  dense / audio / vlm : [ln -> GQA attention] + [ln -> (SwiGLU|GELU) MLP]
+  moe                 : attention + MoE FFN (optional shared experts /
+                        dense-residual path)
+  ssm                 : [ln -> Mamba1] blocks, attention-free
+  hybrid (zamba2)     : groups of `hybrid_attn_every` Mamba2 layers, each
+                        group followed by ONE SHARED transformer block whose
+                        weights are reused across groups, fed with
+                        concat([hidden, embeddings]) @ fused_proj
+
+Layer stacks are scan-over-layers (stacked params, `jax.lax.scan`) with
+optional remat — this keeps HLO size O(1) in depth, which is what makes the
+512-device dry-run compiles tractable.
+
+Entry points (all pure):
+  init_params / forward / loss_fn                      (training)
+  init_cache / prefill / decode_step                   (serving)
+Modality frontends are STUBS per the assignment: `frontend_embeds`
+(B, frontend_tokens, d_model) arrive precomputed (see launch.dryrun
+input_specs) and are prepended to the token embeddings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import constrain
+from .attention import attention, decode_attention, init_attention
+from .layers import dtype_of, normal_init, rms_norm, sinusoidal_positions
+from .mamba import init_mamba, init_mamba_state, mamba_forward, mamba_step
+from .mlp import init_mlp, mlp
+from .moe import init_moe, moe_layer
+
+__all__ = ["init_params", "forward", "loss_fn", "init_cache", "prefill",
+           "decode_step"]
+
+
+# ------------------------------------------------------------------ init
+def _init_block(key, cfg: ModelConfig) -> Dict[str, Any]:
+    """One repeated layer's params (flat dict: path-based sharding rules)."""
+    pdt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    p: Dict[str, Any] = {"ln1": jnp.ones((cfg.d_model,), pdt)}
+    if cfg.ssm:
+        p.update(init_mamba(ks[0], cfg))
+        return p
+    p.update(init_attention(ks[0], cfg))
+    p["ln2"] = jnp.ones((cfg.d_model,), pdt)
+    if cfg.moe:
+        p.update(init_moe(ks[1], cfg))
+    else:
+        p.update(init_mlp(ks[1], cfg))
+    return p
+
+
+def _init_shared_block(key, cfg: ModelConfig) -> Dict[str, Any]:
+    """zamba2 shared transformer block (reused across groups)."""
+    pdt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    from .layers import dense_init
+    p = {"fused_proj": dense_init(ks[0], (2 * cfg.d_model, cfg.d_model), pdt),
+         "ln1": jnp.ones((cfg.d_model,), pdt),
+         "ln2": jnp.ones((cfg.d_model,), pdt)}
+    p.update(init_attention(ks[1], cfg))
+    p.update(init_mlp(ks[2], cfg))
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    pdt = dtype_of(cfg.param_dtype)
+    k_embed, k_blocks, k_head, k_shared = jax.random.split(key, 4)
+    Vp = cfg.padded_vocab
+    params: Dict[str, Any] = {
+        "embed": normal_init(k_embed, (Vp, cfg.d_model), 0.02, pdt),
+        "final_norm": jnp.ones((cfg.d_model,), pdt),
+    }
+    L = cfg.num_layers
+    if cfg.hybrid_attn_every:
+        every = cfg.hybrid_attn_every
+        G, tail = L // every, L % every
+        kg = jax.random.split(k_blocks, G * every).reshape(G, every, 2)
+        params["gblocks"] = jax.vmap(jax.vmap(
+            lambda k: _init_block(k, cfg)))(kg)
+        if tail:
+            kt = jax.random.split(jax.random.fold_in(k_blocks, 1), tail)
+            params["tail_blocks"] = jax.vmap(
+                lambda k: _init_block(k, cfg))(kt)
+        params["shared_block"] = _init_shared_block(k_shared, cfg)
+    else:
+        kb = jax.random.split(k_blocks, L)
+        params["blocks"] = jax.vmap(lambda k: _init_block(k, cfg))(kb)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = normal_init(k_head, (cfg.d_model, Vp), 0.02, pdt)
+    return params
+
+
+# ------------------------------------------------------------------ blocks
+def _block_apply(p, x, cfg: ModelConfig, positions):
+    """One layer, full-sequence (train/prefill w/o cache). Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["ln1"], cfg.rms_eps)
+    if cfg.ssm:
+        x = x + mamba_forward(p, h, cfg)
+        return x, aux
+    x = x + attention(p, h, cfg, positions)
+    h2 = rms_norm(x, p["ln2"], cfg.rms_eps)
+    if cfg.moe:
+        y, aux = moe_layer(p, h2, cfg)
+        x = x + y
+    else:
+        x = x + mlp(p, h2, cfg)
+    return x, aux
+
+
+def _shared_block_apply(p, x, x0, cfg: ModelConfig, positions):
+    """zamba2 shared block: concat([x, x0]) -> proj -> attn -> mlp."""
+    cdt = dtype_of(cfg.compute_dtype)
+    h = jnp.concatenate([x, x0], axis=-1) @ p["fused_proj"].astype(cdt)
+    a = attention(p, rms_norm(h, p["ln1"], cfg.rms_eps), cfg, positions)
+    h = h + a
+    h = h + mlp(p, rms_norm(h, p["ln2"], cfg.rms_eps), cfg)
+    return x + h
+
+
+def _stack_scan(stacked, x, cfg, positions, remat: bool):
+    """lax.scan over a stacked layer dict; accumulates MoE aux."""
+
+    def body(carry, layer_p):
+        xx, aux = carry
+        xx = constrain(xx, "dp", None, None)
+        xx, a = _block_apply(layer_p, xx, cfg, positions)
+        return (xx, aux + a), None
+
+    fn = jax.checkpoint(body,
+                        policy=jax.checkpoint_policies.nothing_saveable) \
+        if remat else body
+    (x, aux), _ = jax.lax.scan(fn, (x, jnp.zeros((), jnp.float32)), stacked)
+    return x, aux
+
+
+# ------------------------------------------------------------------ forward
+def _embed(cfg: ModelConfig, params, tokens, frontend_embeds):
+    cdt = dtype_of(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    if cfg.frontend != "none":
+        if frontend_embeds is None:
+            raise ValueError(f"{cfg.name} requires frontend_embeds "
+                             f"({cfg.frontend} stub)")
+        x = jnp.concatenate([frontend_embeds.astype(cdt), x], axis=1)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if cfg.pos_emb == "sinusoidal":
+        x = x + sinusoidal_positions(positions, cfg.d_model).astype(cdt)
+    return x, positions
+
+
+def forward(cfg: ModelConfig, params, tokens,
+            frontend_embeds=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Teacher-forced logits over the full (frontend + token) sequence.
+    Returns (logits_f32 (B, S_total, padded_vocab), moe_aux_loss)."""
+    x, positions = _embed(cfg, params, tokens, frontend_embeds)
+    x = constrain(x, "dp", None, None)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.hybrid_attn_every:
+        x0 = x
+        sb = params["shared_block"]
+
+        def group(carry, gp):
+            xx, aux = carry
+            (xx, a), _ = jax.lax.scan(
+                lambda c, lp: (( _block_apply(lp, c[0], cfg, positions)[0],
+                                 c[1]), None),
+                (xx, aux), gp)
+            xx = _shared_block_apply(sb, xx, x0, cfg, positions)
+            return (xx, a), None
+
+        gfn = jax.checkpoint(group,
+                             policy=jax.checkpoint_policies.nothing_saveable)\
+            if cfg.remat else group
+        (x, aux), _ = jax.lax.scan(gfn, (x, aux), params["gblocks"])
+        if "tail_blocks" in params:
+            x, a2 = _stack_scan(params["tail_blocks"], x, cfg, positions,
+                                cfg.remat)
+            aux = aux + a2
+    else:
+        x, aux = _stack_scan(params["blocks"], x, cfg, positions, cfg.remat)
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        head.astype(dtype_of(cfg.compute_dtype)),
+                        preferred_element_type=jnp.float32)
+    logits = constrain(logits, "dp", None, "tp")
+    return logits, aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch) -> Tuple[jnp.ndarray, Dict]:
+    """Next-token cross-entropy (fp32, padded-vocab masked) + MoE aux."""
+    tokens = batch["tokens"]
+    fe = batch.get("frontend_embeds")
+    logits, aux = forward(cfg, params, tokens, fe)
+    F = cfg.frontend_tokens if cfg.frontend != "none" else 0
+    S = tokens.shape[1]
+    if F > 0:
+        pred = logits[:, F - 1:F + S - 1]     # predict t_0..t_{S-1}
+        labels = tokens
+    else:
+        pred = logits[:, :S - 1]
+        labels = tokens[:, 1:]
+    vmask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+    pred = jnp.where(vmask, pred, -1e30)
+    logz = jax.nn.logsumexp(pred, axis=-1)
+    # NOTE: gather(labels) over the vocab-sharded logits would force an
+    # all-gather of the full (B,S,V) tensor; the equality-mask reduction
+    # keeps the contraction sharded over `tp` (saved ~24GB/dev, see
+    # EXPERIMENTS.md §Perf iteration log).
+    onehot = labels[..., None] == jnp.arange(cfg.padded_vocab,
+                                             dtype=labels.dtype)
+    gold = jnp.sum(jnp.where(onehot, pred, 0.0), axis=-1)
+    ce = jnp.mean(logz - gold)
+    zloss = 1e-4 * jnp.mean(jnp.square(logz))
+    total = ce + zloss + cfg.router_aux_weight * aux
+    return total, {"ce": ce, "aux": aux, "zloss": zloss,
+                   "ppl_proxy": jnp.exp(jnp.minimum(ce, 20.0))}
+
+
+# ------------------------------------------------------------------ serving
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    """Decode cache pytree. Attention: (L, B, KV, S_max, hd) KV tensors,
+    sequence dim shardable over `sp`. SSM: per-layer (conv_buf, h)."""
+    cdt = dtype_of(cfg.compute_dtype)
+    L = cfg.num_layers
+    cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.hybrid_attn_every:
+        every = cfg.hybrid_attn_every
+        G, tail = L // every, L % every
+        conv, h = init_mamba_state(cfg, batch, cdt)
+        cache["g_ssm"] = (
+            jnp.tile(conv[None, None], (G, every) + (1,) * conv.ndim),
+            jnp.tile(h[None, None], (G, every) + (1,) * h.ndim))
+        if tail:
+            cache["tail_ssm"] = (
+                jnp.tile(conv[None], (tail,) + (1,) * conv.ndim),
+                jnp.tile(h[None], (tail,) + (1,) * h.ndim))
+        KV, hd = cfg.num_kv_heads, cfg.hd
+        cache["shared_k"] = jnp.zeros((G, batch, KV, max_len, hd), cdt)
+        cache["shared_v"] = jnp.zeros((G, batch, KV, max_len, hd), cdt)
+    elif cfg.ssm:
+        conv, h = init_mamba_state(cfg, batch, cdt)
+        cache["ssm"] = (
+            jnp.tile(conv[None], (L,) + (1,) * conv.ndim),
+            jnp.tile(h[None], (L,) + (1,) * h.ndim))
+    else:
+        KV, hd = cfg.num_kv_heads, cfg.hd
+        cache["k"] = jnp.zeros((L, batch, KV, max_len, hd), cdt)
+        cache["v"] = jnp.zeros((L, batch, KV, max_len, hd), cdt)
+    return cache
+
+
+def _block_decode(p, x1, cfg: ModelConfig, layer_cache, pos):
+    """One layer, one token. x1: (B, D). Returns (x1, new_layer_cache)."""
+    h = rms_norm(x1, p["ln1"], cfg.rms_eps)
+    if cfg.ssm:
+        y, st = mamba_step(p, h, cfg, layer_cache)
+        return x1 + y, st
+    ck, cv = layer_cache
+    y, ck, cv = decode_attention(p, h[:, None, :], cfg, ck, cv, pos)
+    x1 = x1 + y[:, 0]
+    h2 = rms_norm(x1, p["ln2"], cfg.rms_eps)
+    if cfg.moe:
+        y2, _ = moe_layer(p, h2[:, None, :], cfg)
+        x1 = x1 + y2[:, 0]
+    else:
+        x1 = x1 + mlp(p, h2[:, None, :], cfg)[:, 0]
+    return x1, (ck, cv)
+
+
+def _shared_block_decode(p, x1, x0, cfg, ck, cv, pos):
+    cdt = dtype_of(cfg.compute_dtype)
+    h = jnp.concatenate([x1, x0], axis=-1) @ p["fused_proj"].astype(cdt)
+    a, ck, cv = decode_attention(
+        p, rms_norm(h, p["ln1"], cfg.rms_eps)[:, None, :], cfg, ck, cv, pos)
+    h = h + a[:, 0]
+    h = h + mlp(p, rms_norm(h, p["ln2"], cfg.rms_eps)[:, None, :],
+                cfg)[:, 0]
+    return x1 + h, ck, cv
+
+
+def decode_step(cfg: ModelConfig, params, cache, token
+                ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """One decode step. token: (B,) int32 current input token.
+    Returns (logits (B, padded_vocab) f32, updated cache)."""
+    cdt = dtype_of(cfg.compute_dtype)
+    pos = cache["pos"]
+    x1 = jnp.take(params["embed"], token, axis=0).astype(cdt)
+    if cfg.pos_emb == "sinusoidal":
+        x1 = x1 + sinusoidal_positions(pos[None], cfg.d_model
+                                       ).astype(cdt)[0]
+    new_cache = dict(cache)
+    if cfg.hybrid_attn_every:
+        x0 = x1
+        sb = params["shared_block"]
+
+        def group(carry, xs):
+            xx = carry
+            gp, g_ssm, ck, cv = xs
+
+            def layer(c, l_xs):
+                lp, st = l_xs
+                c, st = _block_decode(lp, c, cfg, st, pos)
+                return c, st
+
+            xx, g_ssm = jax.lax.scan(layer, xx, (gp, g_ssm))
+            xx, ck, cv = _shared_block_decode(sb, xx, x0, cfg, ck, cv, pos)
+            return xx, (g_ssm, ck, cv)
+
+        x1, (g_ssm, sk, sv) = jax.lax.scan(
+            group, x1, (params["gblocks"], cache["g_ssm"],
+                        cache["shared_k"], cache["shared_v"]))
+        new_cache["g_ssm"], new_cache["shared_k"], new_cache["shared_v"] = \
+            g_ssm, sk, sv
+        if "tail_blocks" in params:
+            def layer(c, l_xs):
+                lp, st = l_xs
+                return _block_decode(lp, c, cfg, st, pos)
+
+            x1, tail = jax.lax.scan(layer, x1,
+                                    (params["tail_blocks"],
+                                     cache["tail_ssm"]))
+            new_cache["tail_ssm"] = tail
+    elif cfg.ssm:
+        def layer(c, l_xs):
+            lp, st = l_xs
+            return _block_decode(lp, c, cfg, st, pos)
+
+        x1, ssm = jax.lax.scan(layer, x1, (params["blocks"], cache["ssm"]))
+        new_cache["ssm"] = ssm
+    else:
+        def layer(c, l_xs):
+            lp, ck, cv = l_xs
+            c, (ck, cv) = _block_decode(lp, c, cfg, (ck, cv), pos)
+            return c, (ck, cv)
+
+        x1, (k, v) = jax.lax.scan(layer, x1,
+                                  (params["blocks"], cache["k"], cache["v"]))
+        new_cache["k"], new_cache["v"] = k, v
+    x1 = rms_norm(x1, params["final_norm"], cfg.rms_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bd,dv->bv", x1, head.astype(cdt),
+                        preferred_element_type=jnp.float32)
+    new_cache["pos"] = pos + 1
+    return logits, new_cache
+
+
+def prefill(cfg: ModelConfig, params, tokens, max_len: int = 0,
+            frontend_embeds=None):
+    """Process a prompt, producing last-position logits + a primed cache.
+
+    For attention archs the KV cache is computed per layer; for SSM archs
+    the (conv, h) states are produced by the chunked scans. max_len=0 sizes
+    the cache exactly at the prompt length (the dry-run prefill cell).
+    """
+    B, S = tokens.shape[:2]
+    F = cfg.frontend_tokens if cfg.frontend != "none" else 0
+    total = S + F
+    max_len = max(max_len, total)
+    x, positions = _embed(cfg, params, tokens, frontend_embeds)
+    cache = init_cache(cfg, B, max_len)
+    cdt = dtype_of(cfg.compute_dtype)
+
+    if cfg.hybrid_attn_every:
+        x0 = x
+        sb = params["shared_block"]
+        g_conv, g_h = [], []
+        sks, svs = [], []
+        G = cfg.num_layers // cfg.hybrid_attn_every
+        gp_all = params["gblocks"]
+        for g in range(G):  # python loop: G is small (<=6)
+            gp = jax.tree_util.tree_map(lambda t: t[g], gp_all)
+            convs, hs = [], []
+            for l in range(cfg.hybrid_attn_every):
+                lp = jax.tree_util.tree_map(lambda t: t[l], gp)
+                h = rms_norm(x, lp["ln1"], cfg.rms_eps)
+                y, (cv, hh) = mamba_forward(lp, h, cfg, return_state=True)
+                x = x + y
+                convs.append(cv)
+                hs.append(hh)
+            # shared block with kv capture
+            hcat = jnp.concatenate([x, x0], axis=-1) \
+                @ sb["fused_proj"].astype(cdt)
+            a, (k, v) = attention(sb, rms_norm(hcat, sb["ln1"], cfg.rms_eps),
+                                  cfg, positions, return_kv=True)
+            hcat = hcat + a
+            hcat = hcat + mlp(sb, rms_norm(hcat, sb["ln2"], cfg.rms_eps), cfg)
+            x = x + hcat
+            k = k.transpose(0, 2, 1, 3)  # (B,KV,S,hd)
+            v = v.transpose(0, 2, 1, 3)
+            pad = max_len - total
+            if pad:
+                k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            sks.append(constrain(k.astype(cdt), "dp", None, "sp", None))
+            svs.append(constrain(v.astype(cdt), "dp", None, "sp", None))
+            g_conv.append(jnp.stack(convs))
+            g_h.append(jnp.stack(hs))
+        cache["g_ssm"] = (jnp.stack(g_conv).astype(cdt), jnp.stack(g_h))
+        cache["shared_k"] = jnp.stack(sks)
+        cache["shared_v"] = jnp.stack(svs)
+        if "tail_blocks" in params:
+            convs, hs = [], []
+            for l in range(cfg.num_layers % cfg.hybrid_attn_every):
+                lp = jax.tree_util.tree_map(lambda t: t[l],
+                                            params["tail_blocks"])
+                h = rms_norm(x, lp["ln1"], cfg.rms_eps)
+                y, (cv, hh) = mamba_forward(lp, h, cfg, return_state=True)
+                x = x + y
+                convs.append(cv)
+                hs.append(hh)
+            cache["tail_ssm"] = (jnp.stack(convs).astype(cdt),
+                                 jnp.stack(hs))
+    elif cfg.ssm:
+        def body(carry, lp):
+            xx = carry
+            h = rms_norm(xx, lp["ln1"], cfg.rms_eps)
+            y, (conv, hh) = mamba_forward(lp, h, cfg, return_state=True)
+            return xx + y, (conv.astype(cdt), hh)
+
+        fn = jax.checkpoint(body,
+                            policy=jax.checkpoint_policies.nothing_saveable)\
+            if cfg.remat else body
+        x, ssm = jax.lax.scan(fn, x, params["blocks"])
+        cache["ssm"] = ssm
+    else:
+        pad = max_len - total
+
+        def body(carry, lp):
+            xx = carry
+            h = rms_norm(xx, lp["ln1"], cfg.rms_eps)
+            y, (k, v) = attention(lp, h, cfg, positions, return_kv=True)
+            xx = xx + y
+            h2 = rms_norm(xx, lp["ln2"], cfg.rms_eps)
+            if cfg.moe:
+                y2, _ = moe_layer(lp, h2, cfg)
+                xx = xx + y2
+            else:
+                xx = xx + mlp(lp, h2, cfg)
+            k = k.transpose(0, 2, 1, 3)
+            v = v.transpose(0, 2, 1, 3)
+            if pad:
+                k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            # sequence-parallel cache layout (matches decode's shardings;
+            # without this the (L,B,KV,S,hd) output replicates S: ~26GB/dev
+            # at 32k — §Perf H6)
+            k = constrain(k.astype(cdt), "dp", None, "sp", None)
+            v = constrain(v.astype(cdt), "dp", None, "sp", None)
+            return xx, (k, v)
+
+        fn = jax.checkpoint(body,
+                            policy=jax.checkpoint_policies.nothing_saveable)\
+            if cfg.remat else body
+        x, (k, v) = jax.lax.scan(fn, x, params["blocks"])
+        cache["k"], cache["v"] = k, v
+    x = rms_norm(x[:, -1], params["final_norm"], cfg.rms_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bd,dv->bv", x, head.astype(cdt),
+                        preferred_element_type=jnp.float32)
+    cache["pos"] = jnp.asarray(total, jnp.int32)
+    return logits, cache

@@ -1,0 +1,136 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-based dispatch.
+
+Dispatch uses the sort-free Switch-style ranking (cumsum of expert one-hots)
+to place each (token, expert) assignment into an (E, C) slot table, then a
+gather -> batched expert einsum -> scatter-add combine. This formulation:
+
+* never materializes the (T, E, C) dispatch tensor (memory O(E*C*D));
+* shards the expert dim over the ``tp`` mesh axis (expert parallelism) when
+  E divides the axis, otherwise shards the expert hidden dim;
+* drops tokens over capacity (capacity_factor), standard for TPU MoE.
+
+Variants: qwen2-moe adds 4 shared experts (one fused SwiGLU of hidden 5632
+with a sigmoid gate); arctic adds a dense FFN *in parallel* with the MoE
+(dense-MoE hybrid residual).
+
+The router's load-balancing auxiliary loss (Switch-style) is returned so the
+train step can add ``router_aux_weight * aux``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import constrain
+from .layers import dense_init, dtype_of, normal_init
+from .mlp import init_mlp, mlp
+
+__all__ = ["init_moe", "moe_layer"]
+
+
+def init_moe(key, cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    D, F = cfg.d_model, cfg.moe_d_ff
+    # §Perf H3: optional inert experts appended so E divides the
+    # expert-parallel axis; their router logits are masked to -inf in
+    # moe_layer, so the computed function is EXACTLY the 60-expert model.
+    E = cfg.num_experts + cfg.moe_expert_pad
+    pdt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": normal_init(ks[0], (D, E), 0.02, jnp.float32),
+        "e_wi": dense_init(ks[1], (E, D, F), pdt),
+        "e_wg": dense_init(ks[2], (E, D, F), pdt),
+        "e_wd": dense_init(ks[3], (E, F, D), pdt),
+    }
+    if cfg.shared_expert_d_ff:
+        p.update(init_mlp(ks[4], cfg, cfg.shared_expert_d_ff, prefix="shared_"))
+        p["shared_gate"] = jnp.zeros((D, 1), pdt)
+    if cfg.dense_residual:
+        p.update(init_mlp(ks[5], cfg, cfg.d_ff, prefix="dense_"))
+    return p
+
+
+def _capacity(T: int, cfg: ModelConfig) -> int:
+    c = int(T * cfg.num_experts_per_tok * cfg.capacity_factor
+            / cfg.num_experts) + 1
+    return max(8, -(-c // 8) * 8)  # round up to 8 for TPU-friendly tiling
+
+
+def moe_layer(p, x, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (y, aux_loss)."""
+    B, S, D = x.shape
+    E = cfg.num_experts + cfg.moe_expert_pad   # padded rows are inert
+    E_real, K = cfg.num_experts, cfg.num_experts_per_tok
+    cdt = dtype_of(cfg.compute_dtype)
+    xt = x.reshape(B * S, D)
+    T = B * S
+    C = _capacity(T, cfg)
+
+    logits = (xt.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    if cfg.moe_expert_pad:
+        logits = jnp.where(jnp.arange(E) < E_real, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)                       # (T, E)
+    gate, eidx = jax.lax.top_k(probs, K)                          # (T, K)
+    if cfg.norm_topk_prob:
+        gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    # Switch-style aux loss: E * sum_e(frac_tokens_e * mean_prob_e)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(eidx, E, dtype=jnp.float32), axis=1), axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    # ---- rank assignments into (E, C) slots -------------------------------
+    flat_e = eidx.reshape(-1)                                     # (T*K,)
+    flat_g = gate.reshape(-1).astype(jnp.float32)
+    flat_t = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[:, None],
+                              (T, K)).reshape(-1)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)           # (T*K, E)
+    pos = jnp.cumsum(onehot, axis=0) - onehot                     # excl. rank
+    mypos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = mypos < C
+    slot_e = jnp.where(keep, flat_e, E)            # overflow -> dropped row
+    slot_c = jnp.where(keep, mypos, 0)
+    slot_tok = jnp.full((E + 1, C), T, dtype=jnp.int32)
+    slot_tok = slot_tok.at[slot_e, slot_c].set(
+        jnp.where(keep, flat_t, T), mode="drop")[:E]              # (E, C)
+    slot_gate = jnp.zeros((E + 1, C), dtype=jnp.float32)
+    slot_gate = slot_gate.at[slot_e, slot_c].set(
+        jnp.where(keep, flat_g, 0.0), mode="drop")[:E]            # (E, C)
+
+    # ---- gather -> expert FFN -> combine ----------------------------------
+    xpad = jnp.concatenate(
+        [xt, jnp.zeros((1, D), xt.dtype)], axis=0)                # T sentinel
+    xe = xpad[slot_tok].astype(cdt)                               # (E, C, D)
+    xe = constrain(xe, "tp" if E % _tp_size() == 0 else None, None, None)
+    wi = p["e_wi"].astype(cdt)
+    wg = p["e_wg"].astype(cdt)
+    wd = p["e_wd"].astype(cdt)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, wg)) \
+        * jnp.einsum("ecd,edf->ecf", xe, wi)
+    eo = jnp.einsum("ecf,efd->ecd", h, wd)                        # (E, C, D)
+    eo = eo * slot_gate[..., None].astype(eo.dtype)
+    out = jnp.zeros((T + 1, D), cdt).at[slot_tok.reshape(-1)].add(
+        eo.reshape(E * C, D))[:T]
+    y = out.reshape(B, S, D)
+    y = constrain(y, "dp", None, None)
+
+    if cfg.shared_expert_d_ff:
+        shared = mlp(p, x.astype(cdt), cfg, prefix="shared_")
+        sg = jax.nn.sigmoid(
+            x.astype(jnp.float32) @ p["shared_gate"].astype(jnp.float32))
+        y = y + shared * sg.astype(cdt)
+    if cfg.dense_residual:
+        y = y + mlp(p, x.astype(cdt), cfg, prefix="dense_")
+    return y, aux
+
+
+def _tp_size() -> int:
+    from ..distributed.sharding import current_ctx
+    ctx = current_ctx()
+    if ctx is None or ctx.mesh is None or ctx.tp is None:
+        return 1 << 30  # never divides: unsharded expert dim
+    return ctx.mesh.shape[ctx.tp]

@@ -1,0 +1,2 @@
+from .adamw import OptConfig, adamw_update, init_opt_state, lr_at
+from .compress import compress_grads, init_error_state

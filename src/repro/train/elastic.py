@@ -1,0 +1,36 @@
+"""Elastic scaling: reshard a training state onto a different mesh.
+
+Checkpoints store unsharded (gathered) leaves, so scaling the
+data-parallel degree between runs is a pure placement problem: rebuild the
+sharding tree for the NEW ShardCtx and device_put every leaf. Used by the
+trainer on restore and tested across 1<->2<->4 device meshes.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import ShardCtx
+from .train_step import opt_shardings, param_shardings
+
+__all__ = ["reshard_state"]
+
+
+def reshard_state(cfg: ModelConfig, state: Any, ctx: ShardCtx) -> Any:
+    """state: {"params":..., "opt":...} -> same tree placed per ctx."""
+    pshard = param_shardings(cfg, ctx)
+    oshard = opt_shardings(cfg, ctx, pshard)
+
+    def place(tree, shard):
+        def put(x, s):
+            return jax.device_put(x, s) if s is not None else x
+        return jax.tree_util.tree_map(put, tree, shard)
+
+    out = dict(state)
+    out["params"] = place(state["params"], pshard)
+    if "opt" in state:
+        out["opt"] = place(state["opt"],
+                           {k: oshard[k] for k in state["opt"].keys()})
+    return out

@@ -1,0 +1,340 @@
+"""Sharded train / prefill / decode step builders.
+
+Every builder returns ``(fn, example_inputs)`` where the example inputs are
+ShapeDtypeStructs that carry their NamedShardings — so the same object
+drives both the multi-pod dry-run (``jax.jit(fn).lower(*examples)``) and
+real execution (arrays placed with the same shardings).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeSpec
+from ..distributed.sharding import (ShardCtx, logical_to_spec, param_specs,
+                                    use_shard_ctx)
+from ..models import lm
+from ..optim.adamw import OptConfig, adamw_update, init_opt_state
+from ..optim.compress import compress_grads, init_error_state
+
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
+           "train_input_specs", "sharded_zeros", "param_shardings",
+           "opt_shardings", "cache_shardings", "batch_shardings"]
+
+
+# --------------------------------------------------------------- shardings
+def _ns(ctx: ShardCtx, spec) -> Optional[NamedSharding]:
+    if ctx.mesh is None:
+        return None
+    return NamedSharding(ctx.mesh, spec)
+
+
+def param_shardings(cfg: ModelConfig, ctx: ShardCtx):
+    shapes = jax.eval_shape(lambda k: lm.init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    specs = param_specs(shapes, ctx,
+                        stacked_prefixes=("blocks", "tail_blocks"))
+    # gblocks (zamba2) have TWO leading stacked dims (group, layer)
+    if "gblocks" in shapes:
+        def gb(path_keys, leaf):
+            from ..distributed.sharding import _rule
+            import numpy as np
+            path = "gblocks/" + "/".join(
+                str(getattr(k, "key", k)) for k in path_keys)
+            spec = _rule(path, tuple(np.shape(leaf))[2:], ctx)
+            return P(*((None, None) + tuple(spec)))
+        specs["gblocks"] = jax.tree_util.tree_map_with_path(
+            gb, shapes["gblocks"])
+    if ctx.mesh is None:
+        return jax.tree_util.tree_map(lambda s: None, specs)
+    return jax.tree_util.tree_map(lambda s: _ns(ctx, s), specs,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_shardings(cfg: ModelConfig, ctx: ShardCtx, pshard):
+    return {"m": pshard, "v": pshard, "count": _ns(ctx, P())}
+
+
+def batch_shardings(cfg: ModelConfig, ctx: ShardCtx) -> Dict[str, Any]:
+    b = {"tokens": _ns(ctx, logical_to_spec(ctx, ("dp", None)))}
+    if cfg.frontend != "none":
+        b["frontend_embeds"] = _ns(
+            ctx, logical_to_spec(ctx, ("dp", None, None)))
+    return b
+
+
+def _dim_ok(n: int, ctx: ShardCtx, logical: str) -> bool:
+    return ctx.mesh is not None and n % ctx.axis_size(logical) == 0 and n > 1
+
+
+def cache_shardings(cfg: ModelConfig, ctx: ShardCtx, batch: int,
+                    cache_shapes) -> Any:
+    """Sharding tree for a decode cache. Batch goes to dp when divisible;
+    otherwise (B=1 long-context serving) the sequence / inner dims are
+    sharded over BOTH axes (sequence-parallel cache, flash-decode style)."""
+    b_sharded = _dim_ok(batch, ctx, "dp")
+    both = ("data", "model") if ctx.mesh is not None and \
+        len(ctx.mesh.axis_names) >= 2 else None
+    if ctx.mesh is not None and "pod" in ctx.mesh.axis_names:
+        both = ("data", "model")
+
+    def _key_name(k):
+        if hasattr(k, "key"):
+            return str(k.key)
+        if hasattr(k, "idx"):
+            return str(k.idx)
+        return str(k)
+
+    def spec_for(path_keys, leaf):
+        path = "/".join(_key_name(k) for k in path_keys)
+        head = path.split("/", 1)[0]
+        shape = leaf.shape
+        nd = len(shape)
+        if head in ("k", "v", "shared_k", "shared_v"):
+            # (L?, B, KV, S, hd): sequence-parallel cache over sp
+            lead = nd - 4
+            spec = [None] * lead
+            spec.append("dp" if b_sharded else None)
+            spec.append(None)
+            spec.append("sp" if b_sharded else (both or "sp"))
+            spec.append(None)
+            return P(*[_resolve(ctx, s) for s in spec])
+        if "ssm" in head:
+            conv_like = nd >= 2 and shape[-2] == cfg.ssm_conv - 1
+            if conv_like:  # (..., B, K-1, C): shard channels over tp
+                lead = nd - 3
+                spec = [None] * lead + [
+                    "dp" if b_sharded else None, None,
+                    "tp" if _dim_ok(shape[-1], ctx, "tp") else None]
+                return P(*[_resolve(ctx, s) for s in spec])
+            # states (..., B, dI|nh, ...): shard the inner dim
+            lead = nd - 3 if nd == 4 else nd - 4  # m1:(B,dI,N) m2:(B,nh,hd,N)
+            lead = max(lead, 0)
+            inner = shape[lead + 1]
+            ax = None
+            if not b_sharded and both is not None and \
+                    inner % _both_size(ctx) == 0:
+                ax = both
+            elif _dim_ok(inner, ctx, "tp"):
+                ax = "tp"
+            spec = [None] * lead + ["dp" if b_sharded else None, ax] \
+                + [None] * (nd - lead - 2)
+            return P(*[_resolve(ctx, s) for s in spec])
+        return P(*([None] * nd))
+
+    specs = jax.tree_util.tree_map_with_path(spec_for, cache_shapes)
+    return jax.tree_util.tree_map(lambda s: _ns(ctx, s), specs,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def _resolve(ctx: ShardCtx, s):
+    if s is None or isinstance(s, tuple):
+        return s
+    if s == "dp":
+        return ctx.dp if len(ctx.dp) > 1 else ctx.dp[0]
+    return getattr(ctx, s, s) if s in ("tp", "sp", "fsdp") else s
+
+
+def _both_size(ctx: ShardCtx) -> int:
+    return ctx.mesh.shape["data"] * ctx.mesh.shape["model"]
+
+
+def sharded_zeros(shapes, shardings):
+    """Instantiate concrete zero arrays matching (shape, sharding) trees."""
+    def mk(s, sh):
+        z = jnp.zeros(s.shape, s.dtype)
+        return jax.device_put(z, sh) if sh is not None else z
+    return jax.tree_util.tree_map(mk, shapes, shardings)
+
+
+# --------------------------------------------------------------- train step
+def make_train_step(cfg: ModelConfig, ctx: ShardCtx,
+                    opt: Optional[OptConfig] = None,
+                    compress: bool = False,
+                    microbatches: Optional[int] = None,
+                    accum_dtype=None):
+    """Returns (train_step, (param_sds, opt_sds, batch_sds)). The function
+    signature is (params, opt_state, batch) -> (params, opt_state, metrics).
+
+    microbatches: gradient-accumulation factor. None => auto: one sequence
+    per device per microbatch (keeps the remat residual stack at
+    O(L * seq * d_model) regardless of global batch). 1 disables.
+    accum_dtype: gradient accumulator dtype; None => fp32 unless the model
+    is >100B params (where the fp32 accumulator alone is ~7.5GB/dev).
+    """
+    opt = opt or OptConfig()
+    if accum_dtype is None:
+        accum_dtype = jnp.bfloat16 if cfg.param_count() > 1e11 \
+            else jnp.float32
+
+    def _grads(params, batch):
+        return jax.value_and_grad(
+            lambda p: lm.loss_fn(cfg, p, batch), has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        with use_shard_ctx(ctx):
+            B = batch["tokens"].shape[0]
+            mb = microbatches
+            if mb is None:
+                dp = ctx.axis_size("dp")
+                mb = max(1, B // dp)  # 1 sequence / device / microbatch
+            while B % mb:
+                mb -= 1
+            if mb <= 1:
+                (loss, metrics), grads = _grads(params, batch)
+            else:
+                split = jax.tree_util.tree_map(
+                    lambda t: t.reshape((mb, B // mb) + t.shape[1:]), batch)
+
+                fwd_params = params
+                if cfg.hoist_weight_gather and ctx.mesh is not None:
+                    # §Perf H2: materialize the FSDP all-gather ONCE per
+                    # step (bf16, model-axis sharding only) instead of once
+                    # per microbatch; grads transpose back to reduce-scatter
+                    import dataclasses as _dc
+                    gctx = _dc.replace(ctx, fsdp=None)
+                    gshard = param_shardings(cfg, gctx)  # handles gblocks
+
+                    def gather(p, ns):
+                        pc = p.astype(jnp.bfloat16) if p.ndim >= 2 else p
+                        if ns is None:
+                            return pc
+                        return jax.lax.with_sharding_constraint(pc, ns)
+                    fwd_params = jax.tree_util.tree_map(
+                        gather, params, gshard)
+
+                def micro(acc, mbatch):
+                    mbatch = jax.tree_util.tree_map(
+                        lambda t: constrain_batch(t), mbatch)
+                    (l, met), g = _grads(fwd_params, mbatch)
+                    acc = jax.tree_util.tree_map(
+                        lambda a, gi: a + gi.astype(acc_dt) / mb,
+                        acc, g)
+                    return acc, dict(met, loss=l)
+
+                def constrain_batch(t):
+                    from ..distributed.sharding import constrain
+                    return constrain(t, *( ("dp",) + (None,) * (t.ndim - 1)))
+
+                acc_dt = accum_dtype
+                zeros = jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, acc_dt), params)
+                grads, mets = jax.lax.scan(micro, zeros, split)
+                metrics = jax.tree_util.tree_map(
+                    lambda m: jnp.mean(m, axis=0), mets)
+                loss = metrics.pop("loss")
+            if compress:
+                grads, new_err = compress_grads(grads, opt_state["err"])
+            params, new_opt, om = adamw_update(
+                params, grads,
+                {k: opt_state[k] for k in ("m", "v", "count")}, opt)
+            if compress:
+                new_opt["err"] = new_err
+            metrics = dict(metrics, loss=loss, **om)
+            return params, new_opt, metrics
+
+    pshard = param_shardings(cfg, ctx)
+    oshard = opt_shardings(cfg, ctx, pshard)
+    if compress:
+        oshard["err"] = pshard
+    bshard = batch_shardings(cfg, ctx)
+
+    param_sds = _sds_tree(
+        jax.eval_shape(lambda k: lm.init_params(cfg, k),
+                       jax.random.PRNGKey(0)), pshard)
+
+    def _opt_shapes(p):
+        st = init_opt_state(p, opt)
+        if compress:
+            st["err"] = init_error_state(p)
+        return st
+
+    opt_sds = _sds_tree(jax.eval_shape(_opt_shapes, param_sds), oshard)
+    batch_sds = _sds_tree(train_batch_shapes(cfg,
+                                             *_dummy_bs(cfg)), bshard)
+    return train_step, (param_sds, opt_sds, batch_sds), (pshard, oshard)
+
+
+def _dummy_bs(cfg):
+    return 8, 128
+
+
+def train_batch_shapes(cfg: ModelConfig, batch: int, seq: int):
+    shapes = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+    if cfg.frontend != "none":
+        shapes["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
+    return shapes
+
+
+def _sds_tree(shapes, shardings):
+    def mk(s, sh):
+        if sh is None:
+            return jax.ShapeDtypeStruct(s.shape, s.dtype)
+        return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh)
+    return jax.tree_util.tree_map(mk, shapes, shardings)
+
+
+def train_input_specs(cfg: ModelConfig, ctx: ShardCtx, shape: ShapeSpec,
+                      opt: Optional[OptConfig] = None,
+                      compress: bool = False):
+    """ShapeDtypeStruct stand-ins for every train_step input (assignment:
+    weak-type-correct, shardable, no device allocation)."""
+    step, (p_sds, o_sds, _), shards = make_train_step(cfg, ctx, opt, compress)
+    b_sds = _sds_tree(
+        train_batch_shapes(cfg, shape.global_batch, shape.seq_len),
+        batch_shardings(cfg, ctx))
+    return step, (p_sds, o_sds, b_sds), shards
+
+
+# --------------------------------------------------------------- serve steps
+def make_prefill_step(cfg: ModelConfig, ctx: ShardCtx, shape: ShapeSpec):
+    def prefill_step(params, batch):
+        with use_shard_ctx(ctx):
+            fe = batch.get("frontend_embeds")
+            logits, cache = lm.prefill(cfg, params, batch["tokens"],
+                                       frontend_embeds=fe)
+            return logits, cache
+
+    pshard = param_shardings(cfg, ctx)
+    p_sds = _sds_tree(
+        jax.eval_shape(lambda k: lm.init_params(cfg, k),
+                       jax.random.PRNGKey(0)), pshard)
+    b_sds = _sds_tree(
+        train_batch_shapes(cfg, shape.global_batch, shape.seq_len),
+        batch_shardings(cfg, ctx))
+    return prefill_step, (p_sds, b_sds), pshard
+
+
+def make_decode_step(cfg: ModelConfig, ctx: ShardCtx, shape: ShapeSpec,
+                     serve_tp_only: bool = False):
+    """serve_step: ONE new token against a seq_len KV cache / SSM state.
+
+    serve_tp_only drops the FSDP axis from the parameter shardings
+    (weights resident model-sharded instead of re-gathered per layer —
+    §Perf serving iteration; costs params_bytes/tp_size residency)."""
+    B = shape.global_batch
+
+    def decode(params, cache, token):
+        with use_shard_ctx(ctx):
+            return lm.decode_step(cfg, params, cache, token)
+
+    import dataclasses as _dc
+    pctx = _dc.replace(ctx, fsdp=None) if serve_tp_only else ctx
+    pshard = param_shardings(cfg, pctx)
+    p_sds = _sds_tree(
+        jax.eval_shape(lambda k: lm.init_params(cfg, k),
+                       jax.random.PRNGKey(0)), pshard)
+    cache_shapes = jax.eval_shape(
+        lambda: lm.init_cache(cfg, B, shape.seq_len))
+    cshard = cache_shardings(cfg, ctx, B, cache_shapes)
+    c_sds = _sds_tree(cache_shapes, cshard)
+    t_sds = jax.ShapeDtypeStruct(
+        (B,), jnp.int32,
+        sharding=_ns(ctx, logical_to_spec(ctx, ("dp",)))
+        if _dim_ok(B, ctx, "dp") else _ns(ctx, P(None)))
+    return decode, (p_sds, c_sds, t_sds), (pshard, cshard)

@@ -1,0 +1,199 @@
+"""Trainer-as-taskflow: the production training loop expressed as the
+paper's conditional task graph.
+
+Graph (one cyclic TDG — no unrolling across steps, paper §3.4):
+
+    init ─> prefetch(host) ─> step(accel) ─> ckpt?(cond) ─┬─> save(host,
+                 ^                                        │   detached)
+                 │                                        v
+                 └──────────────(0) loop(cond) <──────────┘
+                                   │(1)
+                                   v
+                                  done
+
+* ``prefetch`` tops up the bounded batch queue (host domain) and spawns a
+  *detached* subflow that prefetches further ahead, overlapping with the
+  device step via heterogeneous work stealing;
+* ``step`` is a DEVICE task: one compiled XLA program (cudaFlow analogue);
+* ``ckpt?`` is a condition task that routes through an async checkpoint
+  branch every ``ckpt_every`` steps — the save runs as a host task off the
+  critical path (snapshot first, write detached);
+* ``loop`` is the condition task closing the cycle.
+
+Fault tolerance: a device-step failure cancels the topology; ``run()``
+restores the latest complete checkpoint and resubmits the graph
+(``max_restarts``). ``fail_at_step`` injects a crash for the tests.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from ..core import ACCEL, HOST, Executor, TaskError, Taskflow
+from ..configs.base import ModelConfig
+from ..data.pipeline import DataConfig, Prefetcher, SyntheticLM
+from ..distributed.sharding import ShardCtx
+from ..models import lm
+from ..optim.adamw import OptConfig, init_opt_state
+from .checkpoint import CheckpointManager
+from .train_step import make_train_step
+
+__all__ = ["TrainerConfig", "Trainer"]
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    log_every: int = 10
+    prefetch_depth: int = 2
+    max_restarts: int = 2
+    microbatches: Optional[int] = 1
+    fail_at_step: Optional[int] = None     # failure injection (tests)
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tc: TrainerConfig,
+                 batch: int, seq_len: int,
+                 opt: Optional[OptConfig] = None,
+                 ctx: Optional[ShardCtx] = None,
+                 ckpt_dir: Optional[str] = None,
+                 executor: Optional[Executor] = None):
+        self.cfg = cfg
+        self.tc = tc
+        self.opt = opt or OptConfig()
+        self.ctx = ctx or ShardCtx(mesh=None)
+        self.ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
+        self._own_executor = executor is None
+        self.executor = executor or Executor(
+            domains={HOST: 2, ACCEL: 1},
+            devices={ACCEL: jax.devices()[:1]})
+        self.data = SyntheticLM(DataConfig(
+            vocab_size=cfg.vocab_size, seq_len=seq_len, global_batch=batch,
+            seed=tc.seed, frontend_tokens=(cfg.frontend_tokens if
+                                           cfg.frontend != "none" else 0),
+            d_model=cfg.d_model))
+        step_fn, _, _ = make_train_step(cfg, self.ctx, self.opt,
+                                        microbatches=tc.microbatches)
+        self._step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+        self.history: List[Dict[str, float]] = []
+        self._failed_once = False
+
+    # ------------------------------------------------------------------ state
+    def init_state(self):
+        params = lm.init_params(self.cfg, jax.random.PRNGKey(self.tc.seed))
+        opt_state = init_opt_state(params, self.opt)
+        return {"params": params, "opt": opt_state, "step": 0}
+
+    # ------------------------------------------------------------------- run
+    def run(self) -> Dict[str, Any]:
+        state = self.init_state()
+        start = 0
+        if self.ckpt is not None:
+            s, restored = self.ckpt.restore_latest(
+                {"params": state["params"], "opt": state["opt"]})
+            if s is not None:
+                state["params"] = restored["params"]
+                state["opt"] = restored["opt"]
+                state["step"] = s
+                start = s
+        restarts = 0
+        while True:
+            try:
+                self._run_taskflow(state)
+                break
+            except TaskError as e:
+                restarts += 1
+                if restarts > self.tc.max_restarts or self.ckpt is None:
+                    raise
+                s, restored = self.ckpt.restore_latest(
+                    {"params": state["params"], "opt": state["opt"]})
+                if s is None:
+                    state = self.init_state()
+                else:
+                    state["params"] = restored["params"]
+                    state["opt"] = restored["opt"]
+                    state["step"] = s
+        if self._own_executor:
+            self.executor.shutdown()
+        return {"state": state, "history": self.history,
+                "restarts": restarts}
+
+    # ------------------------------------------------- the conditional TDG
+    def _run_taskflow(self, state: Dict[str, Any]) -> None:
+        tc = self.tc
+        prefetcher = Prefetcher(self.data.batch_at, tc.prefetch_depth,
+                                start_step=state["step"])
+        tf = Taskflow("trainer")
+
+        t_init = tf.static(lambda: None, name="init")
+
+        def prefetch(sf):
+            # keep the queue ahead; push extra fills as a detached subflow
+            prefetcher.produce_one()
+            if prefetcher.qsize() < tc.prefetch_depth:
+                extra = sf.static(lambda: prefetcher.produce_one(),
+                                  name="prefetch-ahead")
+                sf.detach()
+
+        t_prefetch = tf.dynamic(prefetch, name="prefetch", domain=HOST)
+
+        def device_step():
+            step = state["step"]
+            if tc.fail_at_step is not None and step == tc.fail_at_step \
+                    and not self._failed_once:
+                self._failed_once = True
+                raise RuntimeError(f"injected failure at step {step}")
+            _, batch = prefetcher.get()
+            batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+            params, opt_state, metrics = self._step_fn(
+                state["params"], state["opt"], batch)
+            state["params"], state["opt"] = params, opt_state
+            state["step"] = step + 1
+            if step % tc.log_every == 0 or step + 1 == tc.total_steps:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = step
+                self.history.append(m)
+
+        t_step = tf.static(device_step, name="train-step", domain=ACCEL)
+
+        def ckpt_due() -> int:
+            due = (self.ckpt is not None
+                   and state["step"] % tc.ckpt_every == 0)
+            return 0 if due else 1
+
+        t_ckpt_cond = tf.condition(ckpt_due, name="ckpt?")
+
+        def save(sf):
+            # snapshot on the critical path, write detached (async ckpt)
+            step = state["step"]
+            snap = jax.device_get({"params": state["params"],
+                                   "opt": state["opt"]})
+            sf.static(lambda: self.ckpt.save(step, snap), name="ckpt-write")
+            sf.detach()
+
+        t_save = tf.dynamic(save, name="ckpt-save", domain=HOST)
+
+        def loop() -> int:
+            return 1 if state["step"] >= tc.total_steps else 0
+
+        t_loop = tf.condition(loop, name="loop?")
+        t_done = tf.static(lambda: prefetcher.stop(), name="done")
+
+        t_init.precede(t_prefetch)
+        t_prefetch.precede(t_step)
+        t_step.precede(t_ckpt_cond)
+        t_ckpt_cond.precede(t_save, t_loop)   # 0 -> save, 1 -> skip
+        t_save.precede(t_loop)
+        t_loop.precede(t_prefetch, t_done)    # 0 -> continue, 1 -> done
+
+        self.executor.run(tf).wait()
+        if self.ckpt is not None and state["step"] >= tc.total_steps:
+            self.ckpt.save(state["step"],
+                           jax.device_get({"params": state["params"],
+                                           "opt": state["opt"]}))

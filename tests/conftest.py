@@ -1,0 +1,16 @@
+import os
+
+# Tests run on the single host device (smoke configs). The 512-device
+# virtualization is ONLY for the dry-run (repro/launch/dryrun.py) and the
+# subprocess-based mesh tests, which set XLA_FLAGS themselves.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def executor():
+    from repro.core import Executor
+    ex = Executor(domains={"host": 4})
+    yield ex
+    ex.shutdown(wait=False)

@@ -1,0 +1,85 @@
+import json
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.checkpoint import CheckpointManager
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (16, 8)),
+                       "b": jnp.ones((8,), jnp.bfloat16)},
+            "opt": {"m": jnp.zeros((16, 8)),
+                    "count": jnp.int32(7)}}
+
+
+def test_roundtrip_including_bf16(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    t = _tree()
+    mgr.save(5, t)
+    restored = mgr.restore(5, t)
+    for a, b in zip(jax.tree_util.tree_leaves(t),
+                    jax.tree_util.tree_leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_latest_and_gc(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    t = _tree()
+    for s in (1, 2, 3, 4):
+        mgr.save(s, t)
+    assert mgr.all_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_partial_checkpoint_ignored(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    t = _tree()
+    mgr.save(1, t)
+    # simulate a crash mid-save: valid dir but missing data file
+    broken = tmp_path / "ckpt_00000009"
+    shutil.copytree(tmp_path / "ckpt_00000001", broken)
+    (broken / "data" / "0.bin").unlink()
+    m = json.loads((broken / "manifest.json").read_text())
+    m["step"] = 9
+    (broken / "manifest.json").write_text(json.dumps(m))
+    assert mgr.latest_step() == 1      # 9 is incomplete -> ignored
+    step, restored = mgr.restore_latest(t)
+    assert step == 1
+
+
+def test_structure_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, _tree())
+    bad = {"params": {"w": jnp.zeros((16, 8))}}    # fewer leaves
+    with pytest.raises(ValueError, match="leaves"):
+        mgr.restore(1, bad)
+
+
+def test_shape_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    t = _tree()
+    mgr.save(1, t)
+    bad = jax.tree_util.tree_map(lambda x: jnp.zeros((2,) + x.shape,
+                                                     x.dtype), t)
+    with pytest.raises(ValueError, match="shape"):
+        mgr.restore(1, bad)
+
+
+def test_elastic_restore_with_shardings(tmp_path):
+    """restore() accepts a shardings tree (None = host) — the elastic path;
+    with one device this degenerates to SingleDeviceSharding placement."""
+    mgr = CheckpointManager(tmp_path)
+    t = _tree()
+    mgr.save(3, t)
+    sh = jax.tree_util.tree_map(
+        lambda _: jax.sharding.SingleDeviceSharding(jax.devices()[0]), t)
+    restored = mgr.restore(3, t, shardings=sh)
+    leaf = jax.tree_util.tree_leaves(restored)[0]
+    assert leaf.sharding.device_set == {jax.devices()[0]}

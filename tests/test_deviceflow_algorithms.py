@@ -1,0 +1,88 @@
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ACCEL, DeviceFlow, Executor, HOST, Taskflow
+from repro.core.algorithms import linear_pipeline, parallel_for, parallel_reduce
+
+
+def test_deviceflow_capture_and_offload():
+    df = DeviceFlow()
+    x = np.arange(8, dtype=np.float32)
+    df.copy("x", x)
+    df.kernel(lambda x: x * 2.0, ["x"], ["y"])
+    df.kernel(lambda x, y: x + y, ["x", "y"], ["z"])
+    df.fetch("z")
+    out = df.offload()
+    np.testing.assert_allclose(out["z"], x * 3.0)
+    # repeated offload reuses the compiled program (single launch each)
+    df.offload(2)
+    assert df.num_launches == 3
+
+
+def test_deviceflow_call_convenience():
+    df = DeviceFlow()
+    df.call(lambda a, b: jnp.dot(a, b), np.ones((4, 4), np.float32),
+            np.ones((4,), np.float32), out="r")
+    out = df.offload()
+    np.testing.assert_allclose(out["r"], np.full(4, 4.0))
+
+
+def test_deviceflow_task_in_executor():
+    results = {}
+    ex = Executor(domains={HOST: 1, ACCEL: 1})
+    try:
+        tf = Taskflow()
+
+        def build(df: DeviceFlow):
+            df.copy("a", np.full(16, 3.0, np.float32))
+            df.kernel(lambda a: jnp.sum(a * a), ["a"], ["s"])
+            df.fetch("s")
+            results["df"] = df
+
+        t = tf.device(build)
+        done = tf.static(lambda: results.__setitem__(
+            "val", float(results["df"].result("s"))))
+        t.precede(done)
+        ex.run(tf).wait()
+        assert results["val"] == 16 * 9.0
+    finally:
+        ex.shutdown()
+
+
+def test_parallel_for(executor):
+    tf = Taskflow()
+    out = [0] * 100
+    entry, exit_ = parallel_for(tf, 100, lambda i: out.__setitem__(i, i * i),
+                                chunk=7)
+    check = tf.static(lambda: None)
+    exit_.precede(check)
+    executor.run(tf).wait()
+    assert out == [i * i for i in range(100)]
+
+
+def test_parallel_reduce(executor):
+    tf = Taskflow()
+    result = [None]
+    parallel_reduce(tf, list(range(1, 101)), lambda a, b: a + b, 0,
+                    result, chunk=9)
+    executor.run(tf).wait()
+    assert result[0] == 5050
+
+
+def test_linear_pipeline(executor):
+    tf = Taskflow()
+    items = list(range(20))
+    it = iter(items)
+    lock = threading.Lock()
+    sunk = []
+
+    def source():
+        with lock:
+            return next(it, None)
+
+    linear_pipeline(tf, [lambda x: x + 1, lambda x: x * 2],
+                    source, lambda v: sunk.append(v), depth=3)
+    executor.run(tf).wait()
+    assert sorted(sunk) == sorted((x + 1) * 2 for x in items)

@@ -1,0 +1,245 @@
+import random
+import threading
+import time
+
+import pytest
+
+from repro.core import (ACCEL, HOST, Executor, Profiler, TaskError, Taskflow)
+
+
+def test_listing1_static_dag(executor):
+    order = []
+    tf = Taskflow("demo")
+    A, B, C, D = tf.emplace(lambda: order.append("A"),
+                            lambda: order.append("B"),
+                            lambda: order.append("C"),
+                            lambda: order.append("D"))
+    A.precede(B, C)
+    B.precede(D)
+    C.precede(D)
+    executor.run(tf).wait()
+    assert order[0] == "A" and order[-1] == "D" and len(order) == 4
+
+
+def test_listing2_subflow_joins(executor):
+    seen = []
+    tf = Taskflow()
+    A = tf.static(lambda: seen.append("A"), name="A")
+
+    def B(sf):
+        seen.append("B")
+        b1 = sf.static(lambda: seen.append("B1"))
+        b2 = sf.static(lambda: seen.append("B2"))
+        b3 = sf.static(lambda: seen.append("B3"))
+        b3.succeed(b1, b2)
+
+    Bt = tf.dynamic(B)
+    C = tf.static(lambda: seen.append("C"), name="C")
+    D = tf.static(lambda: seen.append("D"), name="D")
+    A.precede(Bt, C)
+    D.succeed(Bt, C)
+    executor.run(tf).wait()
+    i = seen.index
+    assert i("B3") > i("B1") and i("B3") > i("B2")
+    assert i("D") > i("B3")        # join semantics: D waits for the subflow
+
+
+def test_detached_subflow(executor):
+    seen = []
+    done = threading.Event()
+    tf = Taskflow()
+
+    def A(sf):
+        def slow():
+            time.sleep(0.05)
+            seen.append("detached")
+            done.set()
+        sf.static(slow)
+        sf.detach()
+
+    At = tf.dynamic(A)
+    B = tf.static(lambda: seen.append("B"))
+    At.precede(B)
+    executor.run(tf).wait()        # detached joins at END of taskflow
+    assert done.is_set()
+    assert "detached" in seen and "B" in seen
+
+
+def test_listing3_composition(executor):
+    log = []
+    inner = Taskflow("inner")
+    ia = inner.static(lambda: log.append("iA"))
+    ib = inner.static(lambda: log.append("iB"))
+    ia.precede(ib)
+    outer = Taskflow("outer")
+    oc = outer.static(lambda: log.append("oC"))
+    mod = outer.composed_of(inner)
+    od = outer.static(lambda: log.append("oD"))
+    oc.precede(mod)
+    mod.precede(od)
+    executor.run(outer).wait()
+    assert log == ["oC", "iA", "iB", "oD"]
+
+
+def test_listing4_conditional_cycle(executor):
+    hits = {"n": 0}
+    tf = Taskflow()
+    init = tf.static(lambda: None)
+
+    def flip():
+        hits["n"] += 1
+        return 1 if hits["n"] >= 7 else 0
+
+    F = tf.condition(flip)
+    stop = tf.static(lambda: None)
+    init.precede(F)
+    F.precede(F, stop)
+    executor.run(tf).wait()
+    assert hits["n"] == 7
+
+
+def test_multi_condition(executor):
+    seen = []
+    tf = Taskflow()
+    m = tf.multi_condition(lambda: [0, 2])
+    a = tf.static(lambda: seen.append("a"))
+    b = tf.static(lambda: seen.append("b"))
+    c = tf.static(lambda: seen.append("c"))
+    m.precede(a, b, c)
+    executor.run(tf).wait()
+    assert sorted(seen) == ["a", "c"]
+
+
+def test_condition_out_of_range_stops(executor):
+    seen = []
+    tf = Taskflow()
+    cond = tf.condition(lambda: 5)
+    nxt = tf.static(lambda: seen.append("x"))
+    cond.precede(nxt)
+    executor.run(tf).wait()
+    assert seen == []
+
+
+def test_run_n_and_run_until(executor):
+    cnt = {"n": 0}
+    tf = Taskflow()
+    tf.static(lambda: cnt.__setitem__("n", cnt["n"] + 1))
+    executor.run_n(tf, 5).wait()
+    assert cnt["n"] == 5
+    executor.run_until(tf, lambda: cnt["n"] >= 9).wait()
+    assert cnt["n"] == 9
+
+
+def test_exception_cancels_topology(executor):
+    ran = []
+    tf = Taskflow()
+    a = tf.static(lambda: ran.append("a"))
+
+    def boom():
+        raise ValueError("boom")
+
+    b = tf.static(boom)
+    c = tf.static(lambda: ran.append("c"))
+    a.precede(b)
+    b.precede(c)
+    with pytest.raises(TaskError):
+        executor.run(tf).wait()
+    assert "c" not in ran          # successors of a failed task don't run
+
+
+def test_no_source_reports_error(executor):
+    tf = Taskflow()
+    a = tf.static(lambda: None)
+    b = tf.static(lambda: None)
+    a.precede(b)
+    b.precede(a)                   # paper Fig.6 pitfall: no source
+    with pytest.raises(TaskError):
+        executor.run(tf).wait()
+
+
+def test_corun_topologies(executor):
+    boxes = []
+    topos = []
+    for _ in range(8):
+        tf = Taskflow()
+        box = {"n": 0}
+        boxes.append(box)
+        a = tf.static(lambda box=box: box.__setitem__("n", box["n"] + 1))
+        b = tf.static(lambda box=box: box.__setitem__("n", box["n"] + 1))
+        a.precede(b)
+        topos.append(executor.run(tf))
+    for t in topos:
+        t.wait()
+    assert all(b["n"] == 2 for b in boxes)
+
+
+def test_heterogeneous_domains():
+    seen = []
+    ex = Executor(domains={HOST: 2, ACCEL: 2}, devices={ACCEL: [0, 1]})
+    try:
+        tf = Taskflow()
+        h = tf.static(lambda: seen.append("host"), domain=HOST)
+        a = tf.static(lambda: seen.append("accel"), domain=ACCEL)
+        h.precede(a)
+        ex.run(tf).wait()
+        assert seen == ["host", "accel"]
+        assert ex.domain_workers(ACCEL) == 2
+    finally:
+        ex.shutdown()
+
+
+def test_profiler_observer():
+    prof = Profiler()
+    ex = Executor(domains={HOST: 2}, observer=prof)
+    try:
+        tf = Taskflow()
+        for _ in range(20):
+            tf.static(lambda: time.sleep(0.001))
+        ex.run(tf).wait()
+        s = prof.summary()
+        assert s["tasks"] == 20
+        assert s["busy_s"] > 0
+    finally:
+        ex.shutdown()
+
+
+def test_stress_wide_random_dag(executor):
+    random.seed(7)
+    tf = Taskflow()
+    lock = threading.Lock()
+    count = {"n": 0}
+
+    def bump():
+        with lock:
+            count["n"] += 1
+
+    layers = []
+    for _ in range(10):
+        layer = [tf.static(bump) for _ in range(100)]
+        if layers:
+            for t in layer:
+                t.succeed(*random.sample(layers[-1], 3))
+        layers.append(layer)
+    executor.run(tf).wait()
+    assert count["n"] == 1000
+
+
+def test_cancellation(executor):
+    started = threading.Event()
+    release = threading.Event()
+    ran_after = []
+    tf = Taskflow()
+
+    def first():
+        started.set()
+        release.wait(5)
+
+    a = tf.static(first)
+    b = tf.static(lambda: ran_after.append(1))
+    a.precede(b)
+    topo = executor.run(tf)
+    started.wait(5)
+    topo.cancel()
+    release.set()
+    topo.event.wait(5)
+    assert ran_after == []

@@ -1,0 +1,104 @@
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import STOP, JaxGraph
+
+
+def _state(**kw):
+    base = {"i": jnp.int32(0), "x": jnp.float32(1.0)}
+    base.update(kw)
+    return base
+
+
+def test_dag_composition_matches_reference():
+    g = JaxGraph()
+    a = g.task(lambda s: {**s, "x": s["x"] + 1})
+    b = g.task(lambda s: {**s, "x": s["x"] * 3})
+    a.precede(b)
+    st = _state()
+    out = g.compile(st)(st)
+    ref = g.run_reference(st)
+    assert float(out["x"]) == float(ref["x"]) == 6.0
+
+
+def test_do_while_cycle():
+    g = JaxGraph()
+    stepn = g.task(lambda s: {"i": s["i"] + 1, "x": s["x"] * 2})
+    chk = g.cond(lambda s: (jnp.where(s["i"] >= 6, 1, 0), s))
+    stepn.precede(chk)
+    chk.precede(stepn, STOP)
+    st = _state()
+    out = g.compile(st)(st)
+    assert int(out["i"]) == 6 and float(out["x"]) == 64.0
+    ref = g.run_reference(st)
+    assert int(ref["i"]) == 6
+
+
+def test_branching_conditions():
+    g = JaxGraph()
+    init = g.task(lambda s: {**s, "i": s["i"] * 0})
+
+    def coin(s):
+        s = {**s, "i": s["i"] + 1}
+        return jnp.where(s["i"] == 2, 0, 1), s
+
+    f1 = g.cond(coin)
+    f2 = g.cond(coin)
+    f3 = g.cond(coin)
+    init.precede(f1)
+    f1.precede(f1, f2)
+    f2.precede(f1, f3)
+    f3.precede(f1, STOP)
+    st = _state()
+    out = g.compile(st)(st)
+    ref = g.run_reference(st)
+    assert int(out["i"]) == int(ref["i"]) == 5
+
+
+def test_superblocks_merge_static_chains():
+    g = JaxGraph()
+    ts = [g.task(lambda s, k=k: {**s, "i": s["i"] + k}) for k in range(5)]
+    for a, b in zip(ts, ts[1:]):
+        a.precede(b)
+    c = g.cond(lambda s: (jnp.where(s["i"] > 100, 1, 0), s))
+    ts[-1].precede(c)
+    c.precede(ts[0], STOP)
+    blocks, _ = g._blocks()
+    assert len(blocks) == 1           # whole chain + cond fused to 1 block
+    st = _state()
+    out = g.compile(st)(st)
+    assert int(out["i"]) == int(g.run_reference(st)["i"])
+
+
+def test_static_fanout_in_cyclic_graph_rejected():
+    g = JaxGraph()
+    a = g.task(lambda s: s)
+    b = g.task(lambda s: s)
+    c = g.cond(lambda s: (jnp.int32(0), s))
+    a.precede(b)
+    a.precede(c)
+    c.precede(a, STOP)
+    with pytest.raises(ValueError, match="multiple successors"):
+        g.lower()
+
+
+def test_out_of_range_condition_index_stops():
+    g = JaxGraph()
+    c = g.cond(lambda s: (jnp.int32(7), s))
+    t = g.task(lambda s: {**s, "i": s["i"] + 100})
+    c.precede(t)
+    st = _state()
+    out = g.compile(st)(st)
+    assert int(out["i"]) == 0          # successor not taken
+
+
+def test_max_iters_bound():
+    g = JaxGraph()
+    stepn = g.task(lambda s: {**s, "i": s["i"] + 1})
+    c = g.cond(lambda s: (jnp.int32(0), s))     # loops forever
+    stepn.precede(c)
+    c.precede(stepn, STOP)
+    st = _state()
+    out = jax.jit(g.lower(max_iters=10))(st)
+    assert int(out["i"]) == 10

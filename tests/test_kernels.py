@@ -1,0 +1,89 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (ref.py).
+
+Interpret-mode Pallas on CPU is slow, so the sweep sizes are modest but
+cover: GQA group ratios, non-square blocks, both dtypes, block-boundary
+and remainder-free shapes.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.ops import flash_attention, lsdnn_layer, mamba_scan
+from repro.kernels.ref import (flash_attention_ref, lsdnn_layer_ref,
+                               mamba_scan_ref)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("B,S,H,KV,hd,dtype", [
+    (2, 128, 4, 2, 64, jnp.float32),
+    (1, 256, 8, 8, 64, jnp.float32),
+    (1, 128, 8, 1, 128, jnp.bfloat16),
+    (2, 192, 6, 2, 32, jnp.float32),      # S not a multiple of 128
+])
+def test_flash_attention_matches_ref(B, S, H, KV, hd, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), dtype)
+    out = flash_attention(q, k, v, block_q=64, block_k=64)
+    ref = flash_attention_ref(q, k, v)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    assert jnp.max(jnp.abs(out.astype(jnp.float32)
+                           - ref.astype(jnp.float32))) < tol
+
+
+def test_flash_attention_non_causal():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 128, 4, 32))
+    k = jax.random.normal(ks[1], (1, 128, 4, 32))
+    v = jax.random.normal(ks[2], (1, 128, 4, 32))
+    out = flash_attention(q, k, v, causal=False, block_q=64, block_k=64)
+    ref = flash_attention_ref(q, k, v, causal=False)
+    assert jnp.max(jnp.abs(out - ref)) < 2e-5
+
+
+@pytest.mark.parametrize("B,S,dI,N,block_d,chunk", [
+    (2, 64, 128, 16, 64, 32),
+    (1, 96, 64, 8, 64, 32),               # S % chunk != 0 -> chunk=S fallback
+    (1, 128, 256, 16, 128, 64),
+])
+def test_mamba_scan_matches_ref(B, S, dI, N, block_d, chunk):
+    ks = jax.random.split(KEY, 5)
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (B, S, dI))) * 0.1
+    x = jax.random.normal(ks[1], (B, S, dI))
+    Bc = jax.random.normal(ks[2], (B, S, N))
+    Cc = jax.random.normal(ks[3], (B, S, N))
+    A = -jnp.exp(jax.random.normal(ks[4], (dI, N)) * 0.5)
+    if S % chunk:
+        chunk = S
+    y, hT = mamba_scan(dt, x, Bc, Cc, A, block_d=block_d, chunk=chunk)
+    yr, hr = mamba_scan_ref(dt, A, Bc, Cc, x)
+    assert jnp.max(jnp.abs(y - yr)) < 1e-4
+    assert jnp.max(jnp.abs(hT - hr)) < 1e-4
+
+
+@pytest.mark.parametrize("T,F,G,dtype", [
+    (128, 256, 128, jnp.float32),
+    (256, 128, 64, jnp.float32),
+    (64, 64, 64, jnp.bfloat16),
+])
+def test_lsdnn_layer_matches_ref(T, F, G, dtype):
+    ks = jax.random.split(KEY, 3)
+    y = jax.random.normal(ks[0], (T, F), dtype)
+    w = jax.random.normal(ks[1], (F, G), dtype) * 0.05
+    b = jax.random.normal(ks[2], (G,), dtype)
+    out = lsdnn_layer(y, w, b, block_m=64, block_n=64, block_k=64)
+    ref = lsdnn_layer_ref(y, w, b)
+    tol = 0.3 if dtype == jnp.bfloat16 else 1e-4
+    assert jnp.max(jnp.abs(out.astype(jnp.float32)
+                           - ref.astype(jnp.float32))) < tol
+
+
+def test_lsdnn_clamps_at_cap():
+    y = jnp.ones((64, 64)) * 10.0
+    w = jnp.ones((64, 64)) * 1.0
+    b = jnp.zeros((64,))
+    out = lsdnn_layer(y, w, b, cap=32.0, block_m=64, block_n=64, block_k=64)
+    assert float(jnp.max(out)) == 32.0
+    assert float(jnp.min(out)) >= 0.0

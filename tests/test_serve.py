@@ -1,0 +1,33 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serve.engine import ServeEngine
+
+
+@pytest.mark.parametrize("arch", ["qwen3-14b", "falcon-mamba-7b",
+                                  "zamba2-1.2b"])
+def test_generate_matches_teacher_forced_argmax(arch):
+    cfg = get_config(arch).smoke()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, decode_chunk=4)
+    prompts = [np.arange(1, 9, dtype=np.int32),
+               np.arange(3, 11, dtype=np.int32)]
+    outs = eng.generate(prompts, max_new=8)
+    assert all(o.shape == (8,) for o in outs)
+    full = np.concatenate([prompts[0], outs[0]])
+    logits, _ = lm.forward(cfg, params, jnp.asarray(full[None, :-1]))
+    pred = np.asarray(jnp.argmax(logits[0, len(prompts[0]) - 1:], -1))
+    match = (pred[:8] == outs[0]).mean()
+    assert match >= 0.85, f"{arch}: decode/forward agreement {match}"
+
+
+def test_unequal_prompts_rejected():
+    cfg = get_config("stablelm-1.6b").smoke()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params)
+    with pytest.raises(AssertionError):
+        eng.generate([np.arange(4), np.arange(7)], max_new=2)

@@ -1,0 +1,57 @@
+import os
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.optim.adamw import OptConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def test_trainer_runs_and_checkpoints(tmp_path):
+    cfg = get_config("internvl2-1b").smoke()
+    tc = TrainerConfig(total_steps=6, ckpt_every=3, log_every=2,
+                       microbatches=1)
+    tr = Trainer(cfg, tc, batch=2, seq_len=32,
+                 opt=OptConfig(lr=1e-3, warmup_steps=2, total_steps=6),
+                 ckpt_dir=str(tmp_path / "ckpt"))
+    out = tr.run()
+    assert out["state"]["step"] == 6
+    assert out["restarts"] == 0
+    assert all(h["loss"] == h["loss"] for h in out["history"])  # no NaN
+    assert tr.ckpt.latest_step() == 6
+
+
+def test_trainer_restarts_from_checkpoint_after_failure(tmp_path):
+    cfg = get_config("stablelm-1.6b").smoke()
+    tc = TrainerConfig(total_steps=10, ckpt_every=4, log_every=1,
+                       fail_at_step=6, max_restarts=2, microbatches=2)
+    tr = Trainer(cfg, tc, batch=4, seq_len=32,
+                 opt=OptConfig(lr=1e-3, warmup_steps=2, total_steps=10),
+                 ckpt_dir=str(tmp_path / "ckpt"))
+    out = tr.run()
+    assert out["restarts"] == 1
+    assert out["state"]["step"] == 10
+    steps = [h["step"] for h in out["history"]]
+    assert 5 in steps and steps.count(5) >= 2  # 5 re-ran post-restore(4)
+
+
+def test_trainer_resumes_across_runs(tmp_path):
+    cfg = get_config("stablelm-1.6b").smoke()
+    d = str(tmp_path / "ckpt")
+    tc1 = TrainerConfig(total_steps=4, ckpt_every=2, log_every=1)
+    Trainer(cfg, tc1, batch=2, seq_len=32, ckpt_dir=d).run()
+    tc2 = TrainerConfig(total_steps=8, ckpt_every=2, log_every=1)
+    out = Trainer(cfg, tc2, batch=2, seq_len=32, ckpt_dir=d).run()
+    # second run resumed at 4 (no step <4 logged)
+    assert min(h["step"] for h in out["history"]) >= 4
+    assert out["state"]["step"] == 8
+
+
+def test_trainer_fails_without_checkpointing():
+    cfg = get_config("stablelm-1.6b").smoke()
+    tc = TrainerConfig(total_steps=5, fail_at_step=2, max_restarts=2)
+    tr = Trainer(cfg, tc, batch=2, seq_len=32, ckpt_dir=None)
+    from repro.core import TaskError
+    with pytest.raises(TaskError):
+        tr.run()

@@ -1,0 +1,55 @@
+import threading
+
+from repro.core import WorkStealingQueue
+
+
+def test_lifo_owner_fifo_thief():
+    q = WorkStealingQueue()
+    for i in range(5):
+        q.push(i)
+    assert q.pop() == 4            # owner: LIFO
+    assert q.steal() == 0          # thief: FIFO
+    assert len(q) == 3
+    assert not q.empty()
+
+
+def test_empty_returns_none():
+    q = WorkStealingQueue()
+    assert q.pop() is None
+    assert q.steal() is None
+    assert q.empty()
+
+
+def test_concurrent_steals_no_loss_no_dup():
+    q = WorkStealingQueue()
+    N = 20_000
+    for i in range(N):
+        q.push(i)
+    got = []
+    lock = threading.Lock()
+
+    def thief():
+        while True:
+            t = q.steal()
+            if t is None:
+                if q.empty():
+                    return
+                continue
+            with lock:
+                got.append(t)
+
+    def owner():
+        while True:
+            t = q.pop()
+            if t is None:
+                return
+            with lock:
+                got.append(t)
+
+    ts = [threading.Thread(target=thief) for _ in range(4)]
+    ts.append(threading.Thread(target=owner))
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert sorted(got) == list(range(N))  # every task exactly once
