@@ -1,0 +1,173 @@
+"""Pipeline throughput (Pipeflow, arXiv:2202.00717 §5): scheduling tokens/sec
+through the L-lines × S-stages task-parallel pipeline, vs the hand-rolled
+sequential loop it replaces.
+
+Three panels:
+
+* ``micro``    — synthetic fixed-work stages; lines × stages scaling of the
+                 pipeline scheduler against a plain host loop running the
+                 same stage bodies (derived column = pipeline/loop ratio);
+* ``prefetch`` — the data layer's 2-stage prefetch pipeline in executor mode
+                 vs the manual ``produce_one`` drive (batches/sec);
+* ``serve``    — LM tokens/sec of the pipelined 4-stage ``ServeEngine``
+                 (mixed-length groups overlapping prefill/decode) vs a
+                 hand-rolled group-serial loop over the same compiled fns.
+
+NOTE: this container exposes ONE CPU core (see benchmarks/common.py), so the
+ratios measure *scheduling overhead*, not parallel speedup; the lines×stages
+scaling shape and the zero-dedicated-thread property are the point.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import ACCEL, HOST, Executor
+from repro.pipeline import DataPipe, DataPipeline, Pipe, PipeType, Pipeline
+
+
+def _spin(n: int) -> int:
+    acc = 0
+    for i in range(n):
+        acc += i * i
+    return acc
+
+
+def _micro_rows(quick: bool):
+    ntokens = 200 if quick else 2_000
+    work = 200 if quick else 1_000
+    S = 4
+    kinds = [PipeType.SERIAL] + [PipeType.PARALLEL, PipeType.SERIAL,
+                                 PipeType.PARALLEL][:S - 1]
+
+    # hand-rolled loop baseline: same stage bodies, one host thread
+    t0 = time.perf_counter()
+    for _ in range(ntokens):
+        for _s in range(S):
+            _spin(work)
+    loop_dt = time.perf_counter() - t0
+    loop_rate = ntokens / loop_dt
+    yield "pipeline_micro_loop_tok_per_s", f"{loop_rate:.1f}", "baseline"
+
+    for L in ((1, 4) if quick else (1, 2, 4, 8)):
+        ex = Executor(domains={HOST: 4})
+        budget = ntokens
+
+        def mk(s):
+            def stage(pf):
+                if s == 0 and pf.token >= budget:
+                    pf.stop()
+                    return
+                _spin(work)
+            return stage
+
+        pl = Pipeline(L, *[Pipe(kinds[s], mk(s), name=f"s{s}")
+                           for s in range(S)])
+        t0 = time.perf_counter()
+        pl.run(ex).wait()
+        dt = time.perf_counter() - t0
+        ex.shutdown(wait=False)
+        rate = pl.num_tokens / dt
+        yield (f"pipeline_micro_L{L}S{S}_tok_per_s", f"{rate:.1f}",
+               f"{rate/loop_rate:.2f}x_loop_defer={pl.num_deferrals}")
+
+
+def _prefetch_rows(quick: bool):
+    from repro.data.pipeline import DataConfig, Prefetcher, SyntheticLM
+    cfg = DataConfig(vocab_size=512, seq_len=64 if quick else 256,
+                     global_batch=4 if quick else 16, seed=0)
+    nbatches = 20 if quick else 100
+
+    src = SyntheticLM(cfg)
+    p = Prefetcher(src.batch_at, depth=4)
+    t0 = time.perf_counter()
+    got = 0
+    while got < nbatches:
+        p.produce_one()
+        p.get(timeout=30)
+        got += 1
+    manual_dt = time.perf_counter() - t0
+    yield ("prefetch_manual_batch_per_s", f"{nbatches/manual_dt:.1f}",
+           "baseline")
+
+    ex = Executor(domains={HOST: 4})
+    src = SyntheticLM(cfg)
+    p = Prefetcher(src.batch_at, depth=4, executor=ex)
+    t0 = time.perf_counter()
+    p.start()
+    for _ in range(nbatches):
+        p.get(timeout=30)
+    pipe_dt = time.perf_counter() - t0
+    p.stop()
+    ex.shutdown(wait=False)
+    yield ("prefetch_pipeline_batch_per_s", f"{nbatches/pipe_dt:.1f}",
+           f"{manual_dt/pipe_dt:.2f}x_manual")
+
+
+def _serve_rows(quick: bool):
+    import jax
+    import numpy as np
+    from repro.configs import get_config
+    from repro.models import lm
+    from repro.serve.engine import ServeEngine
+
+    cfg = get_config("stablelm-1.6b").smoke()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    max_new = 8 if quick else 32
+    chunk = 4 if quick else 8
+    rng = np.random.default_rng(0)
+    lens = (8, 12) if quick else (16, 24, 32, 48)
+    prompts = [rng.integers(0, cfg.vocab_size, size=s).astype(np.int32)
+               for s in lens for _ in range(2)]
+    total = len(prompts) * max_new
+
+    with ServeEngine(cfg, params, decode_chunk=chunk) as eng:
+        eng.generate(prompts, max_new=max_new)  # warm-up: compile all shapes
+        t0 = time.perf_counter()
+        outs = eng.generate(prompts, max_new=max_new)
+        pipe_dt = time.perf_counter() - t0
+
+        # hand-rolled baseline: the pre-pipeline host loop, group-serial,
+        # over the SAME compiled programs
+        t0 = time.perf_counter()
+        import jax.numpy as jnp
+        for s in lens:
+            group = [p for p in prompts if len(p) == s]
+            toks = np.stack(group)
+            logits, cache = eng._prefill(eng.params, jnp.asarray(toks),
+                                         max_len=s + max_new + 1)
+            cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            seqs = [np.asarray(cur)[:, None]]
+            remaining = max_new - 1
+            while remaining > 0:
+                n = min(chunk, remaining)
+                cache, ch = eng._decode_n(eng.params, cache, cur, n)
+                seqs.append(np.asarray(ch))
+                cur = ch[:, -1]
+                remaining -= n
+        loop_dt = time.perf_counter() - t0
+
+    assert all(o is not None for o in outs)
+    yield "serve_loop_tok_per_s", f"{total/loop_dt:.1f}", "baseline"
+    yield ("serve_pipeline_tok_per_s", f"{total/pipe_dt:.1f}",
+           f"{loop_dt/pipe_dt:.2f}x_loop_{len(lens)}groups")
+
+
+def bench(quick: bool = False):
+    rows = []
+    for gen in (_micro_rows, _prefetch_rows, _serve_rows):
+        rows.extend(gen(quick))
+    return rows
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="seconds-scale smoke sizes (tier-1 environment)")
+    args = ap.parse_args()
+    for name, val, derived in bench(quick=args.quick):
+        print(f"{name},{val},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

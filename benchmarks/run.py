@@ -10,6 +10,8 @@ fig13   — LSDNN inference (paper Figure 13, §5.3)
 fig17   — conditional-vs-unrolled memory (paper Figure 17 memory panel)
 fig21   — incremental timing propagation (paper Figure 21, §5.5)
 roofline— the dry-run roofline table (§Roofline), from results/dryrun.jsonl
+pipeline— task-parallel pipeline throughput vs hand-rolled loop
+          (Pipeflow follow-up, arXiv:2202.00717); honors --quick
 """
 from __future__ import annotations
 
@@ -22,12 +24,14 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--quick", action="store_true",
+                    help="seconds-scale smoke sizes (tier-1 environment)")
     args = ap.parse_args()
 
     from . import (fig9_micro_random_dag, fig11_corun_throughput,
                    fig13_lsdnn, fig17_conditional_memory,
-                   fig21_incremental_timing, roofline_report,
-                   table2_task_overhead)
+                   fig21_incremental_timing, pipeline_throughput,
+                   roofline_report, table2_task_overhead)
 
     suites = {
         "table2": lambda: table2_task_overhead.bench(200_000),
@@ -37,6 +41,7 @@ def main() -> None:
         "fig17": fig17_conditional_memory.bench,
         "fig21": fig21_incremental_timing.bench,
         "roofline": roofline_report.bench,
+        "pipeline": lambda: pipeline_throughput.bench(quick=args.quick),
     }
     only = [s for s in args.only.split(",") if s]
     failures = 0

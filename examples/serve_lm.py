@@ -1,6 +1,7 @@
 """Batched serving demo: compiled prefill + chunked decode (N tokens per
-XLA launch — the cudaFlow single-launch effect) with request batching on
-the host executor.
+XLA launch — the cudaFlow single-launch effect), driven through the
+4-stage generation pipeline (admit -> prefill -> decode -> complete) so
+different prompt-length groups overlap prefill and decode.
 
     PYTHONPATH=src python examples/serve_lm.py --arch qwen3-14b --batch 8
 """
@@ -45,6 +46,18 @@ def main() -> None:
           f"({total/dt:.1f} tok/s) using ~{launches} device launches "
           f"(chunked decode)")
     print("first sample:", outs[0][:24].tolist())
+
+    # mixed prompt lengths: groups pipeline through prefill/decode stages
+    mixed = prompts[: args.batch // 2] + [
+        rng.integers(0, cfg.vocab_size,
+                     size=args.prompt_len // 2).astype(np.int32)
+        for _ in range(args.batch - args.batch // 2)]
+    t0 = time.time()
+    outs = eng.generate(mixed, max_new=args.max_new)
+    print(f"mixed-length ({args.prompt_len} and {args.prompt_len//2}): "
+          f"{total} tokens in {time.time()-t0:.2f}s, "
+          f"{len(set(len(p) for p in mixed))} groups pipelined")
+    eng.close()
 
 
 if __name__ == "__main__":

@@ -159,6 +159,13 @@ class Executor:
     def domain_workers(self, domain: str) -> int:
         return len(self._workers_by_domain[self._dindex[domain]])
 
+    @property
+    def domain_names(self) -> List[str]:
+        return list(self._domain_names)
+
+    def has_domain(self, domain: str) -> bool:
+        return domain in self._dindex
+
     def run(self, tf: Taskflow,
             on_complete: Optional[Callable[[Topology], None]] = None
             ) -> Topology:
@@ -184,13 +191,24 @@ class Executor:
         if self._stop:
             raise RuntimeError("executor is shut down")
         topo = Topology(tf, pred, on_complete)
+        with self._topo_lock:
+            # Per-node run state (_join/_topology) is a soft mapping to ONE
+            # live topology (paper §3.3): resubmitting the taskflow while a
+            # previous run is in flight would silently corrupt join counters.
+            prev = getattr(tf, "_inflight_topology", None)
+            if prev is not None and not prev.done():
+                raise RuntimeError(
+                    f"taskflow {tf.name!r} is already running in a live "
+                    "topology; wait() for it to finish (or copy the graph) "
+                    "before resubmitting — concurrent runs of one Taskflow "
+                    "corrupt per-node join counters (paper §3.3)")
+            tf._inflight_topology = topo
+            self._live_topologies += 1
         for node in tf._nodes:
             node._topology = topo
             node._parent = None
             node._nested = None
         topo._sources = [n for n in tf._nodes if n.is_source()]
-        with self._topo_lock:
-            self._live_topologies += 1
         if not topo._sources:
             if tf._nodes:
                 topo.exceptions.append(

@@ -151,6 +151,7 @@ class GraphBuilder:
         self.name = name
         self._nodes: List[Node] = []
         self._counter = 0
+        self._inflight_topology = None  # live Topology guard (executor-owned)
 
     # -- creation -----------------------------------------------------------------
     def _add(self, fn: Optional[Callable], kind: TaskType, name: str,

@@ -64,39 +64,128 @@ class SyntheticLM:
 
 
 class Prefetcher:
-    """Bounded prefetch queue fed by host-domain taskflow tasks.
+    """Bounded prefetch implemented as a 2-stage task-parallel pipeline.
 
-    ``source(step) -> batch``; call :meth:`get` from the trainer. Used both
-    standalone (thread) and as tasks inside the trainer taskflow.
+    The prefetch loop is the canonical Pipeflow client: a **produce** stage
+    (SERIAL — ``source(step)`` is called strictly in step order, safe for
+    stateful sources) followed by a **stage** stage (PARALLEL — results are
+    staged into the consumer queue concurrently, re-ordered by step so
+    :meth:`get` always yields batches in order).
+
+    Two drive modes share one credit-based core (``_claim``/``_emit``):
+
+    * **manual** — :meth:`produce_one` pushes one token through both stages
+      inline; this is the task body the trainer's taskflow schedules on host
+      workers. Non-blocking: returns ``False`` when the queue is full or the
+      prefetcher is stopped, so a detached prefetch task can never wedge a
+      worker (liveness of the trainer topology).
+    * **executor** — pass ``executor=``; the prefetcher owns a
+      :class:`repro.pipeline.DataPipeline` whose SERIAL first pipe claims
+      steps and materialises batches while the PARALLEL second pipe stages
+      them. When the bounded queue fills, the first pipe calls ``pf.stop()``
+      and the pipeline *drains* (back-pressure without blocked workers);
+      :meth:`get` re-arms it once capacity frees up.
+
+    Public API (``produce_one`` / ``get`` / ``stop`` / ``qsize``) is
+    unchanged from the thread-queue implementation it replaces.
     """
 
-    def __init__(self, source, depth: int = 2, start_step: int = 0):
+    def __init__(self, source, depth: int = 2, start_step: int = 0,
+                 executor=None):
         self._source = source
+        self._depth = depth
         self._q: "queue.Queue" = queue.Queue(maxsize=depth)
         self._next = start_step
+        self._emit_next = start_step
+        self._ready: Dict[int, Any] = {}   # out-of-order staging buffer
+        self._inflight = 0                 # claimed but not yet queued
         self._lock = threading.Lock()
         self._stopped = False
+        self._executor = executor
+        self._topo = None
+        self._pump_lock = threading.Lock()
+        self._pipeline = None
+        if executor is not None:
+            from ..pipeline import DataPipe, DataPipeline, PipeType
+            self._pipeline = DataPipeline(
+                max(1, depth),
+                DataPipe(PipeType.SERIAL, self._pipe_produce, name="produce"),
+                DataPipe(PipeType.PARALLEL, self._pipe_stage, name="stage"),
+                name="prefetch")
 
-    def produce_one(self) -> bool:
-        """One prefetch task body (host domain). Non-blocking: skips when
-        the queue is full or stopped so a detached prefetch task can never
-        wedge a worker (liveness of the trainer topology)."""
+    # ------------------------------------------------------ credit-based core
+    def _claim(self) -> Optional[int]:
+        """Reserve the next step, bounded by queue capacity; None when full
+        or stopped. qsize + inflight never exceeds depth, so staging a
+        claimed batch can never block."""
         with self._lock:
-            if self._stopped or self._q.full():
-                return False
+            if self._stopped or self._inflight + self._q.qsize() >= self._depth:
+                return None
             step = self._next
             self._next += 1
-        batch = self._source(step)
-        try:
-            self._q.put_nowait((step, batch))
-        except queue.Full:
-            with self._lock:
-                self._next = min(self._next, step)  # retry this step later
+            self._inflight += 1
+            return step
+
+    def _emit(self, step: int, batch) -> None:
+        """Stage a materialised batch; releases to the queue in step order."""
+        with self._lock:
+            self._ready[step] = batch
+            while self._emit_next in self._ready:
+                self._q.put_nowait(
+                    (self._emit_next, self._ready.pop(self._emit_next)))
+                self._emit_next += 1
+                self._inflight -= 1
+
+    # -------------------------------------------------------- pipeline stages
+    def _pipe_produce(self, pf):
+        step = self._claim()
+        if step is None:
+            pf.stop()  # full or stopped: drain (back-pressure, no blocking)
+            return None
+        return step, self._source(step)
+
+    def _pipe_stage(self, pf, item):
+        self._emit(*item)
+        return None
+
+    def _pump(self) -> bool:
+        """Re-arm the drained pipeline if there is capacity to fill. Also
+        installed as the pipeline's on_complete hook: a topology that drains
+        in the instant the consumer empties the queue restarts itself, so a
+        blocked :meth:`get` can never strand free capacity."""
+        if self._executor is None:
             return False
+        with self._pump_lock:
+            if self._topo is not None and not self._topo.done():
+                return True
+            with self._lock:
+                idle = (self._stopped or
+                        self._inflight + self._q.qsize() >= self._depth)
+            if idle:
+                return False
+            self._topo = self._pipeline.run(self._executor,
+                                            lambda _topo: self._pump())
+            return True
+
+    # ------------------------------------------------------------- public API
+    def start(self) -> bool:
+        """Kick the executor-driven pipeline (no-op in manual mode)."""
+        return self._pump()
+
+    def produce_one(self) -> bool:
+        """One prefetch token pushed through both stages inline (manual
+        drive). Non-blocking; False when full or stopped."""
+        step = self._claim()
+        if step is None:
+            return False
+        self._emit(step, self._source(step))
         return True
 
     def get(self, timeout: Optional[float] = 60.0):
-        return self._q.get(timeout=timeout)
+        self._pump()  # arm the producer before blocking on an empty queue
+        item = self._q.get(timeout=timeout)
+        self._pump()  # consumed one slot: refill ahead of the consumer
+        return item
 
     def qsize(self) -> int:
         return self._q.qsize()

@@ -1,0 +1,13 @@
+"""repro.pipeline — task-parallel pipeline scheduling (Pipeflow style).
+
+Built entirely on the condition-task machinery of :mod:`repro.core`: a
+pipeline is a static cyclic graph of multi-condition tasks executed by the
+work-stealing executor — zero dedicated threads. See
+:mod:`repro.pipeline.pipeline` for the construct-by-construct mapping to the
+Pipeflow paper (arXiv:2202.00717).
+"""
+from .data import DataPipe, DataPipeline
+from .pipeline import Pipe, Pipeflow, Pipeline, PipeType
+
+__all__ = ["DataPipe", "DataPipeline",
+           "Pipe", "Pipeflow", "Pipeline", "PipeType"]

@@ -1,0 +1,275 @@
+"""Task-parallel pipeline scheduling framework (Pipeflow, arXiv:2202.00717).
+
+The pipeline is the single most valuable client of the paper's in-graph
+control flow (§3.4: condition tasks, weak edges, cycles): ``L`` parallel
+*lines* times ``S`` *pipes* (stages) are laid out **once** as a static cyclic
+grid of multi-condition tasks over the existing work-stealing
+:class:`~repro.core.executor.Executor` — no dedicated pipeline threads, no
+data copies, no graph rebuilding between tokens.
+
+Mapping to the Pipeflow paper:
+
+==========================  ===================================================
+Pipeflow construct          Here
+==========================  ===================================================
+``tf::Pipeline(L, ...)``    :class:`Pipeline` — ``Pipeline(num_lines, *pipes)``
+``tf::Pipe{SERIAL, fn}``    :class:`Pipe` / :class:`PipeType` (``SERIAL`` |
+                            ``PARALLEL``); the first pipe must be SERIAL
+``tf::Pipeflow``            :class:`Pipeflow` — the per-line worker view
+                            (``pf.line``, ``pf.pipe``, ``pf.token``)
+``pf.stop()``               :meth:`Pipeflow.stop` — in-stage termination: only
+                            legal at the first pipe; in-flight tokens drain
+scheduling tokens           per-(line, pipe) :class:`AtomicInt` join counters;
+                            a token *t* runs on line ``t % L``
+deferred lines              a line whose next SERIAL pipe is still occupied
+                            parks (its task simply is not scheduled) instead
+                            of blocking a worker; counted in
+                            :attr:`Pipeline.num_deferrals`
+``tf::DataPipeline``        :class:`repro.pipeline.data.DataPipeline` —
+                            per-line buffers threaded between stages, no locks
+==========================  ===================================================
+
+Graph layout (the static cyclic TDG, built once per ``Pipeline``):
+
+* one **multi-condition task per (line, pipe) slot**; slot ``(l, s)`` has two
+  weak out-edges: index 0 → ``(l, (s+1) % S)`` (the line moves forward, the
+  last pipe wraps to re-admit the line) and index 1 → ``((l+1) % L, s)`` (a
+  SERIAL pipe hands the stage to the next token's line);
+* one **condition task** (the source) whose integer return selects which
+  line's first pipe admits the next token — this is the paper's weak-edge
+  bypass: condition successors are scheduled directly, join counters are
+  only decremented by the grid itself.
+
+Every edge is weak, so the whole pipeline is a *cycle* in the TDG — exactly
+the pattern Figure 6/§3.4 of the Taskflow paper legalises — and a pipeline
+run completes (the topology's pending count reaches zero) precisely when a
+stop signal has drained every in-flight token.
+"""
+from __future__ import annotations
+
+import enum
+from typing import Callable, List, Optional
+
+from ..core.atomic import AtomicInt
+from ..core.executor import Executor, Topology
+from ..core.graph import HOST, Task, Taskflow
+
+__all__ = ["PipeType", "Pipe", "Pipeflow", "Pipeline"]
+
+
+class PipeType(enum.Enum):
+    SERIAL = "serial"      # at most one line in the stage; strict token order
+    PARALLEL = "parallel"  # any number of lines in the stage concurrently
+
+
+class Pipe:
+    """One pipeline stage: ``fn(pf: Pipeflow)`` run on ``domain`` workers."""
+
+    __slots__ = ("kind", "fn", "name", "domain")
+
+    def __init__(self, kind: PipeType, fn: Callable, name: str = "",
+                 domain: str = HOST) -> None:
+        self.kind = kind
+        self.fn = fn
+        self.name = name or getattr(fn, "__name__", kind.value)
+        self.domain = domain
+
+
+class Pipeflow:
+    """Per-line view handed to every pipe callable (paper's ``tf::Pipeflow``)."""
+
+    __slots__ = ("_line", "_pipe", "_token", "_stopped", "num_deferrals")
+
+    def __init__(self, line: int) -> None:
+        self._line = line
+        self._pipe = 0
+        self._token = 0
+        self._stopped = False
+        self.num_deferrals = 0
+
+    @property
+    def line(self) -> int:
+        return self._line
+
+    @property
+    def pipe(self) -> int:
+        return self._pipe
+
+    @property
+    def token(self) -> int:
+        return self._token
+
+    def stop(self) -> None:
+        """Stop admitting tokens. Only legal at the first pipe; the serial
+        stage-0 hand-off chain is broken, so no later line re-enters pipe 0
+        and all in-flight tokens drain to completion."""
+        if self._pipe != 0:
+            raise RuntimeError(
+                "Pipeflow.stop() can only be called from the first pipe "
+                f"(called from pipe {self._pipe})")
+        self._stopped = True
+
+
+class Pipeline:
+    """``L`` lines × ``S`` pipes scheduled purely by executor condition tasks.
+
+    Parameters
+    ----------
+    num_lines:
+        maximum number of tokens in flight (the paper's *parallel lines*).
+    pipes:
+        :class:`Pipe` objects in stage order; the first must be SERIAL.
+
+    Use :meth:`run` (or ``executor.run(pipeline.taskflow)`` after
+    :meth:`reset`) to execute. Token numbering is monotone across runs, so a
+    drained pipeline can be re-armed with :meth:`reset` + :meth:`run` to
+    continue the stream — the restart pattern the bounded
+    :class:`repro.data.pipeline.Prefetcher` uses for back-pressure.
+    """
+
+    def __init__(self, num_lines: int, *pipes: Pipe, name: str = "pipeline"):
+        if num_lines < 1:
+            raise ValueError("pipeline needs at least one line")
+        if not pipes:
+            raise ValueError("pipeline needs at least one pipe")
+        if pipes[0].kind is not PipeType.SERIAL:
+            raise ValueError("the first pipe must be SERIAL "
+                             "(it mints scheduling tokens, Pipeflow §3)")
+        self._pipes: List[Pipe] = list(pipes)
+        self._num_lines = num_lines
+        self._pipeflows = [Pipeflow(l) for l in range(num_lines)]
+        self._counters = [[AtomicInt(0) for _ in pipes]
+                          for _ in range(num_lines)]
+        self._num_tokens = 0
+        self._num_deferrals = AtomicInt(0)
+        self._stopped = False
+        self._start_line = 0
+        self._topology: Optional[Topology] = None
+        self._taskflow = Taskflow(name)
+        self._build()
+        self.reset()
+
+    # ------------------------------------------------------------- properties
+    @property
+    def num_lines(self) -> int:
+        return self._num_lines
+
+    @property
+    def num_pipes(self) -> int:
+        return len(self._pipes)
+
+    @property
+    def num_tokens(self) -> int:
+        """Tokens fully admitted so far (monotone across runs)."""
+        return self._num_tokens
+
+    @property
+    def num_deferrals(self) -> int:
+        """Times a line finished a pipe but parked because its next slot was
+        still held (full SERIAL stage / wrap not yet released)."""
+        return self._num_deferrals.value()
+
+    @property
+    def taskflow(self) -> Taskflow:
+        return self._taskflow
+
+    # ------------------------------------------------------------------ build
+    def _build(self) -> None:
+        tf = self._taskflow
+        L, S = self._num_lines, len(self._pipes)
+        grid: List[List[Task]] = [
+            [tf.multi_condition(self._make_slot(l, s), name=f"pipe-L{l}S{s}",
+                                domain=self._pipes[s].domain)
+             for s in range(S)]
+            for l in range(L)]
+        for l in range(L):
+            for s in range(S):
+                # successor 0: same line, next pipe (last pipe wraps to re-
+                # admit the line); successor 1: next line, same pipe (SERIAL
+                # hand-off). Both edges are weak — the grid is one big cycle.
+                grid[l][s].precede(grid[l][(s + 1) % S], grid[(l + 1) % L][s])
+        start = tf.condition(lambda: self._start_line, name="pipeline-start")
+        start.precede(*[grid[l][0] for l in range(L)])
+        self._grid = grid
+
+    def _make_slot(self, l: int, s: int) -> Callable[[], tuple]:
+        L, S = self._num_lines, len(self._pipes)
+        pipe = self._pipes[s]
+        serial = pipe.kind is PipeType.SERIAL
+        counters = self._counters
+
+        def run_slot() -> tuple:
+            pf = self._pipeflows[l]
+            pf._pipe = s
+            if s == 0:
+                # stage 0 is SERIAL: exactly one line here at a time, so the
+                # token counter and stop flag need no synchronisation.
+                if self._stopped:
+                    return ()
+                pf._token = self._num_tokens
+                pf._stopped = False
+                self._invoke(pipe, pf)
+                if pf._stopped:
+                    self._stopped = True
+                    return ()  # break both chains: in-flight tokens drain
+                self._num_tokens += 1
+            else:
+                self._invoke(pipe, pf)
+            # Re-arm this slot for its next visit BEFORE releasing successors
+            # (the successor may wrap around and decrement us again). Steady
+            # state: pipe 0 waits on {SERIAL hand-off, line wrap} = 2; other
+            # SERIAL pipes on {previous token, line arrival} = 2; PARALLEL
+            # pipes only on the line's arrival = 1.
+            counters[l][s].set(2 if (s == 0 or serial) else 1)
+            rets = []
+            if serial and counters[(l + 1) % L][s].dec() == 0:
+                rets.append(1)
+            if counters[l][(s + 1) % S].dec() == 0:
+                rets.append(0)
+            else:
+                # deferred line: the next slot is still held (full SERIAL
+                # stage or un-wrapped line) — park without blocking a worker.
+                pf.num_deferrals += 1
+                self._num_deferrals.inc()
+            return tuple(rets)
+
+        run_slot.__name__ = f"pipe_{pipe.name}_L{l}S{s}"
+        return run_slot
+
+    def _invoke(self, pipe: Pipe, pf: Pipeflow) -> None:
+        """Stage dispatch; DataPipeline overrides to thread per-line buffers."""
+        pipe.fn(pf)
+
+    # -------------------------------------------------------------- execution
+    def reset(self) -> None:
+        """Re-arm join counters for a fresh run. Must not be called while a
+        topology of this pipeline is in flight. Token numbering continues:
+        the next token runs on line ``num_tokens % num_lines``."""
+        if self._topology is not None and not self._topology.done():
+            raise RuntimeError("cannot reset a running pipeline")
+        L, S = self._num_lines, len(self._pipes)
+        self._stopped = False
+        self._start_line = l0 = self._num_tokens % L
+        for l in range(L):
+            pf = self._pipeflows[l]
+            pf._pipe = 0
+            pf._stopped = False
+            ring = (l - l0) % L  # distance from the starting line
+            # first pipe: the start condition schedules line l0 directly
+            # (weak-edge bypass); every later line waits on the SERIAL
+            # hand-off alone — the wrap dependency cannot fire in round one.
+            self._counters[l][0].set(0 if ring == 0 else 1)
+            for s in range(1, S):
+                if ring == 0:
+                    v = 1  # the very first token has no SERIAL predecessor
+                else:
+                    v = 2 if self._pipes[s].kind is PipeType.SERIAL else 1
+                self._counters[l][s].set(v)
+
+    def run(self, executor: Executor,
+            on_complete: Optional[Callable[[Topology], None]] = None
+            ) -> Topology:
+        """Reset and submit one drain-to-completion run of the pipeline."""
+        self.reset()
+        self._topology = executor.run(self._taskflow, on_complete)
+        return self._topology

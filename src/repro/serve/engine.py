@@ -1,27 +1,37 @@
-"""Batched serving engine: prefill + jitted decode loop with KV cache.
+"""Batched serving engine: a 4-stage task-parallel generation pipeline.
 
 The engine packages the two compiled programs of the serving path —
-``prefill`` (prompt -> cache) and a ``decode_chunk`` DeviceFlow program
-that advances N tokens inside ONE ``lax.while_loop``-style XLA launch
-(the cudaFlow single-launch effect: host dispatch once per chunk, not per
-token) — and drives them from a request queue on the host domain.
+``prefill`` (prompt -> cache) and a ``decode_chunk`` program that advances N
+tokens inside ONE ``lax.scan`` XLA launch (the cudaFlow single-launch
+effect: host dispatch once per chunk, not per token) — and drives them
+through a :class:`repro.pipeline.DataPipeline` over the work-stealing
+executor:
 
-Greedy sampling (argmax) keeps tests deterministic; temperature sampling is
-a flag away.
+    admit (SERIAL)  -> pop the next length-group of requests, or stop
+    prefill (SERIAL)-> one compiled prefill launch for the group
+    decode (SERIAL, accel domain) -> chunked greedy decode to completion
+    complete (PARALLEL) -> host materialisation + scatter to request order
+
+Stages are SERIAL where they contend for the same compiled program / device,
+but *different length-groups occupy different stages simultaneously*: group
+B prefills while group A decodes — the overlap the hand-rolled host loop
+this replaces could not express. Greedy sampling (argmax) keeps tests
+deterministic; temperature sampling is a flag away.
 """
 from __future__ import annotations
 
-import queue
-import threading
+from collections import OrderedDict, deque
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
+from ..core import ACCEL, HOST, Executor
 from ..distributed.sharding import ShardCtx, use_shard_ctx
 from ..models import lm
+from ..pipeline import DataPipe, DataPipeline, PipeType
 
 __all__ = ["ServeEngine", "Request"]
 
@@ -36,11 +46,16 @@ class Request:
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params,
                  ctx: Optional[ShardCtx] = None,
-                 decode_chunk: int = 8):
+                 decode_chunk: int = 8,
+                 executor: Optional[Executor] = None,
+                 pipeline_lines: int = 3):
         self.cfg = cfg
         self.params = params
         self.ctx = ctx or ShardCtx(mesh=None)
         self.decode_chunk = decode_chunk
+        self.pipeline_lines = pipeline_lines
+        self._executor = executor
+        self._own_executor = False
         self._prefill = jax.jit(self._prefill_impl,
                                 static_argnames=("max_len",))
         self._decode_n = jax.jit(self._decode_n_impl,
@@ -65,28 +80,84 @@ class ServeEngine:
                                               None, length=n)
             return cache, toks.swapaxes(0, 1)  # (B, n)
 
+    # ------------------------------------------------------------- lifecycle
+    def _ensure_executor(self) -> Executor:
+        if self._executor is None:
+            self._executor = Executor(domains={HOST: 2, ACCEL: 1})
+            self._own_executor = True
+        return self._executor
+
+    def close(self) -> None:
+        if self._own_executor and self._executor is not None:
+            self._executor.shutdown()
+            self._executor = None
+            self._own_executor = False
+
+    def __enter__(self) -> "ServeEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
     # ----------------------------------------------------------------- serve
     def generate(self, prompts: List[Any], max_new: int) -> List[Any]:
-        """Batched greedy generation (equal-length prompts per batch; the
-        continuous-batching scheduler groups requests by length upstream)."""
+        """Pipelined greedy generation. Prompts of mixed lengths are grouped
+        by length (one compiled prefill shape per group) and the groups flow
+        through the 4-stage pipeline as scheduling tokens, so prefill of one
+        group overlaps decode of another. Results keep the input order."""
         import numpy as np
 
-        B = len(prompts)
-        S = len(prompts[0])
-        assert all(len(p) == S for p in prompts), \
-            "batch prompts must share a length (group upstream)"
-        toks = np.stack([np.asarray(p, np.int32) for p in prompts])
-        max_len = S + max_new + 1
-        logits, cache = self._prefill(self.params, jnp.asarray(toks),
-                                      max_len=max_len)
-        cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        outs = [np.asarray(cur)[:, None]]
-        remaining = max_new - 1
-        while remaining > 0:
-            n = min(self.decode_chunk, remaining)
-            cache, chunk = self._decode_n(self.params, cache, cur, n)
-            outs.append(np.asarray(chunk))
-            cur = chunk[:, -1]
-            remaining -= n
-        seqs = np.concatenate(outs, axis=1)
-        return [seqs[i] for i in range(B)]
+        if not prompts:
+            return []
+        groups: "OrderedDict[int, List[int]]" = OrderedDict()
+        arrs = [np.asarray(p, np.int32) for p in prompts]
+        for i, a in enumerate(arrs):
+            groups.setdefault(len(a), []).append(i)
+        work = deque(groups.values())
+        results: List[Any] = [None] * len(prompts)
+
+        def admit(pf):
+            if not work:
+                pf.stop()
+                return None
+            return work.popleft()
+
+        def prefill(pf, idxs):
+            toks = np.stack([arrs[i] for i in idxs])
+            max_len = toks.shape[1] + max_new + 1
+            logits, cache = self._prefill(self.params, jnp.asarray(toks),
+                                          max_len=max_len)
+            cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return idxs, cache, cur
+
+        def decode(pf, state):
+            idxs, cache, cur = state
+            chunks = [cur[:, None]]
+            remaining = max_new - 1
+            while remaining > 0:
+                n = min(self.decode_chunk, remaining)
+                cache, chunk = self._decode_n(self.params, cache, cur, n)
+                chunks.append(chunk)
+                cur = chunk[:, -1]
+                remaining -= n
+            return idxs, chunks
+
+        def complete(pf, state):
+            idxs, chunks = state
+            seqs = np.concatenate([np.asarray(c) for c in chunks], axis=1)
+            for row, i in enumerate(idxs):  # rows scatter to disjoint slots
+                results[i] = seqs[row]
+            return None
+
+        ex = self._ensure_executor()
+        decode_domain = ACCEL if ex.has_domain(ACCEL) else HOST
+        pl = DataPipeline(
+            max(1, min(len(work), self.pipeline_lines)),
+            DataPipe(PipeType.SERIAL, admit, name="admit"),
+            DataPipe(PipeType.SERIAL, prefill, name="prefill"),
+            DataPipe(PipeType.SERIAL, decode, name="decode",
+                     domain=decode_domain),
+            DataPipe(PipeType.PARALLEL, complete, name="complete"),
+            name="serve-generate")
+        pl.run(ex).wait()
+        return results

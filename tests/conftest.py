@@ -8,6 +8,10 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import pytest  # noqa: E402
 
 
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running system test")
+
+
 @pytest.fixture(scope="session")
 def executor():
     from repro.core import Executor

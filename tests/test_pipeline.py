@@ -1,0 +1,316 @@
+"""In-graph control-flow tests for the Pipeflow pipeline subsystem.
+
+Everything here runs on executor condition/multi-condition tasks only —
+deterministic seeds, no sleeps (event handshakes with generous timeouts
+prove concurrency without timing assumptions).
+"""
+import threading
+from collections import defaultdict
+
+import pytest
+
+from repro.core import ACCEL, Executor, Taskflow, TaskError
+from repro.pipeline import (DataPipe, DataPipeline, Pipe, Pipeflow, Pipeline,
+                            PipeType)
+
+
+def _counted_stop(n):
+    """First-pipe body admitting exactly n tokens."""
+    def admit(pf):
+        if pf.token >= n:
+            pf.stop()
+    return admit
+
+
+# --------------------------------------------------------------- token order
+def test_tokens_visit_stages_in_order(executor):
+    N, L, S = 23, 3, 4
+    lock = threading.Lock()
+    log = []
+
+    def mk(s):
+        def stage(pf):
+            if s == 0 and pf.token >= N:
+                pf.stop()
+                return
+            with lock:
+                log.append((s, pf.token, pf.line))
+        return stage
+
+    kinds = [PipeType.SERIAL, PipeType.PARALLEL, PipeType.SERIAL,
+             PipeType.PARALLEL]
+    pl = Pipeline(L, *[Pipe(kinds[s], mk(s)) for s in range(S)])
+    pl.run(executor).wait(30)
+    assert pl.num_tokens == N
+
+    per_stage = defaultdict(list)
+    per_token = defaultdict(list)
+    for s, tok, line in log:
+        per_stage[s].append(tok)
+        per_token[tok].append(s)
+        assert line == tok % L  # token t runs on line t % L
+    # SERIAL stages see tokens in strict submission order
+    assert per_stage[0] == list(range(N))
+    assert per_stage[2] == list(range(N))
+    # PARALLEL stages see every token exactly once (any order)
+    assert sorted(per_stage[1]) == list(range(N))
+    assert sorted(per_stage[3]) == list(range(N))
+    # every token visits stages in pipeline order
+    assert all(per_token[t] == [0, 1, 2, 3] for t in range(N))
+
+
+def test_serial_stage_admits_one_line_at_a_time(executor):
+    N, L = 17, 4
+    lock = threading.Lock()
+    active = defaultdict(int)
+    peak = defaultdict(int)
+
+    def mk(s):
+        def stage(pf):
+            if s == 0 and pf.token >= N:
+                pf.stop()
+                return
+            with lock:
+                active[s] += 1
+                peak[s] = max(peak[s], active[s])
+            with lock:
+                active[s] -= 1
+        return stage
+
+    pl = Pipeline(L, Pipe(PipeType.SERIAL, mk(0)),
+                  Pipe(PipeType.SERIAL, mk(1)),
+                  Pipe(PipeType.SERIAL, mk(2)))
+    pl.run(executor).wait(30)
+    assert all(peak[s] == 1 for s in range(3)), peak
+
+
+def test_parallel_stage_overlaps_lines(executor):
+    """Two tokens must be able to occupy a PARALLEL stage simultaneously:
+    each waits (bounded) for the other's arrival — deadlock-free only if the
+    scheduler really overlaps the lines."""
+    arrived = [threading.Event(), threading.Event()]
+    ok = []
+
+    def par(pf):
+        if pf.token < 2:
+            arrived[pf.token].set()
+            ok.append(arrived[1 - pf.token].wait(timeout=30))
+
+    pl = Pipeline(2, Pipe(PipeType.SERIAL, _counted_stop(4)),
+                  Pipe(PipeType.PARALLEL, par))
+    pl.run(executor).wait(30)
+    assert ok.count(True) == 2
+
+
+# ------------------------------------------------------------- stop protocol
+def test_stop_mid_stream_drains_in_flight():
+    """Observer-based exact accounting: N tokens × S stages + the stopping
+    admit + the start condition — nothing more runs after stop()."""
+    from repro.core import Observer
+
+    class Count(Observer):
+        def __init__(self):
+            self.n = 0
+            self.lock = threading.Lock()
+
+        def on_entry(self, worker_id, domain, task):
+            with self.lock:
+                self.n += 1
+
+    obs = Count()
+    ex = Executor(domains={"host": 4}, observer=obs)
+    N, L, S = 10, 3, 3
+    done = defaultdict(int)
+    lock = threading.Lock()
+
+    def mk(s):
+        def stage(pf):
+            if s == 0 and pf.token >= N:
+                pf.stop()
+                return
+            with lock:
+                done[pf.token] += 1
+        return stage
+
+    pl = Pipeline(L, *[Pipe(PipeType.SERIAL if s != 1 else PipeType.PARALLEL,
+                            mk(s)) for s in range(S)])
+    pl.run(ex).wait(30)
+    ex.shutdown(wait=True)
+    assert pl.num_tokens == N
+    # every admitted token drained through ALL stages
+    assert dict(done) == {t: S for t in range(N)}
+    assert obs.n == N * S + 2  # + stopping admit + start condition
+
+
+def test_stop_outside_first_pipe_raises(executor):
+    def bad(pf):
+        pf.stop()
+
+    pl = Pipeline(2, Pipe(PipeType.SERIAL, _counted_stop(3)),
+                  Pipe(PipeType.SERIAL, bad))
+    with pytest.raises(TaskError, match="first pipe"):
+        pl.run(executor).wait(30)
+
+
+# ----------------------------------------------------- zero dedicated threads
+def test_pipeline_runs_on_executor_workers_only(executor):
+    before = set(threading.enumerate())
+    names = set()
+    lock = threading.Lock()
+
+    def rec(pf):
+        if pf.token >= 12:
+            pf.stop()
+            return
+        with lock:
+            names.add(threading.current_thread().name)
+
+    pl = Pipeline(3, Pipe(PipeType.SERIAL, rec),
+                  Pipe(PipeType.PARALLEL, lambda pf: names.add(
+                      threading.current_thread().name)))
+    pl.run(executor).wait(30)
+    after = set(threading.enumerate())
+    assert names and all(n.startswith("repro-worker-") for n in names)
+    assert after - before == set()  # the pipeline spawned ZERO threads
+
+
+def test_pipe_domain_routes_to_accel_workers():
+    ex = Executor(domains={"host": 2, "accel": 1})
+    names = defaultdict(set)
+    lock = threading.Lock()
+
+    def mk(s):
+        def stage(pf):
+            if s == 0 and pf.token >= 6:
+                pf.stop()
+                return
+            with lock:
+                names[s].add(threading.current_thread().name)
+        return stage
+
+    pl = Pipeline(2, Pipe(PipeType.SERIAL, mk(0)),
+                  Pipe(PipeType.SERIAL, mk(1), domain=ACCEL))
+    pl.run(ex).wait(30)
+    ex.shutdown(wait=True)
+    assert all("accel" in n for n in names[1]) and names[1]
+    assert all("host" in n for n in names[0]) and names[0]
+
+
+# ------------------------------------------------------------- graph statics
+def test_static_cyclic_graph_shape():
+    pl = Pipeline(3, Pipe(PipeType.SERIAL, lambda pf: pf.stop()),
+                  Pipe(PipeType.PARALLEL, lambda pf: None))
+    # L*S multi-condition slots + 1 start condition, built ONCE
+    assert pl.taskflow.num_tasks() == 3 * 2 + 1
+    dump = pl.taskflow.dump()
+    assert "style=dashed" in dump  # every pipeline edge is weak (§3.4)
+    assert dump.count("diamond") == 3 * 2 + 1  # all condition-family tasks
+
+
+def test_pipeline_validation():
+    with pytest.raises(ValueError, match="at least one line"):
+        Pipeline(0, Pipe(PipeType.SERIAL, lambda pf: None))
+    with pytest.raises(ValueError, match="at least one pipe"):
+        Pipeline(1)
+    with pytest.raises(ValueError, match="first pipe must be SERIAL"):
+        Pipeline(1, Pipe(PipeType.PARALLEL, lambda pf: None))
+
+
+# ------------------------------------------------------------------- re-runs
+def test_rerun_continues_token_stream(executor):
+    seen = []
+    budget = [5]
+
+    def admit(pf):
+        if pf.token >= budget[0]:
+            pf.stop()
+            return
+        seen.append(pf.token)
+
+    pl = Pipeline(2, Pipe(PipeType.SERIAL, admit))
+    pl.run(executor).wait(30)
+    assert seen == list(range(5))
+    budget[0] = 12  # restart pattern: drained pipeline re-armed by run()
+    pl.run(executor).wait(30)
+    assert seen == list(range(12))
+    assert pl.num_tokens == 12
+
+
+def test_reset_while_running_raises(executor):
+    gate = threading.Event()
+
+    def admit(pf):
+        if pf.token >= 1:
+            pf.stop()
+            return
+        gate.wait(30)
+
+    pl = Pipeline(1, Pipe(PipeType.SERIAL, admit))
+    topo = pl.run(executor)
+    with pytest.raises(RuntimeError, match="running pipeline"):
+        pl.reset()
+    gate.set()
+    topo.wait(30)
+    pl.reset()  # fine once drained
+
+
+def test_executor_rejects_concurrent_resubmission(executor):
+    gate = threading.Event()
+    tf = Taskflow("twice")
+    tf.static(lambda: gate.wait(30))
+    topo = executor.run(tf)
+    with pytest.raises(RuntimeError, match="already running"):
+        executor.run(tf)
+    gate.set()
+    topo.wait(30)
+    executor.run(tf).wait(30)  # sequential re-run stays legal
+
+
+# -------------------------------------------------------------- data passing
+def test_data_pipeline_threads_buffers(executor):
+    outs = []
+
+    def produce(pf):
+        if pf.token >= 9:
+            pf.stop()
+            return None
+        return pf.token
+
+    dp = DataPipeline(3,
+                      DataPipe(PipeType.SERIAL, produce),
+                      DataPipe(PipeType.PARALLEL, lambda pf, x: x * x + pf.line),
+                      DataPipe(PipeType.SERIAL, lambda pf, x: outs.append(x)))
+    dp.run(executor).wait(30)
+    assert outs == [t * t + (t % 3) for t in range(9)]
+
+
+def test_prefetcher_get_before_start_self_arms(executor):
+    """get() on a never-started executor-mode prefetcher must arm the
+    pipeline itself instead of blocking until timeout."""
+    from repro.data.pipeline import DataConfig, Prefetcher, SyntheticLM
+
+    cfg = DataConfig(vocab_size=32, seq_len=4, global_batch=1, seed=2)
+    p = Prefetcher(SyntheticLM(cfg).batch_at, depth=2, executor=executor)
+    step, _ = p.get(timeout=30)  # no start(): get() pumps before blocking
+    assert step == 0
+    p.stop()
+
+
+def test_prefetcher_is_a_pipeline_client(executor):
+    from repro.data.pipeline import DataConfig, Prefetcher, SyntheticLM
+
+    cfg = DataConfig(vocab_size=64, seq_len=8, global_batch=2, seed=1)
+    src = SyntheticLM(cfg)
+    p = Prefetcher(src.batch_at, depth=3, executor=executor)
+    assert p.start()
+    steps = [p.get(timeout=30)[0] for _ in range(9)]
+    assert steps == list(range(9))  # PARALLEL staging, still in step order
+    p.stop()
+    # determinism vs the manual drive
+    q = Prefetcher(SyntheticLM(cfg).batch_at, depth=3)
+    assert q.produce_one()
+    import numpy as np
+    s0, b0 = q.get(timeout=30)
+    assert s0 == 0
+    np.testing.assert_array_equal(b0["tokens"],
+                                  SyntheticLM(cfg).batch_at(0)["tokens"])

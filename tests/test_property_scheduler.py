@@ -9,7 +9,11 @@
 """
 import threading
 
-from hypothesis import HealthCheck, given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional hypothesis dep")
+from hypothesis import HealthCheck, given, settings, strategies as st  # noqa: E402
 
 from repro.core import Executor, Taskflow
 
