@@ -12,6 +12,8 @@ fig21   — incremental timing propagation (paper Figure 21, §5.5)
 roofline— the dry-run roofline table (§Roofline), from results/dryrun.jsonl
 pipeline— task-parallel pipeline throughput vs hand-rolled loop
           (Pipeflow follow-up, arXiv:2202.00717); honors --quick
+serve   — continuous-batching engine under Poisson arrivals vs the
+          per-call baseline (tokens/sec, p50/p99 latency); honors --quick
 """
 from __future__ import annotations
 
@@ -31,7 +33,7 @@ def main() -> None:
     from . import (fig9_micro_random_dag, fig11_corun_throughput,
                    fig13_lsdnn, fig17_conditional_memory,
                    fig21_incremental_timing, pipeline_throughput,
-                   roofline_report, table2_task_overhead)
+                   roofline_report, serve_continuous, table2_task_overhead)
 
     suites = {
         "table2": lambda: table2_task_overhead.bench(200_000),
@@ -42,6 +44,7 @@ def main() -> None:
         "fig21": fig21_incremental_timing.bench,
         "roofline": roofline_report.bench,
         "pipeline": lambda: pipeline_throughput.bench(quick=args.quick),
+        "serve": lambda: serve_continuous.bench(quick=args.quick),
     }
     only = [s for s in args.only.split(",") if s]
     failures = 0

@@ -1,0 +1,138 @@
+# Continuous-batching serve benchmark (not a paper figure: the ROADMAP
+# production-serve goal). Poisson request arrivals against the resident
+# engine vs the per-call baseline.
+"""tokens/sec + latency percentiles under a Poisson arrival trace.
+
+Two modes over identical (seeded) traces:
+
+* ``continuous`` — one resident ServeEngine; each arrival is ``submit()``-ed
+  at its trace time and joins the running batch at the next chunk boundary.
+* ``per-call``   — the pre-continuous-batching behaviour: each arrival is
+  served by its own ``generate([prompt])`` call on a dedicated engine
+  (requests queue FIFO behind one another; no cross-request batching).
+
+Reported per mode: wall-clock tokens/sec and p50/p99 request latency
+(submit -> result). The derived column of the continuous rows shows the
+speedup over the per-call baseline.
+"""
+from __future__ import annotations
+
+import time
+from typing import Iterator, List, Tuple
+
+
+def _trace(rng, n: int, rate_hz: float, lens: Tuple[int, ...],
+           max_new: int):
+    """Poisson arrivals: (arrival_time, prompt, max_new) tuples."""
+    t = 0.0
+    out = []
+    for _ in range(n):
+        t += rng.exponential(1.0 / rate_hz)
+        size = int(rng.choice(lens))
+        prompt = rng.integers(0, 500, size=size).astype("int32")
+        out.append((t, prompt, max_new))
+    return out
+
+
+def _percentiles(lat: List[float]) -> Tuple[float, float]:
+    import numpy as np
+    return (float(np.percentile(lat, 50)), float(np.percentile(lat, 99)))
+
+
+def bench(quick: bool = False) -> Iterator[Tuple[str, str, str]]:
+    import jax
+    import numpy as np
+    from repro.configs import get_config
+    from repro.models import lm
+    from repro.serve.engine import ServeEngine
+
+    cfg = get_config("stablelm-1.6b").smoke()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    n_req = 8 if quick else 32
+    max_new = 8 if quick else 32
+    chunk = 4 if quick else 8
+    # arrival rate is chosen to SATURATE the server (offered load > service
+    # rate): continuous batching is a throughput/tail-latency mechanism for
+    # overlapping requests — at sub-saturation rates a single-stream CPU
+    # serves per-call requests back-to-back and nothing can be batched
+    rate = 200.0 if quick else 20.0
+    lens = (8, 12) if quick else (16, 24, 32)
+    rng = np.random.default_rng(0)
+    trace = _trace(rng, n_req, rate, lens, max_new)
+    total_tokens = n_req * max_new
+
+    # size the paged geometry to the trace: every decode row pays a gather
+    # over max_seq_len key positions, so an oversized table width taxes the
+    # whole batch (the same sizing a production deployment does)
+    bs = 8
+    max_seq = -(-(max(lens) + max_new) // bs) * bs
+
+    # ---------------------------------------------------------- continuous
+    with ServeEngine(cfg, params, decode_chunk=chunk, block_size=bs,
+                     max_seq_len=max_seq, kv_blocks=128) as eng:
+        # warm-up: one request per distinct prompt length compiles the paged
+        # chunk program + that length's (padded) prefill and scatter — the
+        # engine pads admission groups to max_admit, so group-size variance
+        # under Poisson arrivals triggers no further compilation
+        for s in lens:
+            warm = [p for _, p, _ in trace if len(p) == s][:1]
+            if warm:
+                eng.generate(warm, max_new=chunk + 1)
+        for k in eng.stats:
+            eng.stats[k] = 0
+        t0 = time.perf_counter()
+        reqs = []
+        for at, prompt, mn in trace:
+            now = time.perf_counter() - t0
+            if now < at:
+                time.sleep(at - now)
+            reqs.append((at, eng.submit(prompt, mn)))
+        lat = []
+        for at, r in reqs:
+            eng.result(r, timeout=600.0)
+            # latency from NOMINAL arrival to completion (includes any
+            # admission queueing — same clock the baseline is held to)
+            lat.append(r.finished_at - t0 - at)
+        cont_dt = time.perf_counter() - t0
+        cont_p50, cont_p99 = _percentiles(lat)
+        stats = dict(eng.stats)
+
+    # ------------------------------------------------------------ per-call
+    with ServeEngine(cfg, params, decode_chunk=chunk) as base:
+        # warm the GROUPED path the baseline times (its prefill max_len and
+        # contiguous chunk program differ from the paged engine's)
+        for s in lens:
+            warm = [p for _, p, _ in trace if len(p) == s][:1]
+            if warm:
+                base._generate_grouped(warm, max_new)
+        t0 = time.perf_counter()
+        lat = []
+        for at, prompt, mn in trace:
+            now = time.perf_counter() - t0
+            if now < at:
+                time.sleep(at - now)
+            base._generate_grouped([prompt], mn)  # one call per request
+            # arrival-to-completion: a request that arrived while earlier
+            # calls were still running has been queueing the whole time
+            lat.append(time.perf_counter() - t0 - at)
+        base_dt = time.perf_counter() - t0
+        base_p50, base_p99 = _percentiles(lat)
+
+    yield ("serve_continuous_tok_per_s", f"{total_tokens/cont_dt:.1f}",
+           f"{base_dt/cont_dt:.2f}x_per_call")
+    yield ("serve_continuous_p50_ms", f"{cont_p50*1e3:.0f}",
+           f"{base_p50/max(cont_p50,1e-9):.2f}x_per_call")
+    yield ("serve_continuous_p99_ms", f"{cont_p99*1e3:.0f}",
+           f"{base_p99/max(cont_p99,1e-9):.2f}x_per_call")
+    yield ("serve_percall_tok_per_s", f"{total_tokens/base_dt:.1f}", "")
+    yield ("serve_percall_p50_ms", f"{base_p50*1e3:.0f}", "")
+    yield ("serve_percall_p99_ms", f"{base_p99*1e3:.0f}", "")
+    yield ("serve_continuous_admits", str(stats["admitted"]),
+           f"{stats['prefills']}_prefill_launches")
+    yield ("serve_continuous_decode_cycles", str(stats["decode_cycles"]),
+           f"{stats['admit_parks']}_admit_parks")
+
+
+if __name__ == "__main__":
+    for name, val, derived in bench(quick=True):
+        print(f"{name},{val},{derived}")

@@ -1,7 +1,13 @@
-"""Batched serving demo: compiled prefill + chunked decode (N tokens per
-XLA launch — the cudaFlow single-launch effect), driven through the
-4-stage generation pipeline (admit -> prefill -> decode -> complete) so
-different prompt-length groups overlap prefill and decode.
+"""Continuous-batching serve demo.
+
+One RESIDENT admit->prefill->decode->complete pipeline serves every request
+for the life of the engine: ``submit()`` enqueues a prompt and returns a
+future; the admit stage pulls length-bucketed groups from the queue at
+chunk boundaries; decode advances ALL running sequences one compiled chunk
+per cycle (N tokens per XLA launch — the cudaFlow single-launch effect);
+finished sequences retire individually without draining the pipeline. While
+request A is mid-decode, request B's prefill runs in the pipeline's prefill
+stage — the overlap continuous batching is about.
 
     PYTHONPATH=src python examples/serve_lm.py --arch qwen3-14b --batch 8
 """
@@ -27,36 +33,55 @@ def main() -> None:
 
     cfg = get_config(args.arch).smoke()
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
-    eng = ServeEngine(cfg, params, decode_chunk=args.decode_chunk)
+    eng = ServeEngine(cfg, params, decode_chunk=args.decode_chunk,
+                      record_stages=True)
 
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab_size,
                             size=args.prompt_len).astype(np.int32)
                for _ in range(args.batch)]
-    # warm-up compiles prefill + decode-chunk programs
+    # warm-up compiles the paged chunk program + the prefill shapes of the
+    # admission group sizes the timed bursts will form
     eng.generate(prompts[:1] * len(prompts), max_new=args.decode_chunk + 1)
 
+    # one burst through the resident pipeline (generate() is just
+    # submit-all + gather: the compatibility shim over the request queue)
     t0 = time.time()
     outs = eng.generate(prompts, max_new=args.max_new)
     dt = time.time() - t0
     total = args.batch * args.max_new
-    launches = 1 + (args.max_new - 1 + args.decode_chunk - 1) \
-        // args.decode_chunk
-    print(f"{cfg.name}: {total} tokens in {dt:.2f}s "
-          f"({total/dt:.1f} tok/s) using ~{launches} device launches "
-          f"(chunked decode)")
+    print(f"{cfg.name}: {total} tokens in {dt:.2f}s ({total/dt:.1f} tok/s) "
+          f"via the resident pipeline "
+          f"({eng.stats['decode_cycles']} chunked decode launches)")
     print("first sample:", outs[0][:24].tolist())
 
-    # mixed prompt lengths: groups pipeline through prefill/decode stages
+    # mixed prompt lengths: the scheduler buckets by length, admits one
+    # bucket per cycle, and the buckets SHARE the decode batch — request B
+    # prefills while request A decodes, then both advance in one chunk
     mixed = prompts[: args.batch // 2] + [
         rng.integers(0, cfg.vocab_size,
                      size=args.prompt_len // 2).astype(np.int32)
         for _ in range(args.batch - args.batch // 2)]
+    before = dict(eng.stats)          # stats are engine-lifetime cumulative
+    n_events = len(eng.stage_log)
     t0 = time.time()
     outs = eng.generate(mixed, max_new=args.max_new)
+    kinds = [s for s, _, _, _ in eng.stage_log[n_events:]]
     print(f"mixed-length ({args.prompt_len} and {args.prompt_len//2}): "
-          f"{total} tokens in {time.time()-t0:.2f}s, "
-          f"{len(set(len(p) for p in mixed))} groups pipelined")
+          f"{total} tokens in {time.time()-t0:.2f}s; "
+          f"{eng.stats['admitted'] - before['admitted']} admissions over "
+          f"{eng.stats['prefills'] - before['prefills']} prefill launches, "
+          f"{eng.stats['retired'] - before['retired']} individual "
+          f"retirements, {kinds.count('pump')} pump cycles")
+
+    # mid-stream submission: A decodes for a while, B joins halfway through
+    a = eng.submit(prompts[0], max_new=args.max_new)
+    time.sleep(0.05)
+    b = eng.submit(prompts[1][: args.prompt_len // 2], max_new=8)
+    ra, rb = eng.result(a), eng.result(b)
+    print(f"mid-stream join: A got {ra.shape[0]} tokens, B got "
+          f"{rb.shape[0]} tokens from the same pipeline run "
+          f"(admit parks: {eng.stats['admit_parks']})")
     eng.close()
 
 

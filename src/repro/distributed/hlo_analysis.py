@@ -127,10 +127,15 @@ def _parse_computations(text: str) -> Dict[str, List[_Instr]]:
     return comps
 
 
+_OPERAND_NAME_RE = re.compile(r"%([\w\.\-]+)")
+
+
 def _operand_names(rest: str) -> List[str]:
-    # operands are the %names inside the first balanced paren group
+    # Operands are the %names inside the first balanced paren group. Each
+    # entry is printed as ``f32[128,128]{1,0} %name`` (type prefix first), so
+    # extract the %-prefixed identifiers in order; type/layout text contains
+    # no ``%``, and attributes (metadata, calls=...) sit past the close paren.
     depth = 1
-    out = []
     token = ""
     for ch in rest:
         if ch == "(":
@@ -140,14 +145,11 @@ def _operand_names(rest: str) -> List[str]:
             if depth == 0:
                 break
         token += ch
-    for part in token.split(","):
-        part = part.strip()
-        if part.startswith("%"):
-            out.append(part[1:])
-    return out
+    return _OPERAND_NAME_RE.findall(token)
 
 
 _CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_KNOWN_TRIP_RE = re.compile(r'"known_trip_count"\s*:\s*\{\s*"n"\s*:\s*"(\d+)"')
 _WHILE_RE = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
 _BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
 _CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
@@ -328,7 +330,12 @@ def _comp_cost(name: str, comps: Dict[str, List[_Instr]],
             m = _WHILE_RE.search(ins.rest)
             if m:
                 cond_name, body_name = m.group(1), m.group(2)
-                trip = _trip_count(cond_name, comps)
+                # XLA stamps scan-lowered loops with an exact trip count in
+                # the backend config — authoritative; fall back to the
+                # condition-region bound heuristic otherwise.
+                kt = _KNOWN_TRIP_RE.search(ins.rest)
+                trip = int(kt.group(1)) if kt else \
+                    _trip_count(cond_name, comps)
                 if trip is None:
                     trip = 1
                     cost.unknown_trip_loops += 1

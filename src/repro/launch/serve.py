@@ -1,8 +1,13 @@
-"""Serving launcher: batched greedy generation with the compiled
-prefill + chunked-decode programs.
+"""Serving launcher: the resident continuous-batching engine.
+
+Requests are submitted one by one against the long-running pipeline
+(``submit()``/``result()``); with ``--stagger`` the submissions arrive
+spaced out, so later requests join the batch while earlier ones are
+mid-decode — the continuous-batching path. ``--per-call`` keeps the old
+batch-call shim (``generate()``) for comparison.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b \
-        --preset smoke --batch 4 --prompt-len 32 --max-new 32
+        --preset smoke --batch 4 --prompt-len 32 --max-new 32 --stagger 0.05
 """
 from __future__ import annotations
 
@@ -25,6 +30,13 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--decode-chunk", type=int, default=8)
+    ap.add_argument("--kv-blocks", type=int, default=128)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--stagger", type=float, default=0.0,
+                    help="seconds between submissions (0 = all at once)")
+    ap.add_argument("--per-call", action="store_true",
+                    help="use the generate() batch-call shim instead of "
+                         "submit/result")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -35,17 +47,31 @@ def main() -> None:
         print(f"note: {cfg.name} uses a stub frontend; serving the text "
               "backbone only")
     params = lm.init_params(cfg, jax.random.PRNGKey(args.seed))
-    eng = ServeEngine(cfg, params, decode_chunk=args.decode_chunk)
     rng = np.random.default_rng(args.seed)
     prompts = [rng.integers(0, cfg.vocab_size, size=args.prompt_len)
                .astype(np.int32) for _ in range(args.batch)]
-    t0 = time.time()
-    outs = eng.generate(prompts, max_new=args.max_new)
-    dt = time.time() - t0
     total_new = args.batch * args.max_new
-    print(f"{cfg.name}: generated {total_new} tokens in {dt:.2f}s "
-          f"({total_new/dt:.1f} tok/s, batch={args.batch})")
-    print("sample:", outs[0][:16].tolist())
+
+    with ServeEngine(cfg, params, decode_chunk=args.decode_chunk,
+                     kv_blocks=args.kv_blocks,
+                     block_size=args.block_size) as eng:
+        t0 = time.time()
+        if args.per_call or not eng.paged:
+            outs = eng.generate(prompts, max_new=args.max_new)
+        else:
+            reqs = []
+            for p in prompts:
+                reqs.append(eng.submit(p, max_new=args.max_new))
+                if args.stagger:
+                    time.sleep(args.stagger)
+            outs = [eng.result(r, timeout=600.0) for r in reqs]
+        dt = time.time() - t0
+        print(f"{cfg.name}: generated {total_new} tokens in {dt:.2f}s "
+              f"({total_new/dt:.1f} tok/s, batch={args.batch}, "
+              f"mode={'per-call' if args.per_call or not eng.paged else 'continuous'})")
+        if eng.paged:
+            print("engine stats:", eng.stats)
+        print("sample:", outs[0][:16].tolist())
 
 
 if __name__ == "__main__":

@@ -25,7 +25,8 @@ from ..configs.base import ModelConfig
 from ..distributed.sharding import constrain
 from .layers import dense_init, dtype_of, rms_norm, rope
 
-__all__ = ["init_attention", "attention", "decode_attention", "NEG_INF"]
+__all__ = ["init_attention", "attention", "decode_attention",
+           "paged_decode_attention", "NEG_INF"]
 
 NEG_INF = -2.0 ** 30  # large-but-finite: keeps bf16 softmax NaN-free
 
@@ -166,6 +167,47 @@ def attention(p, x, cfg: ModelConfig, positions,
     if return_kv:
         return y, (k, v)
     return y
+
+
+def paged_decode_attention(p, x, cfg: ModelConfig, pool_k, pool_v, tables,
+                           pos, active):
+    """One-token decode against ONE layer's paged KV pool (the
+    paged-attention read path of the continuous-batching engine; the
+    contiguous :func:`decode_attention` stays as the reference).
+
+    x: (B, 1, D); pool_[kv]: (N, KV, block, hd) — this layer's pages;
+    tables: (B, max_blocks) int32 block tables (tail entries point at the
+    sink block); pos: (B,) int32 PER-ROW positions — rows of a continuously
+    batched decode sit at different sequence lengths, which is exactly what
+    the contiguous cache's single scalar ``pos`` cannot express; active:
+    (B,) bool — masked rows write their KV to the sink and their output is
+    discarded by the engine. Returns (y (B, 1, D), pool_k, pool_v).
+    """
+    from ..serve.kvcache import append_kv, gather_pages
+
+    B, _, D = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    G = H // KV
+    cdt = dtype_of(cfg.compute_dtype)
+    q, k, v = _project_qkv(p, x, cfg, pos[:, None])
+    pool_k = append_kv(pool_k, k[:, 0], tables, pos, active)
+    pool_v = append_kv(pool_v, v[:, 0], tables, pos, active)
+    ks = gather_pages(pool_k, tables)            # (B, KV, T, hd), T=mb*block
+    vs = gather_pages(pool_v, tables)
+    T = ks.shape[2]
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgh,bksh->bkgs", qg, ks,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    kpos = jnp.arange(T, dtype=jnp.int32)
+    s = jnp.where((kpos[None, :] <= pos[:, None])[:, None, None, :], s,
+                  NEG_INF)
+    pmax = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - pmax)
+    probs = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(vs.dtype)
+    out = jnp.einsum("bkgs,bksh->bkgh", probs, vs)
+    y = jnp.einsum("bh,hd->bd", out.reshape(B, H * hd).astype(cdt),
+                   p["wo"].astype(cdt))
+    return y[:, None, :], pool_k, pool_v
 
 
 def decode_attention(p, x, cfg: ModelConfig, cache_k, cache_v, pos):

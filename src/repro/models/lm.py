@@ -38,7 +38,7 @@ from .mlp import init_mlp, mlp
 from .moe import init_moe, moe_layer
 
 __all__ = ["init_params", "forward", "loss_fn", "init_cache", "prefill",
-           "decode_step"]
+           "decode_step", "decode_step_paged"]
 
 
 # ------------------------------------------------------------------ init
@@ -262,14 +262,24 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
     return cache
 
 
-def _block_decode(p, x1, cfg: ModelConfig, layer_cache, pos):
-    """One layer, one token. x1: (B, D). Returns (x1, new_layer_cache)."""
+def _block_decode(p, x1, cfg: ModelConfig, layer_cache, pos, attn_fn=None):
+    """One layer, one token. x1: (B, D). Returns (x1, new_layer_cache).
+
+    ``attn_fn(p, h1, layer_cache) -> (y, new_layer_cache)`` swaps the
+    attention/cache implementation (the paged path passes one reading
+    through a block table); everything around it — ln1, residuals, ln2,
+    MoE/MLP — is shared, so the paged and contiguous decode paths cannot
+    structurally diverge."""
     h = rms_norm(x1, p["ln1"], cfg.rms_eps)
     if cfg.ssm:
         y, st = mamba_step(p, h, cfg, layer_cache)
         return x1 + y, st
-    ck, cv = layer_cache
-    y, ck, cv = decode_attention(p, h[:, None, :], cfg, ck, cv, pos)
+    if attn_fn is None:
+        ck, cv = layer_cache
+        y, ck, cv = decode_attention(p, h[:, None, :], cfg, ck, cv, pos)
+        layer_cache = (ck, cv)
+    else:
+        y, layer_cache = attn_fn(p, h[:, None, :], layer_cache)
     x1 = x1 + y[:, 0]
     h2 = rms_norm(x1, p["ln2"], cfg.rms_eps)
     if cfg.moe:
@@ -277,7 +287,7 @@ def _block_decode(p, x1, cfg: ModelConfig, layer_cache, pos):
         x1 = x1 + y2[:, 0]
     else:
         x1 = x1 + mlp(p, h2[:, None, :], cfg)[:, 0]
-    return x1, (ck, cv)
+    return x1, layer_cache
 
 
 def _shared_block_decode(p, x1, x0, cfg, ck, cv, pos):
@@ -355,6 +365,58 @@ def decode_step(cfg: ModelConfig, params, cache, token
                         preferred_element_type=jnp.float32)
     new_cache["pos"] = pos + 1
     return logits, new_cache
+
+
+def decode_step_paged(cfg: ModelConfig, params, pool_k, pool_v, tables,
+                      lengths, token, active
+                      ) -> Tuple[jnp.ndarray, Any, Any]:
+    """One decode step through a paged KV cache (continuous batching).
+
+    Unlike :func:`decode_step`, every batch row carries its OWN position:
+    ``lengths[b]`` is where row ``b``'s next KV entry lands and how far its
+    causal mask extends — rows admitted at different times decode side by
+    side. The pool layout and gather/scatter helpers live in
+    :mod:`repro.serve.kvcache`; the contiguous path above remains the
+    reference implementation (the two agree token-for-token under greedy
+    decoding, see ``tests/test_serve_continuous.py``).
+
+    pool_[kv]: (L, N, KV, block, hd); tables: (B, max_blocks) int32;
+    lengths: (B,) int32; token: (B,) int32; active: (B,) bool (inactive
+    rows write KV to the sink block and their logits are discarded).
+    Returns (logits (B, padded_vocab) f32, pool_k, pool_v).
+    Attention architectures only — SSM/hybrid states are O(1) per sequence
+    and take the contiguous path.
+    """
+    if cfg.ssm or cfg.hybrid_attn_every:
+        raise ValueError(f"{cfg.name}: paged decode requires a pure "
+                         "attention architecture")
+    from .attention import paged_decode_attention
+
+    cdt = dtype_of(cfg.compute_dtype)
+    pos = lengths
+    x1 = jnp.take(params["embed"], token, axis=0).astype(cdt)
+    if cfg.pos_emb == "sinusoidal":
+        x1 = x1 + sinusoidal_positions(pos, cfg.d_model).astype(cdt)
+
+    def paged_attn(lp, h1, layer_cache):
+        pk, pv = layer_cache
+        y, pk, pv = paged_decode_attention(lp, h1, cfg, pk, pv,
+                                           tables, pos, active)
+        return y, (pk, pv)
+
+    def layer(c, l_xs):
+        lp, pk, pv = l_xs
+        c, (pk, pv) = _block_decode(lp, c, cfg, (pk, pv), pos,
+                                    attn_fn=paged_attn)
+        return c, (pk, pv)
+
+    x1, (pool_k, pool_v) = jax.lax.scan(
+        layer, x1, (params["blocks"], pool_k, pool_v))
+    x1 = rms_norm(x1, params["final_norm"], cfg.rms_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bd,dv->bv", x1, head.astype(cdt),
+                        preferred_element_type=jnp.float32)
+    return logits, pool_k, pool_v
 
 
 def prefill(cfg: ModelConfig, params, tokens, max_len: int = 0,

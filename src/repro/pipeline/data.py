@@ -37,7 +37,7 @@ class DataPipeline(Pipeline):
     def _invoke(self, pipe: Pipe, pf: Pipeflow) -> None:
         if pf.pipe == 0:
             out = pipe.fn(pf)
-            if not pf._stopped:
+            if not pf._stopped and pf._defer_on is None:
                 self._buffers[pf.line] = out
         else:
             self._buffers[pf.line] = pipe.fn(pf, self._buffers[pf.line])

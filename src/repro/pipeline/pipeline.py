@@ -25,6 +25,17 @@ deferred lines              a line whose next SERIAL pipe is still occupied
                             parks (its task simply is not scheduled) instead
                             of blocking a worker; counted in
                             :attr:`Pipeline.num_deferrals`
+``pf.defer(t)``             :meth:`Pipeflow.defer` — token-level deferral
+                            (§deferred pipelines): the current token parks
+                            at the first pipe until token ``t`` completes
+                            the last pipe; in-flight tokens drain meanwhile
+                            and no worker blocks. Admission pauses while
+                            parked (mint order stays line-round-robin —
+                            full Pipeflow token reordering needs dynamic
+                            token->line binding, out of scope for the
+                            static grid). Resume accounting in
+                            :attr:`Pipeline.num_token_deferrals` /
+                            :attr:`Pipeline.num_resumes`
 ``tf::DataPipeline``        :class:`repro.pipeline.data.DataPipeline` —
                             per-line buffers threaded between stages, no locks
 ==========================  ===================================================
@@ -48,7 +59,8 @@ stop signal has drained every in-flight token.
 from __future__ import annotations
 
 import enum
-from typing import Callable, List, Optional
+import threading
+from typing import Callable, Dict, List, Optional
 
 from ..core.atomic import AtomicInt
 from ..core.executor import Executor, Topology
@@ -78,13 +90,15 @@ class Pipe:
 class Pipeflow:
     """Per-line view handed to every pipe callable (paper's ``tf::Pipeflow``)."""
 
-    __slots__ = ("_line", "_pipe", "_token", "_stopped", "num_deferrals")
+    __slots__ = ("_line", "_pipe", "_token", "_stopped", "_defer_on",
+                 "num_deferrals")
 
     def __init__(self, line: int) -> None:
         self._line = line
         self._pipe = 0
         self._token = 0
         self._stopped = False
+        self._defer_on: Optional[int] = None
         self.num_deferrals = 0
 
     @property
@@ -108,6 +122,33 @@ class Pipeflow:
                 "Pipeflow.stop() can only be called from the first pipe "
                 f"(called from pipe {self._pipe})")
         self._stopped = True
+
+    def defer(self, token: int) -> None:
+        """Token-level deferral (Pipeflow §deferred pipelines): park THIS
+        token until ``token`` has fully completed the last pipe, then re-run
+        the first pipe body with the same token number.
+
+        Only legal at the first pipe — the admission point. While parked,
+        admission PAUSES (the parked token holds the SERIAL first pipe; the
+        static grid's round-robin hand-off protocol ties mint order to
+        lines, so later tokens do not overtake) but every in-flight token
+        keeps draining its remaining stages, and no worker blocks — the
+        park is pure scheduling state, which is what makes this the
+        spin-free back-pressure primitive for admission control. Deferring
+        on an already-completed token re-runs the stage body immediately.
+
+        ``token`` must already have been minted (``token < num_tokens``;
+        the current token mints only when its first pipe succeeds);
+        deferring on a future token could wedge the drain protocol, so it
+        raises.
+        """
+        if self._pipe != 0:
+            raise RuntimeError(
+                "Pipeflow.defer() can only be called from the first pipe "
+                f"(called from pipe {self._pipe})")
+        if token == self._token:
+            raise ValueError(f"token {token} cannot defer on itself")
+        self._defer_on = token
 
 
 class Pipeline:
@@ -145,6 +186,15 @@ class Pipeline:
         self._stopped = False
         self._start_line = 0
         self._topology: Optional[Topology] = None
+        self._executor: Optional[Executor] = None
+        # token-level deferral state (Pipeflow §deferred pipelines)
+        self._defer_lock = threading.Lock()
+        self._parked = [False] * num_lines
+        self._deferred_waiters: Dict[int, List[int]] = {}  # dep -> lines
+        self._completed_watermark = -1     # tokens <= this have completed
+        self._completed_set: set = set()   # out-of-order completions
+        self._num_token_deferrals = AtomicInt(0)
+        self._num_resumes = AtomicInt(0)
         self._taskflow = Taskflow(name)
         self._build()
         self.reset()
@@ -168,6 +218,21 @@ class Pipeline:
         """Times a line finished a pipe but parked because its next slot was
         still held (full SERIAL stage / wrap not yet released)."""
         return self._num_deferrals.value()
+
+    @property
+    def num_token_deferrals(self) -> int:
+        """Times a first-pipe body called :meth:`Pipeflow.defer` (including
+        deferrals satisfied immediately because the dependency had already
+        completed)."""
+        return self._num_token_deferrals.value()
+
+    @property
+    def num_resumes(self) -> int:
+        """Times a deferred token re-ran its first pipe after its dependency
+        completed. Once the pipeline has drained this equals
+        :attr:`num_token_deferrals` — every deferral resumes exactly once
+        (immediately, when the dependency had already completed)."""
+        return self._num_resumes.value()
 
     @property
     def taskflow(self) -> Taskflow:
@@ -202,19 +267,54 @@ class Pipeline:
             pf = self._pipeflows[l]
             pf._pipe = s
             if s == 0:
-                # stage 0 is SERIAL: exactly one line here at a time, so the
-                # token counter and stop flag need no synchronisation.
+                # stage 0 is SERIAL: exactly one line here at a time (a
+                # parked line HOLDS the stage — admission pauses), so the
+                # token counter, stop flag and parked flag need no
+                # synchronisation.
                 if self._stopped:
+                    self._parked[l] = False  # defensive: dropped by a drain
                     return ()
+                if self._parked[l]:
+                    self._parked[l] = False
+                    self._num_resumes.inc()
                 pf._token = self._num_tokens
                 pf._stopped = False
-                self._invoke(pipe, pf)
-                if pf._stopped:
-                    self._stopped = True
-                    return ()  # break both chains: in-flight tokens drain
+                pf._defer_on = None
+                while True:
+                    self._invoke(pipe, pf)
+                    if pf._stopped:
+                        self._stopped = True
+                        return ()  # break both chains: in-flight drain
+                    dep = pf._defer_on
+                    if dep is None:
+                        break
+                    pf._defer_on = None
+                    if dep >= self._num_tokens:
+                        raise ValueError(
+                            f"token {pf._token} deferred on un-minted "
+                            f"token {dep}")
+                    self._num_token_deferrals.inc()
+                    if not self._register_deferral(l, dep):
+                        # dependency already completed: satisfied
+                        # immediately — re-run the stage body now
+                        self._num_resumes.inc()
+                        continue
+                    # Park: release NOTHING. The token is not minted, the
+                    # SERIAL hand-off chain pauses at this line (no token
+                    # overtakes — the static grid's round-robin hand-off
+                    # protocol requires mint order to follow lines), and
+                    # in-flight tokens keep draining their stages. The
+                    # dependency's last pipe re-schedules this slot.
+                    self._parked[l] = True
+                    return ()
                 self._num_tokens += 1
             else:
                 self._invoke(pipe, pf)
+            if s == S - 1:
+                # token fully done: wake a deferred token waiting on it.
+                # Done BEFORE this task's pending-tally so the topology
+                # cannot finalize between the wake and the resume running.
+                self._complete_token(pf._token)
             # Re-arm this slot for its next visit BEFORE releasing successors
             # (the successor may wrap around and decrement us again). Steady
             # state: pipe 0 waits on {SERIAL hand-off, line wrap} = 2; other
@@ -240,6 +340,38 @@ class Pipeline:
         """Stage dispatch; DataPipeline overrides to thread per-line buffers."""
         pipe.fn(pf)
 
+    # ------------------------------------------------- token-level deferral
+    def _is_completed(self, token: int) -> bool:
+        return token <= self._completed_watermark or \
+            token in self._completed_set
+
+    def _register_deferral(self, line: int, dep: int) -> bool:
+        """Park ``line`` until ``dep`` completes. False if ``dep`` already
+        completed (the deferral is satisfied immediately)."""
+        with self._defer_lock:
+            if self._is_completed(dep):
+                return False
+            if self._executor is None:
+                raise RuntimeError(
+                    "Pipeflow.defer() needs the pipeline to be driven via "
+                    "Pipeline.run(executor) so resumes can be scheduled")
+            self._deferred_waiters.setdefault(dep, []).append(line)
+            return True
+
+    def _complete_token(self, token: int) -> None:
+        """Mark ``token`` complete and reschedule any parked first-pipe slots
+        that deferred on it (the weak-edge bypass: scheduled directly, join
+        counters untouched). Called inside a slot's execution, so the
+        topology's pending count cannot reach zero before the resumes land."""
+        with self._defer_lock:
+            self._completed_set.add(token)
+            while self._completed_watermark + 1 in self._completed_set:
+                self._completed_watermark += 1
+                self._completed_set.discard(self._completed_watermark)
+            waiters = self._deferred_waiters.pop(token, ())
+        for line in waiters:
+            self._executor._schedule(None, self._grid[line][0]._node)
+
     # -------------------------------------------------------------- execution
     def reset(self) -> None:
         """Re-arm join counters for a fresh run. Must not be called while a
@@ -249,6 +381,13 @@ class Pipeline:
             raise RuntimeError("cannot reset a running pipeline")
         L, S = self._num_lines, len(self._pipes)
         self._stopped = False
+        # a drained run has completed (or dropped) every minted token; fold
+        # the completion bookkeeping into the watermark and clear parked state
+        with self._defer_lock:
+            self._completed_watermark = self._num_tokens - 1
+            self._completed_set.clear()
+            self._deferred_waiters.clear()
+        self._parked = [False] * L
         self._start_line = l0 = self._num_tokens % L
         for l in range(L):
             pf = self._pipeflows[l]
@@ -266,10 +405,22 @@ class Pipeline:
                     v = 2 if self._pipes[s].kind is PipeType.SERIAL else 1
                 self._counters[l][s].set(v)
 
+    def idle(self) -> bool:
+        """True when no topology of this pipeline is in flight — the drained
+        state in which :meth:`run` may re-arm it without rebuilding."""
+        return self._topology is None or self._topology.done()
+
     def run(self, executor: Executor,
             on_complete: Optional[Callable[[Topology], None]] = None
             ) -> Topology:
-        """Reset and submit one drain-to-completion run of the pipeline."""
+        """Reset and submit one drain-to-completion run of the pipeline.
+
+        The static grid is built once in ``__init__``; ``run`` only re-arms
+        join counters (:meth:`reset`) and resubmits — the re-arm-without-
+        rebuild path long-running clients (the serve engine, the prefetcher)
+        use to keep one resident pipeline alive across drain/refill cycles.
+        """
         self.reset()
+        self._executor = executor
         self._topology = executor.run(self._taskflow, on_complete)
         return self._topology

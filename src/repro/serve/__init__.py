@@ -1,0 +1,14 @@
+"""Continuous-batching serve subsystem.
+
+* :mod:`.engine`    — the resident admit→prefill→decode→complete pipeline
+  (``submit()`` / ``result()``; ``generate()`` compatibility shim);
+* :mod:`.scheduler` — request queue + length-bucketed admission control;
+* :mod:`.kvcache`   — paged KV-cache pool (block allocator + jit-able
+  gather/scatter through per-sequence block tables).
+"""
+from .engine import ServeEngine
+from .kvcache import BlockPool, init_kv_pool
+from .scheduler import Scheduler, ServeRequest
+
+__all__ = ["ServeEngine", "ServeRequest", "Scheduler", "BlockPool",
+           "init_kv_pool"]

@@ -1,0 +1,216 @@
+"""Paged KV-cache pool for continuous-batching serve.
+
+The decode cache stops being one contiguous ``(L, B, KV, S_max, hd)`` tensor
+per call and becomes a *pool* of fixed-size blocks plus per-sequence block
+tables — the paged-attention layout. Sequences of different lengths share
+the pool, join and leave the running batch at chunk boundaries, and free
+their blocks the moment they retire, so KV memory is bounded by the pool
+size instead of ``max_batch * max_len``.
+
+Two halves, deliberately separated:
+
+* :class:`BlockPool` — the HOST-side allocator: a free list of block ids
+  with ``alloc`` / ``free`` / ``fragmentation`` / ``defragment``. Thread-safe
+  (admission allocates from the pipeline's SERIAL admit stage while
+  retirement frees from the complete stage). Block id 0 is a reserved *sink*:
+  it is never handed out, and jit-compiled decode redirects the KV writes of
+  inactive batch rows into it, so masked rows can never corrupt a live
+  sequence's blocks.
+* pure jit-able helpers (``scatter_prefill_row`` / ``gather_pages`` /
+  ``append_kv``) — the device-side gather/scatter through block tables, used
+  by :func:`repro.models.lm.decode_step_paged` and the engine's compiled
+  chunk program. They close over nothing and take/return arrays only, so
+  they trace cleanly under ``jax.jit``/``lax.scan``.
+"""
+from __future__ import annotations
+
+import threading
+from typing import List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+
+__all__ = ["BlockPool", "init_kv_pool", "scatter_prefill_row",
+           "scatter_prefill_rows", "gather_pages", "append_kv",
+           "SINK_BLOCK"]
+
+#: Block id 0 is reserved: never allocated, target of masked-row KV writes.
+SINK_BLOCK = 0
+
+
+class BlockPool:
+    """Free-list allocator over ``num_blocks`` KV blocks of ``block_size``
+    token slots each.
+
+    Invariants (exercised by ``tests/test_kvcache.py``):
+
+    * ``num_free + allocated == num_blocks - 1`` (the sink is neither);
+    * a block id is never handed out twice without an intervening ``free``;
+    * ``free`` of an unallocated (or sink) id raises;
+    * ``alloc`` is all-or-nothing: it returns ``None`` rather than a partial
+      allocation when the pool cannot cover the request (the admission
+      back-pressure signal).
+    """
+
+    def __init__(self, num_blocks: int, block_size: int) -> None:
+        if num_blocks < 2:
+            raise ValueError("pool needs >= 2 blocks (block 0 is the sink)")
+        if block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._lock = threading.Lock()
+        # LIFO free list: recently freed blocks are re-used first (warm)
+        self._free: List[int] = list(range(num_blocks - 1, SINK_BLOCK, -1))
+        self._allocated: set = set()
+
+    # ------------------------------------------------------------- accounting
+    @property
+    def num_free(self) -> int:
+        with self._lock:
+            return len(self._free)
+
+    @property
+    def num_allocated(self) -> int:
+        with self._lock:
+            return len(self._allocated)
+
+    def blocks_for(self, num_tokens: int) -> int:
+        """Blocks needed to hold ``num_tokens`` KV entries."""
+        return -(-num_tokens // self.block_size)
+
+    def can_alloc(self, n: int) -> bool:
+        with self._lock:
+            return n <= len(self._free)
+
+    # ------------------------------------------------------------- alloc/free
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Take ``n`` blocks, or None (and take nothing) if fewer are free."""
+        if n < 0:
+            raise ValueError("alloc of negative block count")
+        with self._lock:
+            if n > len(self._free):
+                return None
+            ids = [self._free.pop() for _ in range(n)]
+            self._allocated.update(ids)
+            return ids
+
+    def free(self, ids: Sequence[int]) -> None:
+        with self._lock:
+            for b in ids:
+                if b not in self._allocated:
+                    raise ValueError(
+                        f"free of block {b} that is not allocated "
+                        f"(double free, or the reserved sink)")
+                self._allocated.discard(b)
+                self._free.append(b)
+
+    # ---------------------------------------------------------- fragmentation
+    def fragmentation(self) -> float:
+        """1 - (longest contiguous free run / free blocks): 0.0 when the
+        free ids form one contiguous range, approaching 1.0 as the free set
+        shatters. Paged attention gathers through the table so this is a
+        locality metric, not a correctness one."""
+        with self._lock:
+            free = sorted(self._free)
+        if not free:
+            return 0.0
+        longest = run = 1
+        for a, b in zip(free, free[1:]):
+            run = run + 1 if b == a + 1 else 1
+            longest = max(longest, run)
+        return 1.0 - longest / len(free)
+
+    def defragment(self) -> float:
+        """Order the free list so future allocations hand out ascending,
+        contiguous-when-possible id runs; returns the fragmentation metric
+        after the compaction. Safe while sequences run: allocated blocks are
+        never moved (tables keep pointing at the same ids)."""
+        with self._lock:
+            self._free.sort(reverse=True)  # LIFO pop() yields ascending ids
+        return self.fragmentation()
+
+
+# ---------------------------------------------------------------- device side
+def init_kv_pool(cfg: ModelConfig, num_blocks: int, block_size: int
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Allocate the pooled KV storage: ``(L, num_blocks, KV, block, hd)``
+    for k and v (same layout as the contiguous cache with the sequence dim
+    split into pages)."""
+    if cfg.ssm or cfg.hybrid_attn_every:
+        raise ValueError(
+            f"{cfg.name}: paged KV applies to attention caches only "
+            "(SSM state is O(1) per sequence)")
+    # lazy: keeps this module import-light (attention.py imports the
+    # gather/scatter helpers above, so a models import here would cycle)
+    from ..models.layers import dtype_of
+    cdt = dtype_of(cfg.compute_dtype)
+    shape = (cfg.num_layers, num_blocks, cfg.num_kv_heads, block_size,
+             cfg.hd)
+    return jnp.zeros(shape, cdt), jnp.zeros(shape, cdt)
+
+
+def scatter_prefill_row(pool: jnp.ndarray, blocks: jnp.ndarray,
+                        row: jnp.ndarray) -> jnp.ndarray:
+    """Write one prefilled sequence into its blocks.
+
+    pool: (L, N, KV, bs, hd); blocks: (nb,) int32; row: (L, KV, S, hd) with
+    ``S <= nb * bs``. Returns the updated pool. Jit-safe: ``nb`` and ``S``
+    are static shapes.
+    """
+    return scatter_prefill_rows(pool, blocks[None], row[:, None])
+
+
+def scatter_prefill_rows(pool: jnp.ndarray, blocks: jnp.ndarray,
+                         rows: jnp.ndarray) -> jnp.ndarray:
+    """Write a whole admitted GROUP's prefilled sequences in one scatter.
+
+    pool: (L, N, KV, bs, hd); blocks: (Bg, nb) int32 — every row uses the
+    same block count (the group shares one prompt length, and ``nb`` covers
+    the PROMPT footprint only, so the compiled shape keys on the admission
+    bucket, not on per-request ``max_new``); rows: (L, Bg, KV, S, hd) with
+    ``S <= nb * bs``. Rows own disjoint blocks, so the scatter indices
+    never collide.
+    """
+    L, _, KV, bs, hd = pool.shape
+    Bg, nb = blocks.shape
+    S = rows.shape[3]
+    pad = nb * bs - S
+    if pad:
+        rows = jnp.pad(rows, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    # (L, Bg, KV, nb*bs, hd) -> (L, Bg, nb, KV, bs, hd): page-major
+    paged = rows.reshape(L, Bg, KV, nb, bs, hd).transpose(0, 1, 3, 2, 4, 5)
+    return pool.at[:, blocks].set(paged)
+
+
+def gather_pages(pool_l: jnp.ndarray, tables: jnp.ndarray) -> jnp.ndarray:
+    """Gather one layer's pages for a batch of sequences.
+
+    pool_l: (N, KV, bs, hd); tables: (B, max_blocks) int32 (unused tail
+    entries point at the sink). Returns (B, KV, max_blocks * bs, hd) with
+    token position ``j`` at gathered index ``j`` — the contiguous view the
+    attention kernel reads, masked by each row's length.
+    """
+    B, mb = tables.shape
+    _, KV, bs, hd = pool_l.shape
+    pages = pool_l[tables]                       # (B, mb, KV, bs, hd)
+    return pages.transpose(0, 2, 1, 3, 4).reshape(B, KV, mb * bs, hd)
+
+
+def append_kv(pool_l: jnp.ndarray, new: jnp.ndarray, tables: jnp.ndarray,
+              pos: jnp.ndarray, active: jnp.ndarray) -> jnp.ndarray:
+    """Write one decode step's K (or V) for every batch row through the
+    block table.
+
+    pool_l: (N, KV, bs, hd); new: (B, KV, hd); tables: (B, max_blocks);
+    pos: (B,) int32 write position per row; active: (B,) bool. Inactive
+    rows are redirected to the sink block so they cannot touch live pages.
+    """
+    _, _, bs, _ = pool_l.shape
+    B, mb = tables.shape
+    idx = jnp.clip(pos // bs, 0, mb - 1)
+    blk = jnp.where(active, jnp.take_along_axis(
+        tables, idx[:, None], axis=1)[:, 0], SINK_BLOCK)
+    off = jnp.where(active, pos % bs, 0)
+    return pool_l.at[blk, :, off].set(new.astype(pool_l.dtype))

@@ -1,0 +1,165 @@
+"""Request queue + admission control for the continuous-batching engine.
+
+The scheduler is pure host-side bookkeeping (no jax): it owns the waiting
+queue and decides, at every chunk boundary, which requests join the running
+batch. The engine's SERIAL admit stage calls :meth:`Scheduler.try_admit`
+with the currently free resources; retirement calls :meth:`finish` /
+:meth:`fail` to fulfil the request futures.
+
+Admission policy — *length-bucketed FIFO*:
+
+* requests are grouped by prompt length (one compiled prefill shape per
+  admitted group — no re-padding, no shape churn);
+* the bucket of the OLDEST waiting request goes first (no starvation), and
+  up to ``max_admit`` same-length requests ride along with it;
+* a group is admitted only if the block pool can cover every member's full
+  ``prompt + max_new`` KV footprint AND free decode slots exist — admission
+  is all-or-nothing per request, so a running sequence can never hit KV
+  exhaustion mid-decode (back-pressure happens at admission, where the
+  pipeline can defer, not in the compiled chunk).
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from collections import OrderedDict
+from typing import Any, Callable, List, Optional
+
+import numpy as np
+
+__all__ = ["ServeRequest", "Scheduler"]
+
+_REQ_IDS = itertools.count()
+
+
+class ServeRequest:
+    """One generation request: a prompt plus a future for its output.
+
+    ``submit()`` hands these out; :meth:`result` blocks until the engine's
+    complete stage retires the sequence (or the resident pipeline fails, in
+    which case the failure re-raises here instead of deadlocking).
+    """
+
+    def __init__(self, prompt: Any, max_new: int) -> None:
+        self.id = next(_REQ_IDS)
+        self.prompt = np.asarray(prompt, np.int32)
+        if self.prompt.ndim != 1 or self.prompt.size == 0:
+            raise ValueError("prompt must be a non-empty 1-D token array")
+        if max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        self.max_new = int(max_new)
+        self.submitted_at: Optional[float] = None   # set by the engine
+        self.finished_at: Optional[float] = None
+        self._done = threading.Event()
+        self._tokens: Optional[np.ndarray] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------ future API
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def set_result(self, tokens: np.ndarray) -> None:
+        self._tokens = tokens
+        self._done.set()
+
+    def set_error(self, err: BaseException) -> None:
+        if not self._done.is_set():
+            self._error = err
+            self._done.set()
+
+    def result(self, timeout: Optional[float] = 120.0) -> np.ndarray:
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"request {self.id} did not complete in time")
+        if self._error is not None:
+            raise RuntimeError(
+                f"request {self.id} failed in the serve pipeline"
+            ) from self._error
+        return self._tokens
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+
+class Scheduler:
+    """Waiting-queue + admission-control policy (host side, thread-safe)."""
+
+    def __init__(self, max_admit: int = 8) -> None:
+        if max_admit < 1:
+            raise ValueError("max_admit must be >= 1")
+        self.max_admit = max_admit
+        self._lock = threading.Lock()
+        # prompt_len -> FIFO of ServeRequest; OrderedDict keeps bucket
+        # creation order, but admission order follows the oldest REQUEST
+        self._buckets: "OrderedDict[int, List[ServeRequest]]" = OrderedDict()
+        self._num_waiting = 0
+
+    # -------------------------------------------------------------- enqueue
+    def enqueue(self, req: ServeRequest) -> None:
+        with self._lock:
+            self._buckets.setdefault(req.prompt_len, []).append(req)
+            self._num_waiting += 1
+
+    @property
+    def num_waiting(self) -> int:
+        with self._lock:
+            return self._num_waiting
+
+    def oldest(self) -> Optional[ServeRequest]:
+        with self._lock:
+            heads = [b[0] for b in self._buckets.values() if b]
+            if not heads:
+                return None
+            return min(heads, key=lambda r: r.id)
+
+    # ------------------------------------------------------------- admission
+    def try_admit(self, free_slots: int,
+                  blocks_free: int,
+                  blocks_for: Callable[[int], int]
+                  ) -> Optional[List[ServeRequest]]:
+        """Pop the next admission group, or None (taking nothing) when the
+        oldest waiting request cannot be covered — the engine turns that
+        into either a deferred-token park or a plain decode-pump cycle.
+
+        ``blocks_for(num_tokens)`` converts a KV footprint to block count
+        (comes from the engine's :class:`~repro.serve.kvcache.BlockPool`).
+        """
+        with self._lock:
+            heads = [b[0] for b in self._buckets.values() if b]
+            if not heads or free_slots < 1:
+                return None
+            head = min(heads, key=lambda r: r.id)
+            bucket = self._buckets[head.prompt_len]
+            group: List[ServeRequest] = []
+            budget = blocks_free
+            for req in bucket:
+                if len(group) >= min(self.max_admit, free_slots):
+                    break
+                need = blocks_for(req.prompt_len + req.max_new)
+                if need > budget:
+                    break
+                budget -= need
+                group.append(req)
+            if not group:
+                return None  # head of line does not fit: back-pressure
+            del bucket[:len(group)]
+            if not bucket:
+                del self._buckets[head.prompt_len]
+            self._num_waiting -= len(group)
+            return group
+
+    # ------------------------------------------------------------ retirement
+    def finish(self, req: ServeRequest, tokens: np.ndarray, now: float
+               ) -> None:
+        req.finished_at = now
+        req.set_result(tokens)
+
+    def fail_all_waiting(self, err: BaseException) -> None:
+        """Resident pipeline died: fail queued requests so result() raises
+        instead of timing out."""
+        with self._lock:
+            waiting = [r for b in self._buckets.values() for r in b]
+            self._buckets.clear()
+            self._num_waiting = 0
+        for r in waiting:
+            r.set_error(err)

@@ -11,9 +11,12 @@ Graph (one cyclic TDG — no unrolling across steps, paper §3.4):
                                    v
                                   done
 
-* ``prefetch`` tops up the bounded batch queue (host domain) and spawns a
-  *detached* subflow that prefetches further ahead, overlapping with the
-  device step via heterogeneous work stealing;
+* ``prefetch`` arms the :class:`repro.data.pipeline.Prefetcher` in its
+  executor-pipeline mode: the prefetcher owns a 2-stage produce/stage
+  :class:`repro.pipeline.DataPipeline` scheduled on THIS trainer's host
+  workers (no dedicated thread, no manual subflow), so batch materialisation
+  overlaps the device step via heterogeneous work stealing and back-pressure
+  is the pipeline's stop/drain protocol;
 * ``step`` is a DEVICE task: one compiled XLA program (cudaFlow analogue);
 * ``ckpt?`` is a condition task that routes through an async checkpoint
   branch every ``ckpt_every`` steps — the save runs as a host task off the
@@ -128,20 +131,17 @@ class Trainer:
     def _run_taskflow(self, state: Dict[str, Any]) -> None:
         tc = self.tc
         prefetcher = Prefetcher(self.data.batch_at, tc.prefetch_depth,
-                                start_step=state["step"])
+                                start_step=state["step"],
+                                executor=self.executor)
         tf = Taskflow("trainer")
 
         t_init = tf.static(lambda: None, name="init")
 
-        def prefetch(sf):
-            # keep the queue ahead; push extra fills as a detached subflow
-            prefetcher.produce_one()
-            if prefetcher.qsize() < tc.prefetch_depth:
-                extra = sf.static(lambda: prefetcher.produce_one(),
-                                  name="prefetch-ahead")
-                sf.detach()
-
-        t_prefetch = tf.dynamic(prefetch, name="prefetch", domain=HOST)
+        # executor-pipeline prefetch: start() re-arms the prefetcher's
+        # produce/stage DataPipeline on the shared executor whenever queue
+        # capacity is free; the pipeline itself drains for back-pressure
+        t_prefetch = tf.static(prefetcher.start, name="prefetch",
+                               domain=HOST)
 
         def device_step():
             step = state["step"]

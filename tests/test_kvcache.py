@@ -1,0 +1,99 @@
+"""Paged KV-cache pool: allocator invariants + gather/scatter correctness."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serve.kvcache import (SINK_BLOCK, BlockPool, append_kv,
+                                 gather_pages, init_kv_pool,
+                                 scatter_prefill_row)
+
+
+# ------------------------------------------------------------- allocator
+def test_alloc_free_accounting():
+    bp = BlockPool(num_blocks=9, block_size=4)
+    assert bp.num_free == 8          # block 0 is the reserved sink
+    a = bp.alloc(3)
+    b = bp.alloc(2)
+    assert SINK_BLOCK not in a + b
+    assert len(set(a + b)) == 5      # no id handed out twice
+    assert bp.num_free == 3 and bp.num_allocated == 5
+    bp.free(a)
+    assert bp.num_free == 6 and bp.num_allocated == 2
+    c = bp.alloc(6)                  # re-uses the freed ids
+    assert len(set(b + c)) == 8
+    assert bp.num_free == 0
+
+
+def test_alloc_is_all_or_nothing():
+    bp = BlockPool(num_blocks=5, block_size=4)
+    assert bp.alloc(5) is None       # only 4 usable
+    assert bp.num_free == 4          # nothing was taken
+    got = bp.alloc(4)
+    assert got is not None and bp.alloc(1) is None
+
+
+def test_double_free_and_sink_free_raise():
+    bp = BlockPool(num_blocks=4, block_size=2)
+    ids = bp.alloc(2)
+    bp.free(ids)
+    with pytest.raises(ValueError, match="not allocated"):
+        bp.free([ids[0]])
+    with pytest.raises(ValueError, match="not allocated"):
+        bp.free([SINK_BLOCK])
+
+
+def test_blocks_for_and_fragmentation():
+    bp = BlockPool(num_blocks=17, block_size=4)
+    assert bp.blocks_for(1) == 1 and bp.blocks_for(4) == 1
+    assert bp.blocks_for(5) == 2 and bp.blocks_for(17) == 5
+    # carve holes: free every other allocation
+    held = [bp.alloc(1) for _ in range(16)]
+    for i in range(0, 16, 2):
+        bp.free(held[i])
+    frag = bp.fragmentation()
+    assert frag > 0.5                # free set is maximally shattered
+    assert bp.defragment() == pytest.approx(bp.fragmentation())
+    # freeing the rest makes the free set contiguous again
+    for i in range(1, 16, 2):
+        bp.free(held[i])
+    assert bp.fragmentation() == 0.0
+
+
+# ------------------------------------------------------- gather / scatter
+def test_scatter_gather_roundtrip_and_sink():
+    cfg = get_config("stablelm-1.6b").smoke()
+    pool_k, _ = init_kv_pool(cfg, num_blocks=8, block_size=4)
+    L, N, KV, bs, hd = pool_k.shape
+    S = 6
+    rng = np.random.default_rng(0)
+    row = jnp.asarray(rng.standard_normal((L, KV, S, hd)),
+                      pool_k.dtype)
+    blocks = jnp.asarray([3, 5], jnp.int32)
+    pool_k = scatter_prefill_row(pool_k, blocks, row)
+    tables = jnp.zeros((1, 3), jnp.int32).at[0, :2].set(blocks)
+    got = gather_pages(pool_k[0], tables)        # (1, KV, 3*bs, hd)
+    np.testing.assert_array_equal(np.asarray(got[0, :, :S]),
+                                  np.asarray(row[0]))
+    # table tail points at the sink: those positions read zeros
+    np.testing.assert_array_equal(np.asarray(got[0, :, 2 * bs:]), 0.0)
+
+    # append the 7th token (block idx 1, offset 2) on the active row
+    new = jnp.full((1, KV, hd), 7.0, pool_k.dtype)
+    p_act = append_kv(pool_k[0], new, tables,
+                      jnp.asarray([S], jnp.int32), jnp.asarray([True]))
+    np.testing.assert_array_equal(
+        np.asarray(gather_pages(p_act, tables)[0, :, S]),
+        np.asarray(new[0]))
+    # inactive row: the write is redirected to the sink block
+    p_in = append_kv(pool_k[0], new * 9, tables,
+                     jnp.asarray([S], jnp.int32), jnp.asarray([False]))
+    np.testing.assert_array_equal(np.asarray(p_in[3:6]),
+                                  np.asarray(pool_k[0][3:6]))
+    assert np.any(np.asarray(p_in[SINK_BLOCK]) == 63.0)
+
+
+def test_init_kv_pool_rejects_ssm():
+    cfg = get_config("falcon-mamba-7b").smoke()
+    with pytest.raises(ValueError, match="attention"):
+        init_kv_pool(cfg, 8, 4)

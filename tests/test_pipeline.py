@@ -266,6 +266,108 @@ def test_executor_rejects_concurrent_resubmission(executor):
     executor.run(tf).wait(30)  # sequential re-run stays legal
 
 
+# --------------------------------------------------- token-level deferral
+def test_defer_parks_until_dependency_completes(executor):
+    """Token 2 defers on token 0 while 0 is still mid-pipeline: admission
+    pauses (no spinning, no overtaking at the admission point), in-flight
+    tokens drain, and the resume re-runs the SAME token number exactly once
+    after 0 completes the last pipe."""
+    hold0 = threading.Event()
+    released_before_resume = []
+    admits = []
+    deferred = [False]
+    lock = threading.Lock()
+
+    def admit(pf):
+        if pf.token >= 5:
+            pf.stop()
+            return
+        if pf.token == 2 and not deferred[0]:
+            deferred[0] = True
+            released_before_resume.append(hold0.is_set())
+            pf.defer(0)
+            return
+        with lock:
+            admits.append(pf.token)
+
+    def mid(pf):
+        if pf.token == 0:
+            hold0.wait(30)
+
+    pl = Pipeline(3, Pipe(PipeType.SERIAL, admit),
+                  Pipe(PipeType.PARALLEL, mid),
+                  Pipe(PipeType.SERIAL, lambda pf: None))
+    topo = pl.run(executor)
+    # token 2 is parked on token 0, which is blocked in stage 1 -> the
+    # pipeline cannot finish until we release it
+    assert not topo.event.wait(0.2)
+    hold0.set()
+    topo.wait(30)
+    assert admits == [0, 1, 2, 3, 4]      # same token resumed, order kept
+    assert released_before_resume == [False]  # it really parked first
+    assert pl.num_token_deferrals == 1
+    assert pl.num_resumes == 1            # resume accounting: exactly once
+
+
+def test_defer_on_completed_token_reruns_immediately(executor):
+    seen = []
+    d = [False]
+
+    def admit(pf):
+        if pf.token >= 4:
+            pf.stop()
+            return
+        if pf.token == 3 and not d[0]:
+            d[0] = True
+            pf.defer(0)                   # token 0 completed long ago
+            return
+        seen.append(pf.token)
+
+    pl = Pipeline(2, Pipe(PipeType.SERIAL, admit))
+    pl.run(executor).wait(30)
+    assert seen == [0, 1, 2, 3]
+    assert pl.num_token_deferrals == 1 and pl.num_resumes == 1
+
+
+def test_defer_validation(executor):
+    with pytest.raises(TaskError, match="first pipe"):
+        pl = Pipeline(2, Pipe(PipeType.SERIAL, _counted_stop(2)),
+                      Pipe(PipeType.SERIAL, lambda pf: pf.defer(0)))
+        pl.run(executor).wait(30)
+    with pytest.raises(TaskError, match="itself"):
+        pl = Pipeline(2, Pipe(PipeType.SERIAL,
+                              lambda pf: pf.defer(pf.token)))
+        pl.run(executor).wait(30)
+    with pytest.raises(TaskError, match="un-minted"):
+        pl = Pipeline(2, Pipe(PipeType.SERIAL, lambda pf: pf.defer(7)))
+        pl.run(executor).wait(30)
+
+
+def test_defer_resumes_across_reruns(executor):
+    """The monotone token stream + completion watermark survive the re-arm
+    path: a second run() can defer on tokens completed in the FIRST run."""
+    log = []
+    budget = [3]
+    d = [False]
+
+    def admit(pf):
+        if pf.token >= budget[0]:
+            pf.stop()
+            return
+        if pf.token == 4 and not d[0]:
+            d[0] = True
+            pf.defer(1)                   # completed in run 1
+            return
+        log.append(pf.token)
+
+    pl = Pipeline(2, Pipe(PipeType.SERIAL, admit))
+    pl.run(executor).wait(30)
+    budget[0] = 6
+    pl.run(executor).wait(30)
+    assert log == [0, 1, 2, 3, 4, 5]
+    assert pl.num_token_deferrals == 1 and pl.num_resumes == 1
+
+
 # -------------------------------------------------------------- data passing
 def test_data_pipeline_threads_buffers(executor):
     outs = []
