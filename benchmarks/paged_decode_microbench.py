@@ -1,0 +1,110 @@
+# Decode-step microbench for the paged read path (ROADMAP production-serve
+# goal; not a paper figure). Occupancy sweep: gather-free reads vs the
+# materializing gather oracle.
+"""Paged decode-attention read path across pool occupancies.
+
+The gather oracle pays O(capacity) per row per step — it materializes and
+attends over ``max_blocks * block_size`` positions regardless of the rows'
+true lengths. The gather-free paths (``repro.kernels.paged_attention``)
+bound their work by ``max(lengths)``, so their cost follows *occupancy*:
+
+* ``paged_read_*``  — the XLA traced-bound page loop (the off-TPU serve
+  default) at low / mid / full occupancy, with the gather oracle timed on
+  identical inputs. The derived column reports the speedup; low occupancy
+  (short rows in a large pool) is where paging pays.
+* ``pallas_interpret_read_low_occ_ms`` — the Pallas kernel through the
+  interpreter, for the trajectory record only: per-grid-step interpreter
+  overhead dominates on CPU (it is a correctness tool here; the Mosaic
+  lowering on TPU is the perf path).
+* ``decode_step_*`` — end-to-end ``lm.decode_step_paged`` (all layers,
+  projections, MLP) at low occupancy, paged vs gather read path.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Iterator, Tuple
+
+
+def _time_ms(fn, iters: int) -> float:
+    fn().block_until_ready()                    # warm-up / compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e3
+
+
+def bench(quick: bool = False) -> Iterator[Tuple[str, str, str]]:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs import get_config
+    from repro.kernels.paged_attention import paged_attention
+    from repro.models import lm
+    from repro.serve.kvcache import gather_read_attention
+
+    B, H, KV, hd = 8, 8, 4, 64
+    bs = 16
+    mb = 16 if quick else 64                    # capacity per row
+    iters = 20 if quick else 100
+    N = B * mb + 1
+    cap = mb * bs
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    pool_kv = jax.random.normal(ks[1], (2, N, KV, bs, hd))
+    tables = jnp.asarray(
+        1 + np.arange(B * mb, dtype=np.int32).reshape(B, mb))
+
+    gather_read = jax.jit(gather_read_attention)  # the shared oracle
+
+    occupancies = [("low", bs - 1), ("mid", cap // 2 - 1),
+                   ("full", cap - 1)]
+    for occ_name, pos in occupancies:
+        lengths = jnp.full((B,), pos, jnp.int32)
+        t_paged = _time_ms(
+            lambda: paged_attention(q, pool_kv, tables, lengths,
+                                    impl="xla"), iters)
+        t_gather = _time_ms(
+            lambda: gather_read(q, pool_kv, tables, lengths), iters)
+        yield (f"paged_read_{occ_name}_occ_ms", f"{t_paged:.3f}",
+               f"{t_gather/t_paged:.2f}x_gather")
+        yield (f"gather_read_{occ_name}_occ_ms", f"{t_gather:.3f}", "")
+
+    # Pallas interpreter datapoint (trajectory record; see module docstring)
+    lengths = jnp.full((B,), bs - 1, jnp.int32)
+    t_pallas = _time_ms(
+        lambda: paged_attention(q, pool_kv, tables, lengths,
+                                impl="pallas"), max(2, iters // 10))
+    yield ("pallas_interpret_read_low_occ_ms", f"{t_pallas:.3f}",
+           "interpret_mode")
+
+    # end-to-end decode step at low occupancy (smoke model: all layers)
+    cfg = get_config("stablelm-1.6b").smoke()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    mb2 = 32                            # large pool: the short rows below
+    #                                     sit at ~3% of per-row capacity
+    N2 = B * mb2 + 1
+    pool = jnp.zeros((cfg.num_layers, 2, N2, cfg.num_kv_heads, bs, cfg.hd),
+                     jnp.bfloat16)
+    tables2 = jnp.asarray(
+        1 + np.arange(B * mb2, dtype=np.int32).reshape(B, mb2))
+    lengths2 = jnp.full((B,), bs - 1, jnp.int32)
+    token = jnp.ones((B,), jnp.int32)
+    active = jnp.ones((B,), bool)
+    times = {}
+    for impl in ("xla", "gather"):
+        step = jax.jit(functools.partial(lm.decode_step_paged, cfg,
+                                         impl=impl))
+        times[impl] = _time_ms(
+            lambda: step(params, pool, tables2, lengths2, token, active)[0],
+            max(5, iters // 4))
+    yield ("decode_step_paged_low_occ_ms", f"{times['xla']:.3f}",
+           f"{times['gather']/times['xla']:.2f}x_gather")
+    yield ("decode_step_gather_low_occ_ms", f"{times['gather']:.3f}", "")
+
+
+if __name__ == "__main__":
+    for name, val, derived in bench(quick=True):
+        print(f"{name},{val},{derived}")

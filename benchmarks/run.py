@@ -1,7 +1,9 @@
-# One function per paper table. Prints ``name,value,derived`` CSV.
+# One function per paper table. Prints ``name,value,derived`` CSV and
+# writes a BENCH_<suite>.json trajectory file per suite.
 """Benchmark harness: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig9,...]
+    PYTHONPATH=src python -m benchmarks.run [--only fig9,...] [--quick]
+                                            [--bench-dir DIR]
 
 table2  — task/edge creation overheads (paper Table 2)
 fig9    — random-DAG runtime/memory vs baselines (paper Figure 9)
@@ -14,13 +16,52 @@ pipeline— task-parallel pipeline throughput vs hand-rolled loop
           (Pipeflow follow-up, arXiv:2202.00717); honors --quick
 serve   — continuous-batching engine under Poisson arrivals vs the
           per-call baseline (tokens/sec, p50/p99 latency); honors --quick
+paged_decode — gather-free paged decode read path vs the gather oracle
+          across pool occupancies; honors --quick
+
+Each completed suite drops ``BENCH_<suite>.json`` into --bench-dir
+(default: CWD): the run config, every emitted row, and the well-known
+metrics (``tok_per_s`` / ``p50_ms`` / ``p99_ms`` where a suite reports
+them) — the machine-readable perf trajectory that used to exist only as
+stdout CSV.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
+
+#: row-name suffix -> trajectory metric key (suite-agnostic extraction)
+_METRIC_SUFFIXES = ("tok_per_s", "p50_ms", "p99_ms")
+
+
+def _write_trajectory(bench_dir: str, suite: str, config: dict,
+                      rows: list, elapsed_s: float) -> str:
+    metrics = {}
+    for name, val, _ in rows:
+        for suffix in _METRIC_SUFFIXES:
+            if name.endswith(suffix):
+                try:
+                    metrics[name] = float(val)
+                except ValueError:
+                    pass
+    payload = {
+        "suite": suite,
+        "config": config,
+        "timestamp": time.time(),
+        "elapsed_s": round(elapsed_s, 3),
+        "rows": [{"name": n, "value": v, "derived": d} for n, v, d in rows],
+        "metrics": metrics,
+    }
+    os.makedirs(bench_dir, exist_ok=True)
+    path = os.path.join(bench_dir, f"BENCH_{suite}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return path
 
 
 def main() -> None:
@@ -28,12 +69,15 @@ def main() -> None:
     ap.add_argument("--only", default="")
     ap.add_argument("--quick", action="store_true",
                     help="seconds-scale smoke sizes (tier-1 environment)")
+    ap.add_argument("--bench-dir", default=".",
+                    help="where BENCH_<suite>.json trajectory files land")
     args = ap.parse_args()
 
     from . import (fig9_micro_random_dag, fig11_corun_throughput,
                    fig13_lsdnn, fig17_conditional_memory,
-                   fig21_incremental_timing, pipeline_throughput,
-                   roofline_report, serve_continuous, table2_task_overhead)
+                   fig21_incremental_timing, paged_decode_microbench,
+                   pipeline_throughput, roofline_report, serve_continuous,
+                   table2_task_overhead)
 
     suites = {
         "table2": lambda: table2_task_overhead.bench(200_000),
@@ -45,7 +89,11 @@ def main() -> None:
         "roofline": roofline_report.bench,
         "pipeline": lambda: pipeline_throughput.bench(quick=args.quick),
         "serve": lambda: serve_continuous.bench(quick=args.quick),
+        "paged_decode":
+            lambda: paged_decode_microbench.bench(quick=args.quick),
     }
+    config = {"quick": args.quick, "only": args.only,
+              "paged_impl_env": os.environ.get("REPRO_PAGED_IMPL", "")}
     only = [s for s in args.only.split(",") if s]
     failures = 0
     for name, fn in suites.items():
@@ -53,9 +101,14 @@ def main() -> None:
             continue
         t0 = time.time()
         try:
+            rows = []
             for row_name, val, derived in fn():
+                rows.append((row_name, val, derived))
                 print(f"{row_name},{val},{derived}", flush=True)
-            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+            elapsed = time.time() - t0
+            path = _write_trajectory(args.bench_dir, name, config, rows,
+                                     elapsed)
+            print(f"# {name} done in {elapsed:.1f}s -> {path}", flush=True)
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"# {name} FAILED: {type(e).__name__}: {e}", flush=True)

@@ -39,7 +39,11 @@ def _percentiles(lat: List[float]) -> Tuple[float, float]:
     return (float(np.percentile(lat, 50)), float(np.percentile(lat, 99)))
 
 
-def bench(quick: bool = False) -> Iterator[Tuple[str, str, str]]:
+def bench(quick: bool = False,
+          impl: str = None) -> Iterator[Tuple[str, str, str]]:
+    """impl picks the continuous engine's paged read path ("pallas" /
+    "xla" / "gather"); None = engine default (REPRO_PAGED_IMPL env or
+    backend-based, see repro.kernels.ops.default_paged_impl)."""
     import jax
     import numpy as np
     from repro.configs import get_config
@@ -69,7 +73,9 @@ def bench(quick: bool = False) -> Iterator[Tuple[str, str, str]]:
 
     # ---------------------------------------------------------- continuous
     with ServeEngine(cfg, params, decode_chunk=chunk, block_size=bs,
-                     max_seq_len=max_seq, kv_blocks=128) as eng:
+                     max_seq_len=max_seq, kv_blocks=128,
+                     paged_impl=impl) as eng:
+        read_impl = eng.paged_impl
         # warm-up: one request per distinct prompt length compiles the paged
         # chunk program + that length's (padded) prefill and scatter — the
         # engine pads admission groups to max_admit, so group-size variance
@@ -120,6 +126,7 @@ def bench(quick: bool = False) -> Iterator[Tuple[str, str, str]]:
 
     yield ("serve_continuous_tok_per_s", f"{total_tokens/cont_dt:.1f}",
            f"{base_dt/cont_dt:.2f}x_per_call")
+    yield ("serve_continuous_paged_impl", read_impl, "")
     yield ("serve_continuous_p50_ms", f"{cont_p50*1e3:.0f}",
            f"{base_p50/max(cont_p50,1e-9):.2f}x_per_call")
     yield ("serve_continuous_p99_ms", f"{cont_p99*1e3:.0f}",
@@ -134,5 +141,12 @@ def bench(quick: bool = False) -> Iterator[Tuple[str, str, str]]:
 
 
 if __name__ == "__main__":
-    for name, val, derived in bench(quick=True):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--impl", default=None,
+                    choices=("pallas", "xla", "gather"),
+                    help="paged read path of the continuous engine")
+    args = ap.parse_args()
+    for name, val, derived in bench(quick=args.quick, impl=args.impl):
         print(f"{name},{val},{derived}")

@@ -262,19 +262,28 @@ class Executor:
             node._join = node.num_strong
         topo.pending.inc(len(sources))  # bulk: no premature completion
         topo.num_passes += 1
-        for node in sources:
-            d = self._dindex[node.domain]
-            if w is not None:
-                # re-submission from a worker (run_until pass): local queue
+        if w is not None:
+            # re-submission from a worker (run_until pass): local queues
+            for node in sources:
+                d = self._dindex[node.domain]
                 w.queues[d].push(node)
                 if w.domain_idx != d and \
                         self._actives[d].value() == 0 and \
                         self._thieves[d].value() == 0:
                     self._notifiers[d].notify_one()
-            else:
-                with self._shared_lock:
-                    self._shared[d].push(node)
-                self._notifiers[d].notify_one()
+            return
+        # external submission: ONE shared-lock acquisition for the whole
+        # source set (was lock-per-node), then one wake per domain that
+        # actually received work — the woken thief turning active wakes a
+        # replacement (§4.4), so a single notify drains any batch size
+        pushed: Dict[int, int] = {}
+        with self._shared_lock:
+            for node in sources:
+                d = self._dindex[node.domain]
+                self._shared[d].push(node)
+                pushed[d] = pushed.get(d, 0) + 1
+        for d in pushed:
+            self._notifiers[d].notify_one()
 
     # -- Algorithm 5: submit_task ------------------------------------------------
     def _schedule(self, w: Optional[_Worker], node: Node,

@@ -66,11 +66,14 @@ class EventNotifier:
             self.num_waits += 1
             if self._epoch != w.epoch:
                 return True  # a notify raced in between phases: consume it
-            woke = self._cond.wait(self._backstop)
+            self._cond.wait(self._backstop)
             if self._epoch == w.epoch:
+                # no epoch bump: backstop timeout (or a spurious CV wakeup)
                 self.spurious_wakeups += 1
                 return False
-            return woke or True
+            # the epoch advanced while waiting — a notification happened,
+            # even if the CV wait itself timed out in the same instant
+            return True
 
     # -- notifier side ----------------------------------------------------------
     def notify_one(self) -> None:

@@ -1,0 +1,199 @@
+"""Paged decode-attention: gather-free reads through the block table.
+
+The continuous-batching engine's hot path is one-token decode against the
+paged KV pool. The original read path (``serve.kvcache.gather_pages``)
+materialized a contiguous ``(B, KV, max_blocks*block_size, hd)`` copy of
+every row's pages per layer per token and attended over the fully padded
+span — O(capacity) HBM traffic and FLOPs regardless of how short the rows
+actually are. Both implementations here read K/V pages *in place* through
+the block table and skip blocks past each row's true length, making
+per-row cost proportional to **occupancy** instead of **capacity**:
+
+* :func:`paged_attention` with ``impl="pallas"`` — the TPU kernel. Grid is
+  ``(batch, kv_head, kv_block)`` with the kv-block axis innermost; online
+  softmax state ``(acc, m, l)`` lives in VMEM scratch across kv iterations
+  (same pattern as ``flash_attention.py``). The block tables and per-row
+  lengths are **scalar-prefetched** (``pltpu.PrefetchScalarGridSpec``) so
+  the K/V BlockSpec index maps resolve ``tables[b, j]`` *before* the body
+  runs — the DMA engine fetches pages straight from the pool and no
+  gathered copy ever exists. Blocks past ``ceil((pos+1)/block_size)`` are
+  skipped outright: ``pl.when`` guards the compute, and the index maps
+  clamp to the last active block so Mosaic's revisiting-block elision
+  issues no new fetch. Validated in interpret mode on CPU (bit-level
+  parity with the gather reference is exercised in
+  ``tests/test_paged_attention.py``); pass ``interpret=False`` on TPU for
+  the Mosaic lowering.
+
+* ``impl="xla"`` — the same blockwise online-softmax algorithm lowered
+  through plain XLA for backends without Mosaic (this container is
+  CPU-only): a ``lax.fori_loop`` over pages whose trip count is
+  ``max(lengths)//block_size + 1`` — a *traced* bound, so short rows in a
+  large pool pay for their pages only. Each iteration touches one
+  ``(2, B, KV, block_size, hd)`` page pair; the full padded span is never
+  materialized. This is the engine's default read path off-TPU
+  (``repro.kernels.ops.default_paged_impl``) and what
+  ``benchmarks/paged_decode_microbench.py`` measures against the gather
+  reference.
+
+K and V live *stacked* in one pool array ``(2, N, KV, block, hd)``
+(``serve.kvcache.init_kv_pool``), so the write path appends both with a
+single scatter and the read path fetches page pairs with a single gather.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+__all__ = ["paged_attention"]
+
+
+def _paged_kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, block_size: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    pos = lengths_ref[b]
+    nb = pos // block_size + 1      # active blocks: ceil((pos+1)/block)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when(j < nb)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)          # (G, hd)
+        k = k_ref[0, 0, 0].astype(jnp.float32)       # (bs, hd)
+        v = v_ref[0, 0, 0].astype(jnp.float32)
+        hd = q.shape[-1]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * (hd ** -0.5)                         # (G, bs)
+        kpos = j * block_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(kpos <= pos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nb - 1)
+    def _finish():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)              # fully-masked rows
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def _paged_attention_pallas(q, pool_kv, tables, lengths, interpret: bool):
+    B, H, hd = q.shape
+    _, _, KV, bs, _ = pool_kv.shape
+    G = H // KV
+    mb = tables.shape[1]
+    qg = q.reshape(B, KV, G, hd)
+
+    # scalar-prefetched index maps: the page fetched at grid step (b, h, j)
+    # is pool_kv[0|1, tables[b, j]]; past-the-length steps clamp to the last
+    # active block, so the revisited window needs no new fetch
+    def kv_map(half):
+        def index_map(b, h, j, tables, lengths):
+            jc = jnp.minimum(j, lengths[b] // bs)
+            return half, tables[b, jc], h, 0, 0
+        return index_map
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, mb),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, j, t, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1, bs, hd), kv_map(0)),
+            pl.BlockSpec((1, 1, 1, bs, hd), kv_map(1)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, h, j, t, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),   # acc
+            pltpu.VMEM((G, 1), jnp.float32),    # running max
+            pltpu.VMEM((G, 1), jnp.float32),    # running denom
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, block_size=bs),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(tables, lengths, qg, pool_kv, pool_kv)
+    return out.reshape(B, H, hd)
+
+
+def _paged_attention_xla(q, pool_kv, tables, lengths):
+    """Blockwise online softmax as a traced-bound page loop (see module
+    docstring). Decode is inference-only, so the while-loop lowering is
+    fine; the loop body is the same math as the Pallas kernel body."""
+    B, H, hd = q.shape
+    _, _, KV, bs, _ = pool_kv.shape
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    nb_row = lengths // bs + 1
+    nb_max = jnp.max(nb_row)
+
+    def body(j, carry):
+        acc, m, l = carry
+        jc = jnp.minimum(j, nb_row - 1)              # clamp per row
+        blk = jnp.take_along_axis(tables, jc[:, None], axis=1)[:, 0]
+        kv_j = pool_kv[:, blk].astype(jnp.float32)   # (2, B, KV, bs, hd)
+        s = jnp.einsum("bkgh,bksh->bkgs", qg, kv_j[0],
+                       preferred_element_type=jnp.float32) * (hd ** -0.5)
+        kpos = jc[:, None] * bs + jnp.arange(bs, dtype=jnp.int32)
+        # rows whose pages ran out contribute nothing (jc would re-read
+        # their LAST page — without the j < nb_row term it double-counts)
+        mask = (kpos <= lengths[:, None]) & (j < nb_row)[:, None]
+        s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("bkgs,bksh->bkgh", p, kv_j[1])
+        return acc, m_new, l
+
+    acc = jnp.zeros((B, KV, G, hd), jnp.float32)
+    m = jnp.full((B, KV, G, 1), NEG_INF, jnp.float32)
+    l = jnp.zeros((B, KV, G, 1), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, nb_max, body, (acc, m, l))
+    l = jnp.where(l == 0.0, 1.0, l)
+    return (acc / l).reshape(B, H, hd).astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "interpret"))
+def paged_attention(q, pool_kv, tables, lengths, impl: str = "pallas",
+                    interpret: bool = True):
+    """One-token decode attention straight off the paged KV pool.
+
+    q: (B, H, hd) current-token queries (post-RoPE); pool_kv: (2, N, KV,
+    block, hd) stacked K/V pages of ONE layer; tables: (B, max_blocks)
+    int32 block tables (unused tail entries point at the sink block);
+    lengths: (B,) int32 per-row position ``pos`` — the row attends over
+    key positions ``0..pos`` inclusive, i.e. the entry :func:`append_kv`
+    just wrote plus everything before it. Returns (B, H, hd).
+
+    impl="pallas" is the Pallas kernel (interpret=True for the CPU-correct
+    interpreter, False for Mosaic on TPU); impl="xla" is the traced-bound
+    page loop. Both skip pages past each row's length.
+    """
+    if impl == "pallas":
+        return _paged_attention_pallas(q, pool_kv, tables, lengths,
+                                       interpret=interpret)
+    if impl == "xla":
+        return _paged_attention_xla(q, pool_kv, tables, lengths)
+    raise ValueError(f"unknown paged attention impl {impl!r} "
+                     "(expected 'pallas' or 'xla')")

@@ -169,45 +169,53 @@ def attention(p, x, cfg: ModelConfig, positions,
     return y
 
 
-def paged_decode_attention(p, x, cfg: ModelConfig, pool_k, pool_v, tables,
-                           pos, active):
+def paged_decode_attention(p, x, cfg: ModelConfig, pool_kv, tables,
+                           pos, active, impl: Optional[str] = None):
     """One-token decode against ONE layer's paged KV pool (the
     paged-attention read path of the continuous-batching engine; the
     contiguous :func:`decode_attention` stays as the reference).
 
-    x: (B, 1, D); pool_[kv]: (N, KV, block, hd) — this layer's pages;
-    tables: (B, max_blocks) int32 block tables (tail entries point at the
-    sink block); pos: (B,) int32 PER-ROW positions — rows of a continuously
+    x: (B, 1, D); pool_kv: (2, N, KV, block, hd) — this layer's stacked K/V
+    pages (the new token's K and V land in one fused scatter); tables:
+    (B, max_blocks) int32 block tables (tail entries point at the sink
+    block); pos: (B,) int32 PER-ROW positions — rows of a continuously
     batched decode sit at different sequence lengths, which is exactly what
     the contiguous cache's single scalar ``pos`` cannot express; active:
     (B,) bool — masked rows write their KV to the sink and their output is
-    discarded by the engine. Returns (y (B, 1, D), pool_k, pool_v).
-    """
-    from ..serve.kvcache import append_kv, gather_pages
+    discarded by the engine. Returns (y (B, 1, D), pool_kv).
 
+    impl selects the read path (must be trace-static):
+
+    * ``"pallas"`` — the gather-free Pallas kernel of
+      :mod:`repro.kernels.paged_attention` (Mosaic on TPU, interpreter
+      elsewhere): pages are read in place through the scalar-prefetched
+      block table and blocks past each row's length are skipped.
+    * ``"xla"``    — the same blockwise algorithm as a traced-bound page
+      loop (the non-TPU fast path).
+    * ``"gather"`` — the original materialize-then-mask path over the
+      fully padded span: O(max_blocks) per row regardless of length. Kept
+      as the reference oracle the kernels are tested against.
+    * None         — :func:`repro.kernels.ops.default_paged_impl`.
+    """
+    from ..kernels.ops import default_paged_impl, paged_attention
+    from ..serve.kvcache import append_kv, gather_read_attention
+
+    if impl is None:
+        impl = default_paged_impl()
     B, _, D = x.shape
-    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
-    G = H // KV
+    H, hd = cfg.num_heads, cfg.hd
     cdt = dtype_of(cfg.compute_dtype)
     q, k, v = _project_qkv(p, x, cfg, pos[:, None])
-    pool_k = append_kv(pool_k, k[:, 0], tables, pos, active)
-    pool_v = append_kv(pool_v, v[:, 0], tables, pos, active)
-    ks = gather_pages(pool_k, tables)            # (B, KV, T, hd), T=mb*block
-    vs = gather_pages(pool_v, tables)
-    T = ks.shape[2]
-    qg = q.reshape(B, KV, G, hd)
-    s = jnp.einsum("bkgh,bksh->bkgs", qg, ks,
-                   preferred_element_type=jnp.float32) * (hd ** -0.5)
-    kpos = jnp.arange(T, dtype=jnp.int32)
-    s = jnp.where((kpos[None, :] <= pos[:, None])[:, None, None, :], s,
-                  NEG_INF)
-    pmax = jnp.max(s, axis=-1, keepdims=True)
-    e = jnp.exp(s - pmax)
-    probs = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(vs.dtype)
-    out = jnp.einsum("bkgs,bksh->bkgh", probs, vs)
+    pool_kv = append_kv(pool_kv, k[:, 0], v[:, 0], tables, pos, active)
+    if impl == "gather":
+        out = gather_read_attention(q.reshape(B, H, hd), pool_kv, tables,
+                                    pos)
+    else:
+        out = paged_attention(q.reshape(B, H, hd), pool_kv, tables, pos,
+                              impl=impl)
     y = jnp.einsum("bh,hd->bd", out.reshape(B, H * hd).astype(cdt),
                    p["wo"].astype(cdt))
-    return y[:, None, :], pool_k, pool_v
+    return y[:, None, :], pool_kv
 
 
 def decode_attention(p, x, cfg: ModelConfig, cache_k, cache_v, pos):

@@ -367,23 +367,26 @@ def decode_step(cfg: ModelConfig, params, cache, token
     return logits, new_cache
 
 
-def decode_step_paged(cfg: ModelConfig, params, pool_k, pool_v, tables,
-                      lengths, token, active
-                      ) -> Tuple[jnp.ndarray, Any, Any]:
+def decode_step_paged(cfg: ModelConfig, params, pool_kv, tables,
+                      lengths, token, active, impl: Optional[str] = None
+                      ) -> Tuple[jnp.ndarray, Any]:
     """One decode step through a paged KV cache (continuous batching).
 
     Unlike :func:`decode_step`, every batch row carries its OWN position:
     ``lengths[b]`` is where row ``b``'s next KV entry lands and how far its
     causal mask extends — rows admitted at different times decode side by
-    side. The pool layout and gather/scatter helpers live in
+    side. The pool layout and scatter helpers live in
     :mod:`repro.serve.kvcache`; the contiguous path above remains the
     reference implementation (the two agree token-for-token under greedy
     decoding, see ``tests/test_serve_continuous.py``).
 
-    pool_[kv]: (L, N, KV, block, hd); tables: (B, max_blocks) int32;
-    lengths: (B,) int32; token: (B,) int32; active: (B,) bool (inactive
-    rows write KV to the sink block and their logits are discarded).
-    Returns (logits (B, padded_vocab) f32, pool_k, pool_v).
+    pool_kv: (L, 2, N, KV, block, hd) stacked K/V pages; tables:
+    (B, max_blocks) int32; lengths: (B,) int32; token: (B,) int32; active:
+    (B,) bool (inactive rows write KV to the sink block and their logits
+    are discarded). ``impl`` (trace-static) picks the attention read path —
+    the gather-free kernel/page-loop or the materializing ``"gather"``
+    oracle; see :func:`repro.models.attention.paged_decode_attention`.
+    Returns (logits (B, padded_vocab) f32, pool_kv).
     Attention architectures only — SSM/hybrid states are O(1) per sequence
     and take the contiguous path.
     """
@@ -399,24 +402,20 @@ def decode_step_paged(cfg: ModelConfig, params, pool_k, pool_v, tables,
         x1 = x1 + sinusoidal_positions(pos, cfg.d_model).astype(cdt)
 
     def paged_attn(lp, h1, layer_cache):
-        pk, pv = layer_cache
-        y, pk, pv = paged_decode_attention(lp, h1, cfg, pk, pv,
-                                           tables, pos, active)
-        return y, (pk, pv)
+        return paged_decode_attention(lp, h1, cfg, layer_cache,
+                                      tables, pos, active, impl=impl)
 
     def layer(c, l_xs):
-        lp, pk, pv = l_xs
-        c, (pk, pv) = _block_decode(lp, c, cfg, (pk, pv), pos,
-                                    attn_fn=paged_attn)
-        return c, (pk, pv)
+        lp, pkv = l_xs
+        c, pkv = _block_decode(lp, c, cfg, pkv, pos, attn_fn=paged_attn)
+        return c, pkv
 
-    x1, (pool_k, pool_v) = jax.lax.scan(
-        layer, x1, (params["blocks"], pool_k, pool_v))
+    x1, pool_kv = jax.lax.scan(layer, x1, (params["blocks"], pool_kv))
     x1 = rms_norm(x1, params["final_norm"], cfg.rms_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = jnp.einsum("bd,dv->bv", x1, head.astype(cdt),
                         preferred_element_type=jnp.float32)
-    return logits, pool_k, pool_v
+    return logits, pool_kv
 
 
 def prefill(cfg: ModelConfig, params, tokens, max_len: int = 0,

@@ -4,7 +4,29 @@
   (``submit()`` / ``result()``; ``generate()`` compatibility shim);
 * :mod:`.scheduler` — request queue + length-bucketed admission control;
 * :mod:`.kvcache`   — paged KV-cache pool (block allocator + jit-able
-  gather/scatter through per-sequence block tables).
+  fused K/V scatter through per-sequence block tables; the ``gather_pages``
+  reference read path).
+
+Paged read-path selection
+-------------------------
+The compiled decode chunk reads the KV pool through one of three
+implementations, chosen by ``ServeEngine(paged_impl=...)`` (or the
+``REPRO_PAGED_IMPL`` environment variable when left unset; see
+:func:`repro.kernels.ops.default_paged_impl`):
+
+* ``"pallas"`` — gather-free Pallas kernel
+  (:mod:`repro.kernels.paged_attention`): pages are read in place through
+  the scalar-prefetched block table, blocks past each row's length are
+  skipped. Mosaic lowering on TPU; interpreter (correctness only)
+  elsewhere. Default on TPU.
+* ``"xla"``    — the same blockwise online-softmax algorithm as a
+  traced-bound page loop: per-row cost follows batch occupancy, not pool
+  capacity. Default off TPU.
+* ``"gather"`` — the original materialize-then-mask path
+  (``kvcache.gather_pages``): O(max_blocks) HBM traffic and FLOPs per row
+  per layer per token regardless of true length. Kept as the reference
+  oracle (``tests/test_paged_attention.py`` checks both gather-free paths
+  against it).
 """
 from .engine import ServeEngine
 from .kvcache import BlockPool, init_kv_pool

@@ -25,7 +25,10 @@ chunk, cycle ``t+1`` is already prefilling the next admission group — the
 prefill/decode overlap continuous batching wants, expressed purely as
 pipeline scheduling. Sequences join and leave at chunk boundaries; the KV
 pool (:mod:`repro.serve.kvcache`) is written ONLY by the SERIAL decode
-stage, so pool updates are single-writer by construction.
+stage, so pool updates are single-writer by construction. The compiled
+chunk reads the pool gather-free (``paged_impl``: the Pallas kernel or
+its XLA page-loop lowering, see :mod:`repro.serve`), so per-row decode
+cost follows the row's true length, not the pool's capacity.
 
 Client API: :meth:`submit` returns a :class:`ServeRequest` future;
 :meth:`ServeRequest.result` blocks for the tokens. :meth:`generate` remains
@@ -82,6 +85,13 @@ class ServeEngine:
     max_seq_len:
         per-sequence cap on ``prompt + max_new`` (sets the block-table
         width). Defaults to 32 blocks worth, clamped to the pool size.
+    paged_impl:
+        attention read path of the compiled decode chunk: ``"pallas"``
+        (gather-free Pallas kernel, Mosaic on TPU), ``"xla"`` (gather-free
+        traced-bound page loop), or ``"gather"`` (materializing reference
+        oracle). None resolves via
+        :func:`repro.kernels.ops.default_paged_impl` (honors the
+        ``REPRO_PAGED_IMPL`` env var; pallas on TPU, xla elsewhere).
     record_stages:
         keep an in-memory (stage, cycle-token, info, t) event log — the
         observer hook the overlap tests read.
@@ -97,6 +107,7 @@ class ServeEngine:
                  block_size: int = 16,
                  max_admit: int = 4,
                  max_seq_len: Optional[int] = None,
+                 paged_impl: Optional[str] = None,
                  record_stages: bool = False):
         self.cfg = cfg
         self.params = params
@@ -114,6 +125,13 @@ class ServeEngine:
         #: paged continuous batching needs a pageable attention KV cache;
         #: SSM/hybrid recurrent state is O(1)/seq and keeps the grouped path
         self.paged = not (cfg.ssm or cfg.hybrid_attn_every)
+        from ..kernels.ops import PAGED_IMPLS, default_paged_impl
+        if paged_impl is not None and paged_impl not in PAGED_IMPLS:
+            raise ValueError(f"paged_impl={paged_impl!r}: expected one of "
+                             f"{PAGED_IMPLS} (or None for the default)")
+        #: read path of the compiled decode chunk; None on non-paged archs
+        self.paged_impl = (paged_impl or default_paged_impl()) \
+            if self.paged else None
         self._closing = False
         self._broken: Optional[BaseException] = None
         self._stage_log = [] if record_stages else None
@@ -122,7 +140,7 @@ class ServeEngine:
             return
 
         self._pool = BlockPool(kv_blocks, block_size)
-        self._pk, self._pv = init_kv_pool(cfg, kv_blocks, block_size)
+        self._pkv = init_kv_pool(cfg, kv_blocks, block_size)
         self._max_seq = min(max_seq_len or 32 * block_size,
                             (kv_blocks - 1) * block_size)
         mb = self._pool.blocks_for(self._max_seq)
@@ -151,8 +169,8 @@ class ServeEngine:
                       "retired": 0}
         self._decode_paged = jax.jit(self._decode_paged_impl,
                                      static_argnames=("n",),
-                                     donate_argnums=(1, 2))
-        self._scatter = jax.jit(self._scatter_impl, donate_argnums=(0, 1))
+                                     donate_argnums=(1,))
+        self._scatter = jax.jit(self._scatter_impl, donate_argnums=(0,))
 
     # ---------------------------------------------------------- compiled fns
     def _prefill_impl(self, params, tokens, max_len: int):
@@ -172,32 +190,32 @@ class ServeEngine:
                                               None, length=n)
             return cache, toks.swapaxes(0, 1)  # (B, n)
 
-    def _decode_paged_impl(self, params, pk, pv, tables, lengths, last,
+    def _decode_paged_impl(self, params, pkv, tables, lengths, last,
                            rem, n: int):
         """One chunk: ``n`` paged decode steps over the resident batch in a
         single XLA launch. Rows with ``rem == 0`` are inactive: their KV
         writes go to the sink block and their emitted tokens are discarded
-        host-side. Returns the advanced state + (B, n) greedy tokens."""
+        host-side. The attention read path is ``self.paged_impl``.
+        Returns the advanced state + (B, n) greedy tokens."""
         with use_shard_ctx(self.ctx):
             def body(carry, _):
-                pk, pv, tok, ln, rm = carry
+                pkv, tok, ln, rm = carry
                 active = rm > 0
-                logits, pk, pv = lm.decode_step_paged(
-                    self.cfg, params, pk, pv, tables, ln, tok, active)
+                logits, pkv = lm.decode_step_paged(
+                    self.cfg, params, pkv, tables, ln, tok, active,
+                    impl=self.paged_impl)
                 nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
                 nxt = jnp.where(active, nxt, tok)
                 ln = ln + active.astype(jnp.int32)
                 rm = rm - active.astype(jnp.int32)
-                return (pk, pv, nxt, ln, rm), nxt
+                return (pkv, nxt, ln, rm), nxt
 
-            (pk, pv, tok, ln, rm), toks = jax.lax.scan(
-                body, (pk, pv, last, lengths, rem), None, length=n)
-            return pk, pv, tok, ln, rm, toks.swapaxes(0, 1)
+            (pkv, tok, ln, rm), toks = jax.lax.scan(
+                body, (pkv, last, lengths, rem), None, length=n)
+            return pkv, tok, ln, rm, toks.swapaxes(0, 1)
 
-    def _scatter_impl(self, pk, pv, blocks, krows, vrows):
-        pk = scatter_prefill_rows(pk, blocks, krows)
-        pv = scatter_prefill_rows(pv, blocks, vrows)
-        return pk, pv
+    def _scatter_impl(self, pkv, blocks, krows, vrows):
+        return scatter_prefill_rows(pkv, blocks, krows, vrows)
 
     # ------------------------------------------------------------- lifecycle
     def _ensure_executor(self) -> Executor:
@@ -356,18 +374,18 @@ class ServeEngine:
             blocks2d = np.zeros((ck.shape[1], nbp), np.int32)  # sink-filled
             for i, (_, blocks) in enumerate(group):
                 blocks2d[i] = blocks[:nbp]
-            self._pk, self._pv = self._scatter(self._pk, self._pv,
-                                               jnp.asarray(blocks2d), ck, cv)
+            self._pkv = self._scatter(self._pkv, jnp.asarray(blocks2d),
+                                      ck, cv)
         rem_before = self._rem.copy()
         if not (rem_before > 0).any():
             self._log("decode", pf.token, 0)
             return ("cycle", self._collect_finished(rem_before))
         n = self.decode_chunk
-        pk, pv, tok, ln, rm, toks = self._decode_paged(
-            self.params, self._pk, self._pv, jnp.asarray(self._tables),
+        pkv, tok, ln, rm, toks = self._decode_paged(
+            self.params, self._pkv, jnp.asarray(self._tables),
             jnp.asarray(self._lengths), jnp.asarray(self._last),
             jnp.asarray(self._rem), n=n)
-        self._pk, self._pv = pk, pv
+        self._pkv = pkv
         toks = np.asarray(toks)        # (B, n): the chunk's device sync
         # np.array (not asarray): device views are read-only and these
         # mirrors are mutated by the next cycle's merge
@@ -397,6 +415,13 @@ class ServeEngine:
                     self._slot_req[b] = None
                     self._slot_out[b] = None
                     self._inflight.discard(req)
+                # zero the detached row's mirrors (still inside the SERIAL
+                # decode stage: single-writer): the gather-free read paths
+                # bound their page loop by max(lengths), so a retired slot
+                # must not keep advertising its old length
+                self._tables[b] = 0
+                self._lengths[b] = 0
+                self._last[b] = 0
                 retire.append((b, req, out))
         return retire
 

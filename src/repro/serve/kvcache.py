@@ -7,6 +7,12 @@ the pool, join and leave the running batch at chunk boundaries, and free
 their blocks the moment they retire, so KV memory is bounded by the pool
 size instead of ``max_batch * max_len``.
 
+K and V are STACKED along a leading axis of one pool array
+``(L, 2, N, KV, block, hd)`` rather than held as two tensors: the decode
+write path appends a token's K *and* V with a single scatter launch and the
+read paths fetch page pairs with a single gather (previously two separate
+``.at[].set`` / gather launches per layer per token).
+
 Two halves, deliberately separated:
 
 * :class:`BlockPool` — the HOST-side allocator: a free list of block ids
@@ -16,27 +22,32 @@ Two halves, deliberately separated:
   it is never handed out, and jit-compiled decode redirects the KV writes of
   inactive batch rows into it, so masked rows can never corrupt a live
   sequence's blocks.
-* pure jit-able helpers (``scatter_prefill_row`` / ``gather_pages`` /
+* pure jit-able helpers (``scatter_prefill_rows`` / ``gather_pages`` /
   ``append_kv``) — the device-side gather/scatter through block tables, used
   by :func:`repro.models.lm.decode_step_paged` and the engine's compiled
   chunk program. They close over nothing and take/return arrays only, so
-  they trace cleanly under ``jax.jit``/``lax.scan``.
+  they trace cleanly under ``jax.jit``/``lax.scan``. ``gather_pages`` is the
+  *reference oracle* read path: the serve hot path reads pages in place via
+  :mod:`repro.kernels.paged_attention` instead of materializing a gathered
+  copy.
 """
 from __future__ import annotations
 
 import threading
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence
 
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 
 __all__ = ["BlockPool", "init_kv_pool", "scatter_prefill_row",
-           "scatter_prefill_rows", "gather_pages", "append_kv",
-           "SINK_BLOCK"]
+           "scatter_prefill_rows", "gather_pages", "gather_read_attention",
+           "append_kv", "SINK_BLOCK"]
 
 #: Block id 0 is reserved: never allocated, target of masked-row KV writes.
 SINK_BLOCK = 0
+
+_NEG_INF = -2.0 ** 30  # matches models.attention / kernels (bf16-safe)
 
 
 class BlockPool:
@@ -110,7 +121,7 @@ class BlockPool:
     def fragmentation(self) -> float:
         """1 - (longest contiguous free run / free blocks): 0.0 when the
         free ids form one contiguous range, approaching 1.0 as the free set
-        shatters. Paged attention gathers through the table so this is a
+        shatters. Paged attention reads through the table so this is a
         locality metric, not a correctness one."""
         with self._lock:
             free = sorted(self._free)
@@ -134,10 +145,11 @@ class BlockPool:
 
 # ---------------------------------------------------------------- device side
 def init_kv_pool(cfg: ModelConfig, num_blocks: int, block_size: int
-                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Allocate the pooled KV storage: ``(L, num_blocks, KV, block, hd)``
-    for k and v (same layout as the contiguous cache with the sequence dim
-    split into pages)."""
+                 ) -> jnp.ndarray:
+    """Allocate the pooled KV storage: one ``(L, 2, num_blocks, KV, block,
+    hd)`` array — axis 1 stacks K (0) and V (1) so appends/gathers touch
+    both halves in a single launch. Same layout as the contiguous cache
+    with the sequence dim split into pages."""
     if cfg.ssm or cfg.hybrid_attn_every:
         raise ValueError(
             f"{cfg.name}: paged KV applies to attention caches only "
@@ -146,71 +158,116 @@ def init_kv_pool(cfg: ModelConfig, num_blocks: int, block_size: int
     # gather/scatter helpers above, so a models import here would cycle)
     from ..models.layers import dtype_of
     cdt = dtype_of(cfg.compute_dtype)
-    shape = (cfg.num_layers, num_blocks, cfg.num_kv_heads, block_size,
+    shape = (cfg.num_layers, 2, num_blocks, cfg.num_kv_heads, block_size,
              cfg.hd)
-    return jnp.zeros(shape, cdt), jnp.zeros(shape, cdt)
+    return jnp.zeros(shape, cdt)
 
 
 def scatter_prefill_row(pool: jnp.ndarray, blocks: jnp.ndarray,
-                        row: jnp.ndarray) -> jnp.ndarray:
+                        krow: jnp.ndarray, vrow: jnp.ndarray) -> jnp.ndarray:
     """Write one prefilled sequence into its blocks.
 
-    pool: (L, N, KV, bs, hd); blocks: (nb,) int32; row: (L, KV, S, hd) with
-    ``S <= nb * bs``. Returns the updated pool. Jit-safe: ``nb`` and ``S``
-    are static shapes.
+    pool: (L, 2, N, KV, bs, hd); blocks: (nb,) int32; krow/vrow:
+    (L, KV, S, hd) with ``S <= nb * bs``. Returns the updated pool.
+    Jit-safe: ``nb`` and ``S`` are static shapes.
     """
-    return scatter_prefill_rows(pool, blocks[None], row[:, None])
+    return scatter_prefill_rows(pool, blocks[None], krow[:, None],
+                                vrow[:, None])
 
 
 def scatter_prefill_rows(pool: jnp.ndarray, blocks: jnp.ndarray,
-                         rows: jnp.ndarray) -> jnp.ndarray:
-    """Write a whole admitted GROUP's prefilled sequences in one scatter.
+                         krows: jnp.ndarray, vrows: jnp.ndarray
+                         ) -> jnp.ndarray:
+    """Write a whole admitted GROUP's prefilled K and V in one scatter.
 
-    pool: (L, N, KV, bs, hd); blocks: (Bg, nb) int32 — every row uses the
+    pool: (L, 2, N, KV, bs, hd); blocks: (Bg, nb) int32 — every row uses the
     same block count (the group shares one prompt length, and ``nb`` covers
     the PROMPT footprint only, so the compiled shape keys on the admission
-    bucket, not on per-request ``max_new``); rows: (L, Bg, KV, S, hd) with
-    ``S <= nb * bs``. Rows own disjoint blocks, so the scatter indices
+    bucket, not on per-request ``max_new``); krows/vrows: (L, Bg, KV, S, hd)
+    with ``S <= nb * bs``. Rows own disjoint blocks, so the scatter indices
     never collide.
     """
-    L, _, KV, bs, hd = pool.shape
+    L, _, _, KV, bs, hd = pool.shape
     Bg, nb = blocks.shape
-    S = rows.shape[3]
+    rows = jnp.stack([krows, vrows], axis=1)     # (L, 2, Bg, KV, S, hd)
+    S = rows.shape[4]
     pad = nb * bs - S
     if pad:
-        rows = jnp.pad(rows, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
-    # (L, Bg, KV, nb*bs, hd) -> (L, Bg, nb, KV, bs, hd): page-major
-    paged = rows.reshape(L, Bg, KV, nb, bs, hd).transpose(0, 1, 3, 2, 4, 5)
-    return pool.at[:, blocks].set(paged)
+        rows = jnp.pad(rows, ((0, 0), (0, 0), (0, 0), (0, 0), (0, pad),
+                              (0, 0)))
+    # (L, 2, Bg, KV, nb*bs, hd) -> (L, 2, Bg, nb, KV, bs, hd): page-major
+    paged = rows.reshape(L, 2, Bg, KV, nb, bs, hd).transpose(
+        0, 1, 2, 4, 3, 5, 6)
+    return pool.at[:, :, blocks].set(paged)
 
 
-def gather_pages(pool_l: jnp.ndarray, tables: jnp.ndarray) -> jnp.ndarray:
-    """Gather one layer's pages for a batch of sequences.
+def gather_pages(pool_l: jnp.ndarray, tables: jnp.ndarray):
+    """Gather one layer's K and V pages for a batch of sequences.
 
-    pool_l: (N, KV, bs, hd); tables: (B, max_blocks) int32 (unused tail
-    entries point at the sink). Returns (B, KV, max_blocks * bs, hd) with
-    token position ``j`` at gathered index ``j`` — the contiguous view the
-    attention kernel reads, masked by each row's length.
+    pool_l: (2, N, KV, bs, hd); tables: (B, max_blocks) int32 (unused tail
+    entries point at the sink). Returns ``(ks, vs)``, each (B, KV,
+    max_blocks * bs, hd) with token position ``j`` at gathered index ``j``
+    — the contiguous view the reference attention path reads, masked by
+    each row's length. This materializes O(max_blocks) per row regardless
+    of its true length: the oracle the gather-free kernels are tested
+    against, not the serve hot path.
     """
     B, mb = tables.shape
-    _, KV, bs, hd = pool_l.shape
-    pages = pool_l[tables]                       # (B, mb, KV, bs, hd)
-    return pages.transpose(0, 2, 1, 3, 4).reshape(B, KV, mb * bs, hd)
+    _, _, KV, bs, hd = pool_l.shape
+    pages = pool_l[:, tables]                    # (2, B, mb, KV, bs, hd)
+    pages = pages.transpose(0, 1, 3, 2, 4, 5).reshape(2, B, KV, mb * bs, hd)
+    return pages[0], pages[1]
 
 
-def append_kv(pool_l: jnp.ndarray, new: jnp.ndarray, tables: jnp.ndarray,
-              pos: jnp.ndarray, active: jnp.ndarray) -> jnp.ndarray:
-    """Write one decode step's K (or V) for every batch row through the
-    block table.
+def gather_read_attention(q: jnp.ndarray, pool_l: jnp.ndarray,
+                          tables: jnp.ndarray, lengths: jnp.ndarray
+                          ) -> jnp.ndarray:
+    """The reference (oracle) paged read path: gather the fully padded
+    span via :func:`gather_pages`, mask by each row's length, softmax.
 
-    pool_l: (N, KV, bs, hd); new: (B, KV, hd); tables: (B, max_blocks);
-    pos: (B,) int32 write position per row; active: (B,) bool. Inactive
-    rows are redirected to the sink block so they cannot touch live pages.
+    q: (B, H, hd) current-token queries; pool_l: (2, N, KV, bs, hd);
+    tables: (B, max_blocks) int32; lengths: (B,) int32 per-row position
+    ``pos`` (key positions ``0..pos`` attend). Returns (B, H, hd) in the
+    pool dtype. O(max_blocks) per row regardless of true length — the
+    single definition the gather-free kernels are tested and benchmarked
+    against (``tests/test_paged_attention.py``,
+    ``benchmarks/paged_decode_microbench.py``) and the ``impl="gather"``
+    branch of :func:`repro.models.attention.paged_decode_attention`.
     """
-    _, _, bs, _ = pool_l.shape
+    B, H, hd = q.shape
+    KV = pool_l.shape[2]
+    G = H // KV
+    ks, vs = gather_pages(pool_l, tables)        # (B, KV, T, hd), T=mb*bs
+    T = ks.shape[2]
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgh,bksh->bkgs", qg, ks,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    kpos = jnp.arange(T, dtype=jnp.int32)
+    s = jnp.where((kpos[None, :] <= lengths[:, None])[:, None, None, :],
+                  s, _NEG_INF)
+    pmax = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - pmax)
+    probs = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(vs.dtype)
+    out = jnp.einsum("bkgs,bksh->bkgh", probs, vs)
+    return out.reshape(B, H, hd)
+
+
+def append_kv(pool_l: jnp.ndarray, new_k: jnp.ndarray, new_v: jnp.ndarray,
+              tables: jnp.ndarray, pos: jnp.ndarray, active: jnp.ndarray
+              ) -> jnp.ndarray:
+    """Write one decode step's K AND V for every batch row through the
+    block table — one fused scatter launch.
+
+    pool_l: (2, N, KV, bs, hd); new_k/new_v: (B, KV, hd); tables:
+    (B, max_blocks); pos: (B,) int32 write position per row; active: (B,)
+    bool. Inactive rows are redirected to the sink block so they cannot
+    touch live pages.
+    """
+    _, _, _, bs, _ = pool_l.shape
     B, mb = tables.shape
     idx = jnp.clip(pos // bs, 0, mb - 1)
     blk = jnp.where(active, jnp.take_along_axis(
         tables, idx[:, None], axis=1)[:, 0], SINK_BLOCK)
     off = jnp.where(active, pos % bs, 0)
-    return pool_l.at[blk, :, off].set(new.astype(pool_l.dtype))
+    new = jnp.stack([new_k, new_v], axis=1)      # (B, 2, KV, hd)
+    return pool_l.at[:, blk, :, off].set(new.astype(pool_l.dtype))

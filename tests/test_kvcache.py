@@ -63,34 +63,42 @@ def test_blocks_for_and_fragmentation():
 # ------------------------------------------------------- gather / scatter
 def test_scatter_gather_roundtrip_and_sink():
     cfg = get_config("stablelm-1.6b").smoke()
-    pool_k, _ = init_kv_pool(cfg, num_blocks=8, block_size=4)
-    L, N, KV, bs, hd = pool_k.shape
+    pool = init_kv_pool(cfg, num_blocks=8, block_size=4)
+    L, two, N, KV, bs, hd = pool.shape
+    assert two == 2                  # K and V stacked: one-scatter appends
     S = 6
     rng = np.random.default_rng(0)
-    row = jnp.asarray(rng.standard_normal((L, KV, S, hd)),
-                      pool_k.dtype)
+    krow = jnp.asarray(rng.standard_normal((L, KV, S, hd)), pool.dtype)
+    vrow = jnp.asarray(rng.standard_normal((L, KV, S, hd)), pool.dtype)
     blocks = jnp.asarray([3, 5], jnp.int32)
-    pool_k = scatter_prefill_row(pool_k, blocks, row)
+    pool = scatter_prefill_row(pool, blocks, krow, vrow)
     tables = jnp.zeros((1, 3), jnp.int32).at[0, :2].set(blocks)
-    got = gather_pages(pool_k[0], tables)        # (1, KV, 3*bs, hd)
-    np.testing.assert_array_equal(np.asarray(got[0, :, :S]),
-                                  np.asarray(row[0]))
+    ks, vs = gather_pages(pool[0], tables)       # (1, KV, 3*bs, hd) each
+    np.testing.assert_array_equal(np.asarray(ks[0, :, :S]),
+                                  np.asarray(krow[0]))
+    np.testing.assert_array_equal(np.asarray(vs[0, :, :S]),
+                                  np.asarray(vrow[0]))
     # table tail points at the sink: those positions read zeros
-    np.testing.assert_array_equal(np.asarray(got[0, :, 2 * bs:]), 0.0)
+    np.testing.assert_array_equal(np.asarray(ks[0, :, 2 * bs:]), 0.0)
 
-    # append the 7th token (block idx 1, offset 2) on the active row
-    new = jnp.full((1, KV, hd), 7.0, pool_k.dtype)
-    p_act = append_kv(pool_k[0], new, tables,
+    # append the 7th token (block idx 1, offset 2) on the active row:
+    # K and V land in ONE scatter
+    new_k = jnp.full((1, KV, hd), 7.0, pool.dtype)
+    new_v = jnp.full((1, KV, hd), 5.0, pool.dtype)
+    p_act = append_kv(pool[0], new_k, new_v, tables,
                       jnp.asarray([S], jnp.int32), jnp.asarray([True]))
-    np.testing.assert_array_equal(
-        np.asarray(gather_pages(p_act, tables)[0, :, S]),
-        np.asarray(new[0]))
+    ks2, vs2 = gather_pages(p_act, tables)
+    np.testing.assert_array_equal(np.asarray(ks2[0, :, S]),
+                                  np.asarray(new_k[0]))
+    np.testing.assert_array_equal(np.asarray(vs2[0, :, S]),
+                                  np.asarray(new_v[0]))
     # inactive row: the write is redirected to the sink block
-    p_in = append_kv(pool_k[0], new * 9, tables,
+    p_in = append_kv(pool[0], new_k * 9, new_v * 9, tables,
                      jnp.asarray([S], jnp.int32), jnp.asarray([False]))
-    np.testing.assert_array_equal(np.asarray(p_in[3:6]),
-                                  np.asarray(pool_k[0][3:6]))
-    assert np.any(np.asarray(p_in[SINK_BLOCK]) == 63.0)
+    np.testing.assert_array_equal(np.asarray(p_in[:, 3:6]),
+                                  np.asarray(pool[0][:, 3:6]))
+    assert np.any(np.asarray(p_in[0, SINK_BLOCK]) == 63.0)
+    assert np.any(np.asarray(p_in[1, SINK_BLOCK]) == 45.0)
 
 
 def test_init_kv_pool_rejects_ssm():

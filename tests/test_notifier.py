@@ -14,6 +14,31 @@ def test_notify_between_prepare_and_commit_not_lost():
     assert time.perf_counter() - t0 < 0.5
 
 
+def test_commit_wait_backstop_timeout_returns_false():
+    """No notification at all: commit_wait must report the backstop
+    timeout as False (it used to return ``woke or True`` == True)."""
+    n = EventNotifier(backstop_s=0.05)
+    w = Waiter()
+    n.prepare_wait(w)
+    t0 = time.perf_counter()
+    assert n.commit_wait(w) is False
+    assert time.perf_counter() - t0 >= 0.04      # actually slept
+    assert n.spurious_wakeups == 1
+
+
+def test_commit_wait_notified_mid_sleep_returns_true():
+    n = EventNotifier(backstop_s=5.0)
+    w = Waiter()
+    n.prepare_wait(w)
+    t = threading.Timer(0.05, n.notify_one)
+    t.start()
+    t0 = time.perf_counter()
+    assert n.commit_wait(w) is True
+    assert time.perf_counter() - t0 < 2.0        # woke well before backstop
+    t.join()
+    assert n.spurious_wakeups == 0
+
+
 def test_cancel_wait():
     n = EventNotifier()
     w = Waiter()
