@@ -138,7 +138,7 @@ def _serve_rows(quick: bool):
             group = [p for p in prompts if len(p) == s]
             toks = np.stack(group)
             logits, cache = eng._prefill(eng.params, jnp.asarray(toks),
-                                         max_len=s + max_new + 1)
+                                         None, max_len=s + max_new + 1)
             cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             seqs = [np.asarray(cur)[:, None]]
             remaining = max_new - 1

@@ -71,6 +71,10 @@ def main() -> None:
                     help="seconds-scale smoke sizes (tier-1 environment)")
     ap.add_argument("--bench-dir", default=".",
                     help="where BENCH_<suite>.json trajectory files land")
+    ap.add_argument("--prompt-dist", default="choice",
+                    choices=("choice", "lognormal"),
+                    help="serve suite prompt-length distribution "
+                         "(lognormal = heavy tail)")
     args = ap.parse_args()
 
     from . import (fig9_micro_random_dag, fig11_corun_throughput,
@@ -88,11 +92,13 @@ def main() -> None:
         "fig21": fig21_incremental_timing.bench,
         "roofline": roofline_report.bench,
         "pipeline": lambda: pipeline_throughput.bench(quick=args.quick),
-        "serve": lambda: serve_continuous.bench(quick=args.quick),
+        "serve": lambda: serve_continuous.bench(
+            quick=args.quick, prompt_dist=args.prompt_dist),
         "paged_decode":
             lambda: paged_decode_microbench.bench(quick=args.quick),
     }
     config = {"quick": args.quick, "only": args.only,
+              "prompt_dist": args.prompt_dist,
               "paged_impl_env": os.environ.get("REPRO_PAGED_IMPL", "")}
     only = [s for s in args.only.split(",") if s]
     failures = 0

@@ -8,28 +8,51 @@ Two modes over identical (seeded) traces:
 * ``continuous`` — one resident ServeEngine; each arrival is ``submit()``-ed
   at its trace time and joins the running batch at the next chunk boundary.
 * ``per-call``   — the pre-continuous-batching behaviour: each arrival is
-  served by its own ``generate([prompt])`` call on a dedicated engine
+  served by its own per-call grouped pipeline run on a dedicated engine
   (requests queue FIFO behind one another; no cross-request batching).
 
-Reported per mode: wall-clock tokens/sec and p50/p99 request latency
-(submit -> result). The derived column of the continuous rows shows the
-speedup over the per-call baseline.
+Prompt-length distributions (``--prompt-dist``):
+
+* ``choice``    — a few fixed lengths (the original workload);
+* ``lognormal`` — a heavy-tailed mix (most prompts short, a fat tail of
+  long ones, quantized to multiples of 4). This is the workload two-phase
+  admission is for: chunked prefill keeps long prompts from stalling the
+  batch, prompt-only admission keeps the tail from hogging pool capacity
+  it has not earned yet, and mixed lengths admit together (no buckets).
+
+Reported per mode: wall-clock tokens/sec, p50/p99 request latency
+(submit -> result) and — continuous only — p50/p99 ADMISSION latency
+(nominal arrival -> first admission into the running batch: the queueing
+delay the prompt-only block budget is meant to shrink). The derived column
+of the continuous rows shows the speedup over the per-call baseline.
 """
 from __future__ import annotations
 
 import time
 from typing import Iterator, List, Tuple
 
+PROMPT_DISTS = ("choice", "lognormal")
 
-def _trace(rng, n: int, rate_hz: float, lens: Tuple[int, ...],
-           max_new: int):
+
+def _sample_lens(rng, n: int, dist: str, quick: bool):
+    import numpy as np
+    if dist == "lognormal":
+        cap = 32 if quick else 64
+        raw = rng.lognormal(mean=np.log(10.0), sigma=0.8, size=n)
+        # quantize to multiples of 4: bounds the per-call baseline's
+        # per-length compile count while keeping the tail heavy
+        return np.clip((np.ceil(raw / 4) * 4).astype(int), 4, cap)
+    lens = (8, 12) if quick else (16, 24, 32)
+    return np.asarray([int(rng.choice(lens)) for _ in range(n)])
+
+
+def _trace(rng, sizes, rate_hz: float, max_new: int):
     """Poisson arrivals: (arrival_time, prompt, max_new) tuples."""
     t = 0.0
     out = []
-    for _ in range(n):
+    for size in sizes:
         t += rng.exponential(1.0 / rate_hz)
-        size = int(rng.choice(lens))
-        prompt = rng.integers(0, 500, size=size).astype("int32")
+        prompt = rng.integers(0, 500, size=int(size)).astype("int32")
         out.append((t, prompt, max_new))
     return out
 
@@ -40,16 +63,21 @@ def _percentiles(lat: List[float]) -> Tuple[float, float]:
 
 
 def bench(quick: bool = False,
-          impl: str = None) -> Iterator[Tuple[str, str, str]]:
+          impl: str = None,
+          prompt_dist: str = "choice") -> Iterator[Tuple[str, str, str]]:
     """impl picks the continuous engine's paged read path ("pallas" /
     "xla" / "gather"); None = engine default (REPRO_PAGED_IMPL env or
-    backend-based, see repro.kernels.ops.default_paged_impl)."""
+    backend-based, see repro.kernels.ops.default_paged_impl).
+    prompt_dist: "choice" (fixed lengths) or "lognormal" (heavy tail)."""
     import jax
     import numpy as np
     from repro.configs import get_config
     from repro.models import lm
     from repro.serve.engine import ServeEngine
 
+    if prompt_dist not in PROMPT_DISTS:
+        raise ValueError(f"prompt_dist={prompt_dist!r}: expected one of "
+                         f"{PROMPT_DISTS}")
     cfg = get_config("stablelm-1.6b").smoke()
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     n_req = 8 if quick else 32
@@ -60,30 +88,39 @@ def bench(quick: bool = False,
     # overlapping requests — at sub-saturation rates a single-stream CPU
     # serves per-call requests back-to-back and nothing can be batched
     rate = 200.0 if quick else 20.0
-    lens = (8, 12) if quick else (16, 24, 32)
     rng = np.random.default_rng(0)
-    trace = _trace(rng, n_req, rate, lens, max_new)
+    sizes = _sample_lens(rng, n_req, prompt_dist, quick)
+    trace = _trace(rng, sizes, rate, max_new)
     total_tokens = n_req * max_new
 
-    # size the paged geometry to the trace: every decode row pays a gather
-    # over max_seq_len key positions, so an oversized table width taxes the
-    # whole batch (the same sizing a production deployment does)
+    # size the paged geometry to the trace's TAIL: two-phase admission means
+    # only live tokens tax the pool, but the table width still keys on the
+    # longest admissible sequence
     bs = 8
-    max_seq = -(-(max(lens) + max_new) // bs) * bs
+    max_seq = -(-(int(sizes.max()) + max_new) // bs) * bs
+    distinct = sorted({len(p) for _, p, _ in trace})
+    # a 2-block prefill window: the trace's tail prompts stream across
+    # multiple cycles instead of serializing one long launch
+    prefill_chunk = 2 * bs
 
     # ---------------------------------------------------------- continuous
     with ServeEngine(cfg, params, decode_chunk=chunk, block_size=bs,
                      max_seq_len=max_seq, kv_blocks=128,
+                     prefill_chunk=prefill_chunk,
                      paged_impl=impl) as eng:
         read_impl = eng.paged_impl
-        # warm-up: one request per distinct prompt length compiles the paged
-        # chunk program + that length's (padded) prefill and scatter — the
-        # engine pads admission groups to max_admit, so group-size variance
-        # under Poisson arrivals triggers no further compilation
-        for s in lens:
+        # warm-up: chunked prefill keys compiled shapes on the pow2-rounded
+        # window size, so one request per distinct pow2 bucket (not per
+        # length) compiles the prefill programs...
+        buckets = {1 << max(0, s - 1).bit_length(): s for s in distinct}
+        for s in buckets.values():
             warm = [p for _, p, _ in trace if len(p) == s][:1]
             if warm:
                 eng.generate(warm, max_new=chunk + 1)
+        # ... and one saturating mixed-length burst compiles the group-merge
+        # / growth / retire scatter shapes (pow2-padded, so a burst covers
+        # every size the trace can trigger)
+        eng.generate([p for _, p, _ in trace], max_new=chunk + 1)
         for k in eng.stats:
             eng.stats[k] = 0
         t0 = time.perf_counter()
@@ -93,21 +130,25 @@ def bench(quick: bool = False,
             if now < at:
                 time.sleep(at - now)
             reqs.append((at, eng.submit(prompt, mn)))
-        lat = []
+        lat, alat = [], []
         for at, r in reqs:
             eng.result(r, timeout=600.0)
             # latency from NOMINAL arrival to completion (includes any
             # admission queueing — same clock the baseline is held to)
             lat.append(r.finished_at - t0 - at)
+            # admission latency: nominal arrival -> first admission (the
+            # wait the prompt-only block budget is meant to shrink)
+            alat.append(max(0.0, r.admitted_at - t0 - at))
         cont_dt = time.perf_counter() - t0
         cont_p50, cont_p99 = _percentiles(lat)
+        adm_p50, adm_p99 = _percentiles(alat)
         stats = dict(eng.stats)
 
     # ------------------------------------------------------------ per-call
     with ServeEngine(cfg, params, decode_chunk=chunk) as base:
-        # warm the GROUPED path the baseline times (its prefill max_len and
-        # contiguous chunk program differ from the paged engine's)
-        for s in lens:
+        # warm the GROUPED baseline path per distinct length (its prefill
+        # max_len and contiguous chunk program key on the prompt length)
+        for s in distinct:
             warm = [p for _, p, _ in trace if len(p) == s][:1]
             if warm:
                 base._generate_grouped(warm, max_new)
@@ -127,10 +168,14 @@ def bench(quick: bool = False,
     yield ("serve_continuous_tok_per_s", f"{total_tokens/cont_dt:.1f}",
            f"{base_dt/cont_dt:.2f}x_per_call")
     yield ("serve_continuous_paged_impl", read_impl, "")
+    yield ("serve_prompt_dist", prompt_dist,
+           f"lens_{int(sizes.min())}_{int(sizes.max())}")
     yield ("serve_continuous_p50_ms", f"{cont_p50*1e3:.0f}",
            f"{base_p50/max(cont_p50,1e-9):.2f}x_per_call")
     yield ("serve_continuous_p99_ms", f"{cont_p99*1e3:.0f}",
            f"{base_p99/max(cont_p99,1e-9):.2f}x_per_call")
+    yield ("serve_admission_p50_ms", f"{adm_p50*1e3:.0f}", "")
+    yield ("serve_admission_p99_ms", f"{adm_p99*1e3:.0f}", "")
     yield ("serve_percall_tok_per_s", f"{total_tokens/base_dt:.1f}", "")
     yield ("serve_percall_p50_ms", f"{base_p50*1e3:.0f}", "")
     yield ("serve_percall_p99_ms", f"{base_p99*1e3:.0f}", "")
@@ -138,6 +183,9 @@ def bench(quick: bool = False,
            f"{stats['prefills']}_prefill_launches")
     yield ("serve_continuous_decode_cycles", str(stats["decode_cycles"]),
            f"{stats['admit_parks']}_admit_parks")
+    yield ("serve_continuous_growth", str(stats["grown_blocks"]),
+           f"{stats['preempted']}_preemptions_"
+           f"{stats['prefill_windows']}_windows")
 
 
 if __name__ == "__main__":
@@ -147,6 +195,11 @@ if __name__ == "__main__":
     ap.add_argument("--impl", default=None,
                     choices=("pallas", "xla", "gather"),
                     help="paged read path of the continuous engine")
+    ap.add_argument("--prompt-dist", default="choice",
+                    choices=PROMPT_DISTS,
+                    help="prompt-length distribution of the trace "
+                         "(lognormal = heavy tail)")
     args = ap.parse_args()
-    for name, val, derived in bench(quick=args.quick, impl=args.impl):
+    for name, val, derived in bench(quick=args.quick, impl=args.impl,
+                                    prompt_dist=args.prompt_dist):
         print(f"{name},{val},{derived}")

@@ -55,9 +55,10 @@ def main() -> None:
           f"({eng.stats['decode_cycles']} chunked decode launches)")
     print("first sample:", outs[0][:24].tolist())
 
-    # mixed prompt lengths: the scheduler buckets by length, admits one
-    # bucket per cycle, and the buckets SHARE the decode batch — request B
-    # prefills while request A decodes, then both advance in one chunk
+    # mixed prompt lengths: chunked prefill makes per-window shapes uniform,
+    # so DIFFERENT lengths ride one admission group / one prefill launch and
+    # share the decode batch — request B prefills while request A decodes,
+    # then both advance in one chunk
     mixed = prompts[: args.batch // 2] + [
         rng.integers(0, cfg.vocab_size,
                      size=args.prompt_len // 2).astype(np.int32)

@@ -3,8 +3,10 @@
 Requests are submitted one by one against the long-running pipeline
 (``submit()``/``result()``); with ``--stagger`` the submissions arrive
 spaced out, so later requests join the batch while earlier ones are
-mid-decode — the continuous-batching path. ``--per-call`` keeps the old
-batch-call shim (``generate()``) for comparison.
+mid-decode — the continuous-batching path, for every architecture
+(attention models page their KV; SSM/hybrid models slot their recurrent
+state). ``--per-call`` runs the retired per-call grouped pipeline for
+comparison.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b \
         --preset smoke --batch 4 --prompt-len 32 --max-new 32 --stagger 0.05
@@ -30,6 +32,9 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--decode-chunk", type=int, default=8)
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="prompt tokens per chunked-prefill window "
+                         "(default: decode_chunk * block_size)")
     ap.add_argument("--kv-blocks", type=int, default=128)
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--stagger", type=float, default=0.0,
@@ -53,12 +58,16 @@ def main() -> None:
     total_new = args.batch * args.max_new
 
     with ServeEngine(cfg, params, decode_chunk=args.decode_chunk,
+                     prefill_chunk=args.prefill_chunk,
                      kv_blocks=args.kv_blocks,
                      block_size=args.block_size) as eng:
         t0 = time.time()
-        if args.per_call or not eng.paged:
-            outs = eng.generate(prompts, max_new=args.max_new)
+        if args.per_call:
+            # the retired per-call grouped pipeline, kept as the baseline
+            outs = eng._generate_grouped(prompts, args.max_new)
         else:
+            # every arch serves through the resident pipeline now: paged KV
+            # for attention models, the slot-state pool for SSM/hybrid
             reqs = []
             for p in prompts:
                 reqs.append(eng.submit(p, max_new=args.max_new))
@@ -68,9 +77,8 @@ def main() -> None:
         dt = time.time() - t0
         print(f"{cfg.name}: generated {total_new} tokens in {dt:.2f}s "
               f"({total_new/dt:.1f} tok/s, batch={args.batch}, "
-              f"mode={'per-call' if args.per_call or not eng.paged else 'continuous'})")
-        if eng.paged:
-            print("engine stats:", eng.stats)
+              f"mode={'per-call' if args.per_call else 'continuous'})")
+        print("engine stats:", eng.stats)
         print("sample:", outs[0][:16].tolist())
 
 

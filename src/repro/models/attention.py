@@ -26,7 +26,8 @@ from ..distributed.sharding import constrain
 from .layers import dense_init, dtype_of, rms_norm, rope
 
 __all__ = ["init_attention", "attention", "decode_attention",
-           "paged_decode_attention", "NEG_INF"]
+           "decode_attention_rows", "paged_decode_attention",
+           "paged_prefill_window_attention", "NEG_INF"]
 
 NEG_INF = -2.0 ** 30  # large-but-finite: keeps bf16 softmax NaN-free
 
@@ -216,6 +217,91 @@ def paged_decode_attention(p, x, cfg: ModelConfig, pool_kv, tables,
     y = jnp.einsum("bh,hd->bd", out.reshape(B, H * hd).astype(cdt),
                    p["wo"].astype(cdt))
     return y[:, None, :], pool_kv
+
+
+def paged_prefill_window_attention(p, x, cfg: ModelConfig, pool_kv, tables,
+                                   positions, valid):
+    """One chunked-prefill WINDOW against one layer's paged KV pool.
+
+    The two-phase-admission engine feeds a prompt into the pool in
+    fixed-size windows across successive pipeline cycles; each window's K/V
+    is scattered through the row's block table and its queries then attend
+    to the row's full paged prefix (earlier windows included) plus the
+    causal part of the window itself. The read is the gather path — prefill
+    runs once per window, not once per generated token, so the
+    materializing read is fine here; the per-token decode hot path stays on
+    the gather-free kernels.
+
+    x: (B, C, D) window hidden states; pool_kv: (2, N, KV, block, hd) this
+    layer's pages; tables: (B, max_blocks) int32; positions: (B, C) int32
+    absolute positions ``start[b] + c``; valid: (B, C) bool — False entries
+    (rows not prefilling, window tail past the prompt) scatter to the sink
+    block and their outputs are junk the engine never reads. Valid entries
+    always form a per-row prefix, so a valid query's causal span
+    ``kpos <= positions[b, c]`` is fully populated. Returns (y (B, C, D),
+    pool_kv).
+    """
+    from ..serve.kvcache import gather_pages, scatter_token_window
+
+    B, C, D = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    G = H // KV
+    cdt = dtype_of(cfg.compute_dtype)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    pool_kv = scatter_token_window(pool_kv, k, v, tables, positions[:, 0],
+                                   valid)
+    ks, vs = gather_pages(pool_kv, tables)           # (B, KV, T, hd)
+    T = ks.shape[2]
+    qg = q.reshape(B, C, KV, G, hd)
+    s = jnp.einsum("bckgh,bksh->bkgcs", qg, ks,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    kpos = jnp.arange(T, dtype=jnp.int32)
+    mask = kpos[None, None, None, None, :] <= positions[:, None, None, :, None]
+    s = jnp.where(mask, s, NEG_INF)
+    pmax = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - pmax)
+    probs = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(vs.dtype)
+    out = jnp.einsum("bkgcs,bksh->bckgh", probs, vs)
+    y = jnp.einsum("bch,hd->bcd", out.reshape(B, C, H * hd).astype(cdt),
+                   p["wo"].astype(cdt))
+    return y, pool_kv
+
+
+def decode_attention_rows(p, x, cfg: ModelConfig, cache_k, cache_v, pos):
+    """Per-row-position variant of :func:`decode_attention` for the
+    slot-resident hybrid (zamba2) shared block: rows of a continuously
+    batched decode sit at different sequence positions, so each row writes
+    its token at its OWN ``pos[b]`` and masks its OWN causal extent — the
+    contiguous path's single scalar ``pos`` cannot express that.
+
+    x: (B, 1, D); cache_[kv]: (B, KV, S_max, hd) slot-pool caches (each slot
+    owns a fixed contiguous span — attention state here is the per-slot pool
+    entry, not a paged table); pos: (B,) int32. Returns (y, cache_k,
+    cache_v). Row-wise math: a row's output depends only on its own cache
+    row, so resident rows are bit-identical to the grouped per-call path.
+    """
+    B, _, D = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    G = H // KV
+    S_max = cache_k.shape[2]
+    q, k, v = _project_qkv(p, x, cfg, pos[:, None])
+    cdt = dtype_of(cfg.compute_dtype)
+    bidx = jnp.arange(B, dtype=jnp.int32)
+    cache_k = cache_k.at[bidx, :, pos].set(k[:, 0].astype(cache_k.dtype))
+    cache_v = cache_v.at[bidx, :, pos].set(v[:, 0].astype(cache_v.dtype))
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgh,bksh->bkgs", qg, cache_k,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    kpos = jnp.arange(S_max, dtype=jnp.int32)
+    s = jnp.where((kpos[None, :] <= pos[:, None])[:, None, None, :],
+                  s, NEG_INF)
+    pmax = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - pmax)
+    probs = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(cache_v.dtype)
+    out = jnp.einsum("bkgs,bksh->bkgh", probs, cache_v)
+    y = jnp.einsum("bh,hd->bd", out.reshape(B, H * hd).astype(cdt),
+                   p["wo"].astype(cdt))
+    return y[:, None, :], cache_k, cache_v
 
 
 def decode_attention(p, x, cfg: ModelConfig, cache_k, cache_v, pos):

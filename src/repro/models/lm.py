@@ -31,14 +31,16 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from ..distributed.sharding import constrain
-from .attention import attention, decode_attention, init_attention
+from .attention import (attention, decode_attention, decode_attention_rows,
+                        init_attention)
 from .layers import dtype_of, normal_init, rms_norm, sinusoidal_positions
 from .mamba import init_mamba, init_mamba_state, mamba_forward, mamba_step
 from .mlp import init_mlp, mlp
 from .moe import init_moe, moe_layer
 
 __all__ = ["init_params", "forward", "loss_fn", "init_cache", "prefill",
-           "decode_step", "decode_step_paged"]
+           "prefill_window_paged", "decode_step", "decode_step_paged",
+           "decode_step_slots"]
 
 
 # ------------------------------------------------------------------ init
@@ -367,6 +369,99 @@ def decode_step(cfg: ModelConfig, params, cache, token
     return logits, new_cache
 
 
+def _shared_block_decode_rows(p, x1, x0, cfg, ck, cv, pos):
+    """Per-row-position zamba2 shared block (slot-resident decode)."""
+    cdt = dtype_of(cfg.compute_dtype)
+    h = jnp.concatenate([x1, x0], axis=-1) @ p["fused_proj"].astype(cdt)
+    a, ck, cv = decode_attention_rows(
+        p, rms_norm(h, p["ln1"], cfg.rms_eps)[:, None, :], cfg, ck, cv, pos)
+    h = h + a[:, 0]
+    h = h + mlp(p, rms_norm(h, p["ln2"], cfg.rms_eps)[:, None, :],
+                cfg)[:, 0]
+    return x1 + h, ck, cv
+
+
+def decode_step_slots(cfg: ModelConfig, params, state, token, pos
+                      ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """One decode step over the SLOT-RESIDENT state pool of an SSM/hybrid
+    architecture — the recurrent-state counterpart of
+    :func:`decode_step_paged`, with PER-ROW positions.
+
+    The continuous-batching engine keeps one fixed-slot pool of recurrent
+    state (mamba ``(conv_buf, h)`` per layer; zamba2 additionally the shared
+    block's per-slot KV span): sequences claim a slot at admission (their
+    prefilled state is scattered in), decode side by side at their own
+    positions, and release the slot at retirement. ``state`` is
+    :func:`init_cache`'s pytree minus the scalar ``pos`` (replaced by the
+    per-row ``pos`` argument). Every op here is row-wise — no cross-batch
+    reduction — so a resident row's tokens are bit-identical to the grouped
+    per-call path regardless of who shares the batch; inactive slots step on
+    stale state harmlessly (their output is discarded host-side, their slot
+    is overwritten at the next admission).
+
+    This mirrors :func:`decode_step`'s scan skeleton with the scalar
+    ``cache["pos"]`` replaced by the per-row argument (the per-layer math is
+    shared through :func:`_block_decode`); a change to the embed / final
+    norm / lm-head framing there must be mirrored here, or the slot path
+    silently diverges from the reference it is tested against.
+
+    token: (B,) int32 current input token; pos: (B,) int32 per-row position.
+    Returns (logits (B, padded_vocab) f32, new state).
+    """
+    if not (cfg.ssm or cfg.hybrid_attn_every):
+        raise ValueError(f"{cfg.name}: slot-state decode is the SSM/hybrid "
+                         "path; attention archs page their KV instead")
+    cdt = dtype_of(cfg.compute_dtype)
+    x1 = jnp.take(params["embed"], token, axis=0).astype(cdt)
+    if cfg.pos_emb == "sinusoidal":
+        x1 = x1 + sinusoidal_positions(pos, cfg.d_model).astype(cdt)
+    new_state = dict(state)
+    if cfg.hybrid_attn_every:
+        x0 = x1
+        sb = params["shared_block"]
+
+        def group(carry, xs):
+            xx = carry
+            gp, g_ssm, ck, cv = xs
+
+            def layer(c, l_xs):
+                lp, st = l_xs
+                c, st = _block_decode(lp, c, cfg, st, pos)
+                return c, st
+
+            xx, g_ssm = jax.lax.scan(layer, xx, (gp, g_ssm))
+            xx, ck, cv = _shared_block_decode_rows(sb, xx, x0, cfg, ck, cv,
+                                                   pos)
+            return xx, (g_ssm, ck, cv)
+
+        x1, (g_ssm, sk, sv) = jax.lax.scan(
+            group, x1, (params["gblocks"], state["g_ssm"],
+                        state["shared_k"], state["shared_v"]))
+        new_state["g_ssm"], new_state["shared_k"], new_state["shared_v"] = \
+            g_ssm, sk, sv
+        if "tail_blocks" in params:
+            def layer(c, l_xs):
+                lp, st = l_xs
+                return _block_decode(lp, c, cfg, st, pos)
+
+            x1, tail = jax.lax.scan(layer, x1,
+                                    (params["tail_blocks"],
+                                     state["tail_ssm"]))
+            new_state["tail_ssm"] = tail
+    else:
+        def layer(c, l_xs):
+            lp, st = l_xs
+            return _block_decode(lp, c, cfg, st, pos)
+
+        x1, ssm = jax.lax.scan(layer, x1, (params["blocks"], state["ssm"]))
+        new_state["ssm"] = ssm
+    x1 = rms_norm(x1, params["final_norm"], cfg.rms_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bd,dv->bv", x1, head.astype(cdt),
+                        preferred_element_type=jnp.float32)
+    return logits, new_state
+
+
 def decode_step_paged(cfg: ModelConfig, params, pool_kv, tables,
                       lengths, token, active, impl: Optional[str] = None
                       ) -> Tuple[jnp.ndarray, Any]:
@@ -418,16 +513,97 @@ def decode_step_paged(cfg: ModelConfig, params, pool_kv, tables,
     return logits, pool_kv
 
 
+def _block_window(p, x, cfg: ModelConfig, attn_fn, pkv_l):
+    """One layer over a chunked-prefill window. Mirrors :func:`_block_apply`
+    with the attention swapped for a paged read/write through ``attn_fn(p,
+    h, pkv_l) -> (y, pkv_l)`` — ln1/residual/ln2/MoE-or-MLP stay shared so
+    the window path cannot structurally diverge from full prefill."""
+    h = rms_norm(x, p["ln1"], cfg.rms_eps)
+    y, pkv_l = attn_fn(p, h, pkv_l)
+    x = x + y
+    h2 = rms_norm(x, p["ln2"], cfg.rms_eps)
+    if cfg.moe:
+        y2, _ = moe_layer(p, h2, cfg)
+        x = x + y2
+    else:
+        x = x + mlp(p, h2, cfg)
+    return x, pkv_l
+
+
+def prefill_window_paged(cfg: ModelConfig, params, pool_kv, tables, tokens,
+                         start, valid, last_idx
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Process one chunked-prefill WINDOW for every mid-prefill row of the
+    resident batch, writing the window's KV straight into the paged pool.
+
+    This is the second half of two-phase admission's chunked prefill: the
+    engine admits a prompt on its prompt-only footprint, scatters its first
+    window at the merge, and then feeds the remainder through THIS function
+    one fixed-size window per pipeline cycle — resident rows keep decoding
+    in the overlapped cycles, and because the window shape ``(B, C)`` never
+    depends on prompt lengths, mixed-length admission groups share one
+    compiled program.
+
+    pool_kv: (L, 2, N, KV, block, hd); tables: (B, max_blocks) int32;
+    tokens: (B, C) int32 window tokens (invalid entries arbitrary); start:
+    (B,) int32 per-row window origin (absolute position of window column 0);
+    valid: (B, C) bool (False for rows not prefilling and past-prompt
+    tails); last_idx: (B,) int32 window column of each row's FINAL prompt
+    token, clipped into range — its logits seed the row's first generated
+    token, consumed only for rows whose prompt ends in this window.
+    Returns (first_tokens (B,) int32 greedy, pool_kv). Attention archs only.
+    """
+    if cfg.ssm or cfg.hybrid_attn_every:
+        raise ValueError(f"{cfg.name}: paged chunked prefill requires a "
+                         "pure attention architecture")
+    from .attention import paged_prefill_window_attention
+
+    cdt = dtype_of(cfg.compute_dtype)
+    B, C = tokens.shape
+    positions = start[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    if cfg.pos_emb == "sinusoidal":
+        x = x + sinusoidal_positions(positions, cfg.d_model).astype(cdt)
+
+    def win_attn(lp, h, pkv_l):
+        return paged_prefill_window_attention(lp, h, cfg, pkv_l, tables,
+                                              positions, valid)
+
+    def layer(c, l_xs):
+        lp, pkv_l = l_xs
+        c, pkv_l = _block_window(lp, c, cfg, win_attn, pkv_l)
+        return c, pkv_l
+
+    x, pool_kv = jax.lax.scan(layer, x, (params["blocks"], pool_kv))
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    x_last = x[jnp.arange(B), last_idx]
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bd,dv->bv", x_last, head.astype(cdt),
+                        preferred_element_type=jnp.float32)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), pool_kv
+
+
 def prefill(cfg: ModelConfig, params, tokens, max_len: int = 0,
-            frontend_embeds=None):
+            frontend_embeds=None, last_positions=None):
     """Process a prompt, producing last-position logits + a primed cache.
 
     For attention archs the KV cache is computed per layer; for SSM archs
     the (conv, h) states are produced by the chunked scans. max_len=0 sizes
     the cache exactly at the prompt length (the dry-run prefill cell).
+    ``last_positions`` ((B,) int32, optional) picks a PER-ROW logit
+    position instead of the shared final one — mixed-length admission
+    groups are right-padded to one window shape, so each row's first-token
+    logits sit at its own prompt end.
     """
     B, S = tokens.shape[:2]
     F = cfg.frontend_tokens if cfg.frontend != "none" else 0
+    if F and last_positions is not None:
+        # last_positions indexes the CONCATENATED (frontend + token)
+        # sequence; the serve engine only uses it on frontend-free archs,
+        # and silently off-by-F logits would be worse than refusing
+        raise ValueError(f"{cfg.name}: last_positions does not account for "
+                         "the frontend prefix; offset by frontend_tokens "
+                         "first")
     total = S + F
     max_len = max(max_len, total)
     x, positions = _embed(cfg, params, tokens, frontend_embeds)
@@ -527,9 +703,11 @@ def prefill(cfg: ModelConfig, params, tokens, max_len: int = 0,
             if cfg.remat else body
         x, (k, v) = jax.lax.scan(fn, x, params["blocks"])
         cache["k"], cache["v"] = k, v
-    x = rms_norm(x[:, -1], params["final_norm"], cfg.rms_eps)
+    x_last = x[:, -1] if last_positions is None \
+        else x[jnp.arange(x.shape[0]), last_positions]
+    x_last = rms_norm(x_last, params["final_norm"], cfg.rms_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-    logits = jnp.einsum("bd,dv->bv", x, head.astype(cdt),
+    logits = jnp.einsum("bd,dv->bv", x_last, head.astype(cdt),
                         preferred_element_type=jnp.float32)
     cache["pos"] = jnp.asarray(total, jnp.int32)
     return logits, cache

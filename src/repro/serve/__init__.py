@@ -1,11 +1,48 @@
 """Continuous-batching serve subsystem.
 
 * :mod:`.engine`    — the resident admit→prefill→decode→complete pipeline
-  (``submit()`` / ``result()``; ``generate()`` compatibility shim);
-* :mod:`.scheduler` — request queue + length-bucketed admission control;
-* :mod:`.kvcache`   — paged KV-cache pool (block allocator + jit-able
-  fused K/V scatter through per-sequence block tables; the ``gather_pages``
+  (``submit()`` / ``result()``; ``generate()`` compatibility shim), serving
+  EVERY architecture: attention models through the paged KV pool, SSM and
+  hybrid models (mamba, zamba2) through a fixed-slot recurrent-state pool;
+* :mod:`.scheduler` — request queue + FIFO admission control (no length
+  buckets) budgeted on prompt-only footprints;
+* :mod:`.kvcache`   — paged KV-cache pool (block allocator with mid-decode
+  ``grow_table`` + jit-able fused K/V scatters through per-sequence block
+  tables, including the chunked-prefill ``scatter_token_window`` and the
+  device-side ``extend_block_tables`` growth scatter; the ``gather_pages``
   reference read path).
+
+Two-phase admission semantics
+-----------------------------
+Memory admission is split into two phases so pool capacity follows LIVE
+token counts instead of worst-case reservations:
+
+* **Phase 1 — admit on the prompt footprint.** A request joins the running
+  batch as soon as free decode slots exist and the pool covers
+  ``blocks_for(prompt_len)`` — not ``prompt + max_new``. Admission is
+  strictly FIFO from one queue; because chunked prefill fixes the compiled
+  window shape, mixed prompt lengths admit together in one group / one
+  prefill launch.
+* **Chunked prefill.** A prompt longer than ``prefill_chunk`` lands window
+  by window: window 0 through the prefill stage, the rest streamed by the
+  decode stage one window per pipeline cycle, each scattered straight into
+  the paged pool through the row's block table — resident rows keep
+  decoding in the overlapped cycles, so a long prompt never stalls the
+  batch behind one monolithic launch.
+* **Phase 2 — grow mid-decode.** Every ``block_size`` generated tokens a
+  row crosses into a new block; the decode stage grants it lazily
+  (``BlockPool.grow_table`` + an in-place device-side table-extension
+  scatter). If the pool is exhausted, the YOUNGEST resident row is
+  preempted: its blocks free immediately, its request re-queues at the
+  head of the line (greedy decode is deterministic, so the re-run emits
+  identical tokens) — back-pressure degrades to queueing, never deadlock.
+
+SSM/hybrid architectures have no per-token KV to page; their O(1)-per-
+sequence recurrent state (and zamba2's shared-block KV span) lives in a
+fixed-slot state pool indexed by decode slot, so ``submit()``/``result()``
+continuous batching covers them through the same resident pipeline
+(:func:`repro.models.lm.decode_step_slots`); admission for them is
+bounded by free slots alone.
 
 Paged read-path selection
 -------------------------

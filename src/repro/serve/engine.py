@@ -1,41 +1,66 @@
 """Continuously-batched serving engine: a RESIDENT 4-stage pipeline fed by
-a request queue.
+a request queue, with TWO-PHASE memory admission.
 
-PR 1's engine built and tore down a fresh pipeline per ``generate()`` call;
-this one keeps ONE cyclic :class:`repro.pipeline.DataPipeline` alive for the
-life of the engine — the Taskflow thesis (keep the task graph resident, let
-in-graph control flow re-enter it) applied to serving:
+PR 2 kept ONE cyclic :class:`repro.pipeline.DataPipeline` alive for the
+life of the engine; PR 3 made the paged *read* path occupancy-proportional.
+This revision makes the *write/admission* half follow live token counts
+too — the Taskflow memory thesis (resources follow control flow
+incrementally, not worst-case up front) applied to KV admission:
 
-    admit (SERIAL)    -> pop an admission group from the request queue
-                         (length-bucketed FIFO), allocate its KV blocks;
-                         park via ``pf.defer(token)`` when the block pool is
-                         exhausted (deferred-token admission), or emit a
-                         plain decode-pump cycle when nothing is admittable
-    prefill (SERIAL)  -> one compiled prefill launch for the group
-    decode (SERIAL,   -> merge the group into the resident batch (scatter
-      accel domain)      prefilled KV into pool pages, assign slots), then
-                         advance EVERY running row by one compiled chunk of
-                         ``decode_chunk`` paged decode steps
+    admit (SERIAL)    -> pop an admission group from ONE FIFO (no length
+                         buckets: chunked prefill makes per-window shapes
+                         uniform, so mixed-length groups admit together) and
+                         allocate its PROMPT-ONLY block footprint; park via
+                         ``pf.defer(token)`` when the head does not fit, or
+                         emit a plain decode-pump cycle
+    prefill (SERIAL)  -> one compiled launch for the group's FIRST prompt
+                         window (fixed window size, prompts right-padded);
+                         SSM/hybrid archs prefill each member's whole prompt
+                         here instead (recurrent state is O(1)/sequence)
+    decode (SERIAL,   -> merge the group (scatter window-0 KV / recurrent
+      accel domain)      state into the pool, assign slots), stream ONE more
+                         prefill window for every mid-prefill row, grow
+                         block tables lazily for rows about to cross a block
+                         boundary (preempting the youngest row on pool
+                         exhaustion), then advance every decoding row by one
+                         compiled chunk of ``decode_chunk`` steps
     complete (PARALLEL)-> retire rows that just finished: fulfil their
                          request futures, free their blocks/slots — per
                          sequence, WITHOUT draining the pipeline
 
-Each pipeline token is one engine *cycle*. While cycle ``t`` runs its decode
-chunk, cycle ``t+1`` is already prefilling the next admission group — the
-prefill/decode overlap continuous batching wants, expressed purely as
-pipeline scheduling. Sequences join and leave at chunk boundaries; the KV
-pool (:mod:`repro.serve.kvcache`) is written ONLY by the SERIAL decode
-stage, so pool updates are single-writer by construction. The compiled
-chunk reads the pool gather-free (``paged_impl``: the Pallas kernel or
-its XLA page-loop lowering, see :mod:`repro.serve`), so per-row decode
-cost follows the row's true length, not the pool's capacity.
+Two-phase admission
+-------------------
+*Phase 1 (admit):* a request is admitted when the pool covers its PROMPT
+KV footprint — not ``prompt + max_new``. *Phase 2 (grow):* every
+``block_size`` decode tokens, the decode stage grants the row one more
+block (``BlockPool.grow_table`` + a device-side table-extension scatter);
+on pool exhaustion it preempts the YOUNGEST resident row back onto the
+wait queue (its blocks freed, its request re-queued at the head) instead
+of deadlocking. Long prompts are *chunked*: window 0 lands via the prefill
+stage, the rest stream through the decode stage one fixed-size window per
+cycle, scattered straight into the paged pool — resident rows keep
+decoding in the overlapped cycles.
+
+The KV pool and the block-table array are written ONLY by the SERIAL
+decode stage, so pool updates stay single-writer by construction; the
+block table is device-resident across cycles (growth is an in-place
+scatter, not a re-upload). The compiled chunk reads the pool gather-free
+(``paged_impl``: the Pallas kernel or its XLA page-loop lowering, see
+:mod:`repro.serve`).
+
+SSM / hybrid architectures (mamba, zamba2) serve through the SAME
+resident pipeline via a fixed-slot recurrent-state pool: prefilled
+``(conv, h)`` states (plus zamba2's shared-block KV span) are scattered
+into a per-slot pool, rows decode side by side at per-row positions
+(:func:`repro.models.lm.decode_step_slots`), and slots free at
+retirement. The old per-call grouped fallback is retired from
+``submit()``/``generate()`` and survives only as the benchmark baseline
+(:meth:`ServeEngine._generate_grouped`).
 
 Client API: :meth:`submit` returns a :class:`ServeRequest` future;
 :meth:`ServeRequest.result` blocks for the tokens. :meth:`generate` remains
 as a thin compatibility shim over submit/result (greedy tokens bit-identical
-to the per-call engine it replaces). SSM / hybrid architectures — whose
-recurrent state is O(1) per sequence and has no KV to page — keep the
-per-call grouped pipeline under ``generate()``.
+to the per-call engine it replaces).
 
 The pipeline goes idle (stop-drain) when no requests are waiting or
 running; ``submit()`` re-arms it without rebuilding the task graph
@@ -60,7 +85,8 @@ from ..core import ACCEL, HOST, Executor
 from ..distributed.sharding import ShardCtx, use_shard_ctx
 from ..models import lm
 from ..pipeline import DataPipe, DataPipeline, PipeType
-from .kvcache import BlockPool, init_kv_pool, scatter_prefill_rows
+from .kvcache import (BlockPool, extend_block_tables, init_kv_pool,
+                      scatter_prefill_rows, set_table_rows)
 from .scheduler import Scheduler, ServeRequest
 
 __all__ = ["ServeEngine", "ServeRequest"]
@@ -74,6 +100,12 @@ class ServeEngine:
     decode_chunk:
         decode steps per compiled chunk launch — also the admission
         granularity (sequences join/leave at chunk boundaries).
+    prefill_chunk:
+        prompt tokens per prefill window. A prompt longer than this
+        prefills across multiple pipeline cycles (window 0 in the prefill
+        stage, the rest streamed by the decode stage) while resident rows
+        keep decoding. Defaults to ``decode_chunk * block_size``. Paged
+        (attention) archs only; SSM/hybrid prompts prefill whole.
     max_batch:
         decode slot count; the compiled chunk program always runs this many
         rows (inactive rows are masked), so batch composition changes never
@@ -84,7 +116,9 @@ class ServeEngine:
         cap on requests admitted per cycle (one prefill launch).
     max_seq_len:
         per-sequence cap on ``prompt + max_new`` (sets the block-table
-        width). Defaults to 32 blocks worth, clamped to the pool size.
+        width; for zamba2 it sizes the shared-block KV span per slot).
+        Defaults to 32 blocks worth, clamped to the pool size (512 for
+        SSM/hybrid).
     paged_impl:
         attention read path of the compiled decode chunk: ``"pallas"``
         (gather-free Pallas kernel, Mosaic on TPU), ``"xla"`` (gather-free
@@ -100,6 +134,7 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params,
                  ctx: Optional[ShardCtx] = None,
                  decode_chunk: int = 8,
+                 prefill_chunk: Optional[int] = None,
                  executor: Optional[Executor] = None,
                  pipeline_lines: int = 3,
                  max_batch: int = 8,
@@ -122,8 +157,8 @@ class ServeEngine:
                                  static_argnames=("n",),
                                  donate_argnums=(1,))
 
-        #: paged continuous batching needs a pageable attention KV cache;
-        #: SSM/hybrid recurrent state is O(1)/seq and keeps the grouped path
+        #: continuous batching pages the attention KV cache; SSM/hybrid
+        #: recurrent state is O(1)/seq and lives in a fixed-slot state pool
         self.paged = not (cfg.ssm or cfg.hybrid_attn_every)
         from ..kernels.ops import PAGED_IMPLS, default_paged_impl
         if paged_impl is not None and paged_impl not in PAGED_IMPLS:
@@ -136,25 +171,18 @@ class ServeEngine:
         self._broken: Optional[BaseException] = None
         self._stage_log = [] if record_stages else None
         self._log_lock = threading.Lock()
-        if not self.paged:
-            return
 
-        self._pool = BlockPool(kv_blocks, block_size)
-        self._pkv = init_kv_pool(cfg, kv_blocks, block_size)
-        self._max_seq = min(max_seq_len or 32 * block_size,
-                            (kv_blocks - 1) * block_size)
-        mb = self._pool.blocks_for(self._max_seq)
         B = max_batch
         self._scheduler = Scheduler(max_admit=max_admit)
-        # slot state: written by the SERIAL decode stage (merge/step) and the
-        # complete stage (free) under _state_lock; admit only reads counts
-        self._tables = np.zeros((B, mb), np.int32)
-        self._lengths = np.zeros((B,), np.int32)
-        self._rem = np.zeros((B,), np.int32)
-        self._last = np.zeros((B,), np.int32)
+        # slot state: written by the SERIAL decode stage (merge/window/grow/
+        # step) and the complete stage (free) under _state_lock; admit only
+        # reads counts
+        self._lengths = np.zeros((B,), np.int32)   # KV/state tokens written
+        self._rem = np.zeros((B,), np.int32)       # decode steps remaining
+        self._last = np.zeros((B,), np.int32)      # last emitted token
         self._slot_req: List[Optional[ServeRequest]] = [None] * B
-        self._slot_blocks: List[Optional[List[int]]] = [None] * B
         self._slot_out: List[Optional[List[int]]] = [None] * B
+        self._slot_phase: List[Optional[str]] = [None] * B  # prefill|decode
         self._free_slots = list(range(B - 1, -1, -1))
         self._slots_reserved = 0       # admitted but not yet merged
         self._inflight: set = set()    # admitted, not yet retired (failure
@@ -165,20 +193,60 @@ class ServeEngine:
         self._topo = None
         self._pipeline: Optional[DataPipeline] = None
         self.stats = {"admitted": 0, "admit_parks": 0, "pump_cycles": 0,
-                      "decode_cycles": 0, "prefills": 0, "tokens_out": 0,
-                      "retired": 0}
-        self._decode_paged = jax.jit(self._decode_paged_impl,
-                                     static_argnames=("n",),
-                                     donate_argnums=(1,))
-        self._scatter = jax.jit(self._scatter_impl, donate_argnums=(0,))
+                      "decode_cycles": 0, "prefills": 0,
+                      "prefill_windows": 0, "tokens_out": 0, "retired": 0,
+                      "grown_blocks": 0, "preempted": 0}
+
+        if self.paged:
+            self._pool = BlockPool(kv_blocks, block_size)
+            self._pkv = init_kv_pool(cfg, kv_blocks, block_size)
+            self._max_seq = min(max_seq_len or 32 * block_size,
+                                (kv_blocks - 1) * block_size)
+            self.prefill_chunk = prefill_chunk or decode_chunk * block_size
+            if self.prefill_chunk < 1:
+                raise ValueError("prefill_chunk must be >= 1")
+            mb = self._pool.blocks_for(self._max_seq)
+            # block tables: host mirror for growth decisions + a DEVICE-
+            # resident array the compiled programs read; growth/merge/retire
+            # update the device copy with in-place scatters
+            self._tables = np.zeros((B, mb), np.int32)
+            self._tables_dev = jnp.zeros((B, mb), jnp.int32)
+            self._pref_pos = np.zeros((B,), np.int32)  # prompt tokens done
+            self._slot_blocks: List[Optional[List[int]]] = [None] * B
+            self._slot_prompt: List[Optional[np.ndarray]] = [None] * B
+            # worst-case blocks granted in one cycle: every row crosses into
+            # ceil(decode_chunk / block_size) new blocks plus one boundary
+            # block — the fixed width of the growth scatter
+            self._grow_burst_max = B * (-(-decode_chunk // block_size) + 1)
+            self._decode_paged = jax.jit(self._decode_paged_impl,
+                                         static_argnames=("n",),
+                                         donate_argnums=(1,))
+            self._scatter = jax.jit(self._scatter_impl, donate_argnums=(0,))
+            self._prefill_window = jax.jit(self._prefill_window_impl,
+                                           donate_argnums=(1,))
+            self._extend_tables = jax.jit(extend_block_tables)
+            self._set_rows = jax.jit(set_table_rows)
+        else:
+            self._max_seq = max_seq_len or 512
+            self.prefill_chunk = None
+            # fixed-slot recurrent-state pool: init_cache's pytree with the
+            # scalar pos replaced by the per-row _lengths mirror
+            self._sstate = {k: v
+                            for k, v in lm.init_cache(cfg, B,
+                                                      self._max_seq).items()
+                            if k != "pos"}
+            self._decode_slots = jax.jit(self._decode_slots_impl,
+                                         static_argnames=("n",),
+                                         donate_argnums=(1,))
 
     # ---------------------------------------------------------- compiled fns
-    def _prefill_impl(self, params, tokens, max_len: int):
+    def _prefill_impl(self, params, tokens, last_positions, max_len: int):
         with use_shard_ctx(self.ctx):
-            return lm.prefill(self.cfg, params, tokens, max_len=max_len)
+            return lm.prefill(self.cfg, params, tokens, max_len=max_len,
+                              last_positions=last_positions)
 
     def _decode_n_impl(self, params, cache, token, n: int):
-        """n contiguous decode steps in one XLA launch (grouped fallback)."""
+        """n contiguous decode steps in one XLA launch (per-call baseline)."""
         with use_shard_ctx(self.ctx):
             def body(carry, _):
                 cache, tok = carry
@@ -214,6 +282,34 @@ class ServeEngine:
                 body, (pkv, last, lengths, rem), None, length=n)
             return pkv, tok, ln, rm, toks.swapaxes(0, 1)
 
+    def _decode_slots_impl(self, params, state, last, lengths, rem, n: int):
+        """One chunk over the SSM/hybrid slot-state pool: ``n`` steps of
+        :func:`repro.models.lm.decode_step_slots` at per-row positions.
+        Inactive slots step on stale state harmlessly (row-wise math; their
+        tokens are discarded host-side and their slot is overwritten at the
+        next admission)."""
+        with use_shard_ctx(self.ctx):
+            def body(carry, _):
+                st, tok, ln, rm = carry
+                active = rm > 0
+                logits, st = lm.decode_step_slots(self.cfg, params, st, tok,
+                                                  ln)
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                nxt = jnp.where(active, nxt, tok)
+                ln = ln + active.astype(jnp.int32)
+                rm = rm - active.astype(jnp.int32)
+                return (st, nxt, ln, rm), nxt
+
+            (st, tok, ln, rm), toks = jax.lax.scan(
+                body, (state, last, lengths, rem), None, length=n)
+            return st, tok, ln, rm, toks.swapaxes(0, 1)
+
+    def _prefill_window_impl(self, params, pkv, tables, tokens, start,
+                             valid, last_idx):
+        with use_shard_ctx(self.ctx):
+            return lm.prefill_window_paged(self.cfg, params, pkv, tables,
+                                           tokens, start, valid, last_idx)
+
     def _scatter_impl(self, pkv, blocks, krows, vrows):
         return scatter_prefill_rows(pkv, blocks, krows, vrows)
 
@@ -241,7 +337,7 @@ class ServeEngine:
     def close(self, timeout: float = 300.0) -> None:
         """Drain outstanding requests, then release the executor. Idempotent."""
         self._closing = True
-        if self.paged and self._pipeline is not None:
+        if self._pipeline is not None:
             deadline = time.perf_counter() + timeout
             while time.perf_counter() < deadline:
                 if self._broken is not None:
@@ -288,29 +384,50 @@ class ServeEngine:
             # resident grid (no rebuild)
             pf.stop()
             return None
-        group = self._scheduler.try_admit(free_slots, self._pool.num_free,
-                                          self._pool.blocks_for)
+        group = None
+        if self.paged:
+            # phase 1 of two-phase admission: budget the PROMPT footprint
+            # only; decode-time blocks are granted lazily by the decode
+            # stage as rows grow
+            popped = self._scheduler.try_admit(
+                free_slots, self._pool.num_free, self._pool.blocks_for)
+            if popped is not None:
+                needs = [self._pool.blocks_for(r.prompt_len) for r in popped]
+                ids = self._pool.alloc(sum(needs))  # atomic all-or-nothing
+                if ids is None:
+                    # raced a concurrent mid-decode grow: put the group back
+                    # (id order preserved) and fall through to park/pump
+                    self._scheduler.requeue_front(popped)
+                else:
+                    group, i = [], 0
+                    for r, need in zip(popped, needs):
+                        group.append((r, ids[i:i + need]))
+                        i += need
+        else:
+            # slot-state pool: recurrent state is pre-allocated per slot, so
+            # admission is bounded by free slots alone
+            popped = self._scheduler.try_admit(free_slots, None)
+            if popped is not None:
+                group = [(r, None) for r in popped]
         if group is not None:
-            # only admit allocates and complete only frees, so the budget
-            # try_admit just checked cannot shrink before these allocs
-            alloc = []
-            for req in group:
-                blocks = self._pool.alloc(
-                    self._pool.blocks_for(req.prompt_len + req.max_new))
-                alloc.append((req, blocks))
+            now = time.perf_counter()
+            for r, _ in group:
+                r.state = "prefilling"
+                if r.admitted_at is None:
+                    r.admitted_at = now
             with self._state_lock:
                 self._slots_reserved += len(group)
-                self._inflight.update(group)
+                self._inflight.update(r for r, _ in group)
                 self._cycle_tokens.add(pf.token)
                 self.stats["admitted"] += len(group)
-            self._log("admit", pf.token, [r.id for r in group])
-            return ("admit", alloc)
+            self._log("admit", pf.token, [r.id for r, _ in group])
+            return ("admit", group)
         if waiting and deps:
-            # deferred-token admission: the head request does not fit the
-            # pool. Park THIS cycle until the oldest in-flight cycle fully
-            # completes (its complete stage frees retired blocks), instead
-            # of spinning empty admissions; the in-flight cycles keep the
-            # decode pump alive meanwhile.
+            # deferred-token admission: the head request does not fit. Park
+            # THIS cycle until the oldest in-flight cycle fully completes
+            # (its complete stage frees retired blocks), instead of spinning
+            # empty admissions; the in-flight cycles keep the decode pump
+            # alive meanwhile.
             dep = min(deps)
             with self._state_lock:
                 self.stats["admit_parks"] += 1
@@ -331,61 +448,293 @@ class ServeEngine:
             return msg
         group = payload
         reqs = [r for r, _ in group]
-        # pad the group to the admission cap: ONE compiled prefill shape per
-        # prompt length, however many requests the Poisson arrivals happened
-        # to bucket together (dummy rows repeat the last prompt; their KV is
-        # scattered to the sink block and their sampled token is discarded)
+        if not self.paged:
+            # SSM/hybrid: whole-prompt prefill per member (recurrent state
+            # is O(1)/sequence — there is no per-token KV to chunk in; the
+            # compiled shape keys on each prompt length, as the grouped
+            # baseline's did)
+            out = []
+            for req in reqs:
+                logits, cache = self._prefill(
+                    self.params, jnp.asarray(req.prompt[None]), None,
+                    max_len=req.prompt_len)
+                first = int(np.asarray(jnp.argmax(logits, axis=-1))[0])
+                out.append((req, cache, first))
+            with self._state_lock:
+                self.stats["prefills"] += len(out)
+            self._log("prefill", pf.token, [r.id for r in reqs])
+            return ("admit", out)
+        # one launch for the group's FIRST prompt window: prompts are
+        # right-padded to a single window shape (chunked prefill keys the
+        # compiled program on the window size, never on prompt lengths, so
+        # mixed-length groups ride together; pad rows repeat the last
+        # request and scatter to the sink). Remaining windows stream through
+        # the decode stage cycle by cycle. The window is rounded up to a
+        # power of two (capped at prefill_chunk) so arbitrary prompt-length
+        # mixes compile O(log prefill_chunk) shapes, not one per length.
+        longest = max(r.prompt_len for r in reqs)
+        C0 = min(self.prefill_chunk, 1 << max(0, longest - 1).bit_length())
         A = self._scheduler.max_admit
-        toks = np.stack([r.prompt for r in reqs]
-                        + [reqs[-1].prompt] * (A - len(reqs)))
-        S = int(toks.shape[1])
+        toks = np.zeros((A, C0), np.int32)
+        lastp = np.zeros((A,), np.int32)
+        for i, r in enumerate(reqs):
+            k = min(r.prompt_len, C0)
+            toks[i, :k] = r.prompt[:k]
+            lastp[i] = k - 1
+        for i in range(len(reqs), A):
+            toks[i] = toks[len(reqs) - 1]
+            lastp[i] = lastp[len(reqs) - 1]
         logits, cache = self._prefill(self.params, jnp.asarray(toks),
-                                      max_len=S)
+                                      jnp.asarray(lastp), max_len=C0)
         first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         with self._state_lock:
             self.stats["prefills"] += 1
         self._log("prefill", pf.token, [r.id for r in reqs])
-        return ("admit", (group, cache["k"], cache["v"], first))
+        return ("admit", (group, C0, cache["k"], cache["v"], first))
+
+    # ------------------------------------------------- decode-stage helpers
+    def _merge_group(self, payload) -> None:
+        """Seat an admitted group: assign slots, install block tables, and
+        scatter the window-0 KV into the pool (single-writer: we are inside
+        the SERIAL decode stage). Rows whose whole prompt fits window 0
+        enter decode immediately; longer ones enter the prefill phase and
+        stream their remaining windows in subsequent cycles."""
+        group, C0, ck, cv, first = payload
+        first = np.asarray(first)
+        nb0 = self._pool.blocks_for(C0)
+        rows_idx, rows_tab = [], []
+        for i, (req, blocks) in enumerate(group):
+            with self._state_lock:
+                slot = self._free_slots.pop()
+                self._slots_reserved -= 1
+                self._slot_req[slot] = req
+                self._slot_blocks[slot] = list(blocks)
+                self._slot_out[slot] = []
+            self._slot_prompt[slot] = req.prompt
+            self._tables[slot] = 0
+            self._tables[slot, :len(blocks)] = blocks
+            self._pref_pos[slot] = min(req.prompt_len, C0)
+            self._lengths[slot] = self._pref_pos[slot]
+            if req.prompt_len <= C0:
+                self._slot_phase[slot] = "decode"
+                self._last[slot] = first[i]
+                self._rem[slot] = req.max_new - 1
+                self._slot_out[slot].append(int(first[i]))
+                req.state = "decoding"
+            else:
+                self._slot_phase[slot] = "prefill"
+                self._last[slot] = 0
+                self._rem[slot] = 0   # masked out of decode until prefilled
+            rows_idx.append(slot)
+            rows_tab.append(self._tables[slot].copy())
+        # pad the row-set scatter to the admission cap (duplicate writes of
+        # the same row are idempotent): ONE compiled shape per engine, not
+        # one per group size
+        A = self._scheduler.max_admit
+        while len(rows_idx) < A:
+            rows_idx.append(rows_idx[-1])
+            rows_tab.append(rows_tab[-1])
+        self._tables_dev = self._set_rows(
+            self._tables_dev, jnp.asarray(rows_idx, jnp.int32),
+            jnp.asarray(np.stack(rows_tab)))
+        # window-0 scatter: per-row block lists trimmed/padded to the window
+        # footprint (sink-filled beyond a short prompt's own blocks and for
+        # the group's pad rows), so the compiled shape keys on the window
+        # size alone — never on group size, prompt lengths, or max_new
+        blocks2d = np.zeros((ck.shape[1], nb0), np.int32)
+        for i, (_, blocks) in enumerate(group):
+            row = blocks[:nb0]
+            blocks2d[i, :len(row)] = row
+        self._pkv = self._scatter(self._pkv, jnp.asarray(blocks2d), ck, cv)
+
+    def _merge_group_slots(self, payload) -> None:
+        """Seat an admitted SSM/hybrid group: scatter each member's
+        prefilled recurrent state (and zamba2 shared-KV span) into its
+        slot of the fixed-slot state pool."""
+        for req, cache, first in payload:
+            with self._state_lock:
+                slot = self._free_slots.pop()
+                self._slots_reserved -= 1
+                self._slot_req[slot] = req
+                self._slot_out[slot] = [first]
+                self._slot_phase[slot] = "decode"
+            self._write_slot_state(slot, cache, req.prompt_len)
+            self._lengths[slot] = req.prompt_len
+            self._last[slot] = first
+            self._rem[slot] = req.max_new - 1
+            req.state = "decoding"
+
+    def _write_slot_state(self, slot: int, cache, plen: int) -> None:
+        cfg = self.cfg
+        if cfg.hybrid_attn_every:
+            conv, h = cache["g_ssm"]
+            sc, sh = self._sstate["g_ssm"]
+            self._sstate["g_ssm"] = (sc.at[:, :, slot].set(conv[:, :, 0]),
+                                     sh.at[:, :, slot].set(h[:, :, 0]))
+            if "tail_ssm" in self._sstate:
+                tconv, th = cache["tail_ssm"]
+                stc, sth = self._sstate["tail_ssm"]
+                self._sstate["tail_ssm"] = (stc.at[:, slot].set(tconv[:, 0]),
+                                            sth.at[:, slot].set(th[:, 0]))
+            self._sstate["shared_k"] = self._sstate["shared_k"] \
+                .at[:, slot, :, :plen].set(cache["shared_k"][:, 0])
+            self._sstate["shared_v"] = self._sstate["shared_v"] \
+                .at[:, slot, :, :plen].set(cache["shared_v"][:, 0])
+        else:
+            conv, h = cache["ssm"]
+            sc, sh = self._sstate["ssm"]
+            self._sstate["ssm"] = (sc.at[:, slot].set(conv[:, 0]),
+                                   sh.at[:, slot].set(h[:, 0]))
+
+    def _window_prefill_step(self, pf) -> None:
+        """Stream ONE prefill window for every mid-prefill row: the window's
+        KV is computed against the row's paged prefix and scattered straight
+        into the pool (one fixed-shape launch however many rows are
+        prefilling — resident rows keep decoding in the same cycle)."""
+        B = len(self._slot_req)
+        pref = [b for b in range(B) if self._slot_phase[b] == "prefill"]
+        if not pref:
+            return
+        C = self.prefill_chunk
+        toks = np.zeros((B, C), np.int32)
+        valid = np.zeros((B, C), bool)
+        start = np.zeros((B,), np.int32)
+        last_idx = np.zeros((B,), np.int32)
+        for b in pref:
+            prompt = self._slot_prompt[b]
+            s = int(self._pref_pos[b])
+            k = min(C, len(prompt) - s)
+            toks[b, :k] = prompt[s:s + k]
+            valid[b, :k] = True
+            start[b] = s
+            last_idx[b] = min(len(prompt) - 1 - s, C - 1)
+        first, pkv = self._prefill_window(
+            self.params, self._pkv, self._tables_dev, jnp.asarray(toks),
+            jnp.asarray(start), jnp.asarray(valid), jnp.asarray(last_idx))
+        self._pkv = pkv
+        first = np.asarray(first)
+        for b in pref:
+            prompt = self._slot_prompt[b]
+            k = min(C, len(prompt) - int(self._pref_pos[b]))
+            self._pref_pos[b] += k
+            self._lengths[b] = self._pref_pos[b]
+            if self._pref_pos[b] >= len(prompt):
+                req = self._slot_req[b]
+                self._slot_phase[b] = "decode"
+                self._last[b] = first[b]
+                self._rem[b] = req.max_new - 1
+                self._slot_out[b].append(int(first[b]))
+                req.state = "decoding"
+        with self._state_lock:
+            self.stats["prefill_windows"] += 1
+        self._log("prefill_chunk", pf.token,
+                  [(b, int(self._pref_pos[b])) for b in pref])
+
+    def _grow_or_preempt(self, pf) -> None:
+        """Phase 2 of two-phase admission: grant each decoding row the
+        blocks the NEXT decode chunk will write into, oldest row first
+        (lazy growth — a row crosses into a new block every ``block_size``
+        tokens). Pool exhaustion preempts the YOUNGEST resident row back
+        onto the wait queue instead of deadlocking: its blocks free
+        immediately, the oldest rows keep decoding, and the preempted
+        request re-runs from scratch later (greedy decode is deterministic,
+        so its tokens are unchanged)."""
+        bs = self._pool.block_size
+        n = self.decode_chunk
+        grow_rows: List[int] = []
+        grow_cols: List[int] = []
+        grow_ids: List[int] = []
+        order = sorted((b for b in range(len(self._slot_req))
+                        if self._slot_phase[b] == "decode"
+                        and self._rem[b] > 0),
+                       key=lambda b: self._slot_req[b].id)
+        for b in order:
+            if self._slot_req[b] is None:
+                continue                    # preempted as a younger victim
+            k = int(min(n, self._rem[b]))
+            need = (int(self._lengths[b]) + k - 1) // bs + 1
+            cur = len(self._slot_blocks[b])
+            while need > cur:
+                ids = self._pool.grow_table(self._slot_blocks[b], need - cur)
+                if ids is not None:
+                    self._tables[b, cur:need] = ids
+                    grow_rows.extend([b] * len(ids))
+                    grow_cols.extend(range(cur, need))
+                    grow_ids.extend(ids)
+                    with self._state_lock:
+                        self.stats["grown_blocks"] += len(ids)
+                    break
+                victim = max((v for v in range(len(self._slot_req))
+                              if self._slot_req[v] is not None),
+                             key=lambda v: self._slot_req[v].id)
+                self._preempt(victim, pf)
+                if victim == b:
+                    break                   # b itself was the youngest
+        if grow_rows:
+            # device-side per-row table extension: the resident table array
+            # is updated in place, not re-uploaded. Padded with repeats
+            # (idempotent duplicate writes) to the worst-case burst size so
+            # the scatter compiles exactly ONE shape per engine.
+            self._log("grow", pf.token, list(zip(grow_rows, grow_ids)))
+            m = self._grow_burst_max
+            while len(grow_rows) < m:
+                grow_rows.append(grow_rows[-1])
+                grow_cols.append(grow_cols[-1])
+                grow_ids.append(grow_ids[-1])
+            self._tables_dev = self._extend_tables(
+                self._tables_dev, jnp.asarray(grow_rows, jnp.int32),
+                jnp.asarray(grow_cols, jnp.int32),
+                jnp.asarray(grow_ids, jnp.int32))
+
+    def _preempt(self, slot: int, pf) -> None:
+        req = self._slot_req[slot]
+        with self._state_lock:
+            self._slot_req[slot] = None
+            self._slot_out[slot] = None
+            self._slot_phase[slot] = None
+            self._pool.free(self._slot_blocks[slot])
+            self._slot_blocks[slot] = None
+            self._free_slots.append(slot)
+            self._inflight.discard(req)
+            self.stats["preempted"] += 1
+        self._slot_prompt[slot] = None
+        self._tables[slot] = 0
+        self._lengths[slot] = 0
+        self._last[slot] = 0
+        self._rem[slot] = 0
+        self._pref_pos[slot] = 0
+        self._tables_dev = self._set_rows(
+            self._tables_dev, jnp.asarray([slot], jnp.int32),
+            jnp.zeros((1, self._tables.shape[1]), jnp.int32))
+        self._scheduler.requeue_front([req])
+        self._log("preempt", pf.token, req.id)
 
     def _st_decode(self, pf, msg):
         kind, payload = msg
         if kind == "admit":
-            group, ck, cv, first = payload
-            first = np.asarray(first)
-            for i, (req, blocks) in enumerate(group):
-                with self._state_lock:
-                    slot = self._free_slots.pop()
-                    self._slots_reserved -= 1
-                    self._slot_req[slot] = req
-                    self._slot_blocks[slot] = blocks
-                    self._slot_out[slot] = [int(first[i])]
-                self._tables[slot] = 0
-                self._tables[slot, :len(blocks)] = blocks
-                self._lengths[slot] = req.prompt_len
-                self._last[slot] = first[i]
-                self._rem[slot] = req.max_new - 1
-            # single-writer pool update: one scatter launch for the whole
-            # group's prefilled KV. Block lists are trimmed to the PROMPT
-            # footprint (equal within a length bucket) and padded to the
-            # admission cap with sink rows (matching the padded prefill),
-            # so the compiled shape keys on the prompt length alone — never
-            # on group size or max_new.
-            nbp = self._pool.blocks_for(group[0][0].prompt_len)
-            blocks2d = np.zeros((ck.shape[1], nbp), np.int32)  # sink-filled
-            for i, (_, blocks) in enumerate(group):
-                blocks2d[i] = blocks[:nbp]
-            self._pkv = self._scatter(self._pkv, jnp.asarray(blocks2d),
-                                      ck, cv)
+            if self.paged:
+                self._merge_group(payload)
+            else:
+                self._merge_group_slots(payload)
+        if self.paged:
+            self._window_prefill_step(pf)
+            self._grow_or_preempt(pf)
         rem_before = self._rem.copy()
         if not (rem_before > 0).any():
             self._log("decode", pf.token, 0)
             return ("cycle", self._collect_finished(rem_before))
         n = self.decode_chunk
-        pkv, tok, ln, rm, toks = self._decode_paged(
-            self.params, self._pkv, jnp.asarray(self._tables),
-            jnp.asarray(self._lengths), jnp.asarray(self._last),
-            jnp.asarray(self._rem), n=n)
-        self._pkv = pkv
+        if self.paged:
+            pkv, tok, ln, rm, toks = self._decode_paged(
+                self.params, self._pkv, self._tables_dev,
+                jnp.asarray(self._lengths), jnp.asarray(self._last),
+                jnp.asarray(self._rem), n=n)
+            self._pkv = pkv
+        else:
+            st, tok, ln, rm, toks = self._decode_slots(
+                self.params, self._sstate, jnp.asarray(self._last),
+                jnp.asarray(self._lengths), jnp.asarray(self._rem), n=n)
+            self._sstate = st
         toks = np.asarray(toks)        # (B, n): the chunk's device sync
         # np.array (not asarray): device views are read-only and these
         # mirrors are mutated by the next cycle's merge
@@ -407,22 +756,36 @@ class ServeEngine:
         """Rows that just hit rem==0: detach them from the batch (their slot
         stays reserved until complete frees it)."""
         retire = []
+        zero_rows = []
         for b in range(len(self._rem)):
-            if self._slot_req[b] is not None and self._rem[b] == 0:
+            if self._slot_req[b] is not None \
+                    and self._slot_phase[b] == "decode" \
+                    and self._rem[b] == 0:
                 req = self._slot_req[b]
                 out = np.asarray(self._slot_out[b], np.int32)
                 with self._state_lock:
                     self._slot_req[b] = None
                     self._slot_out[b] = None
-                    self._inflight.discard(req)
+                    self._slot_phase[b] = None
                 # zero the detached row's mirrors (still inside the SERIAL
                 # decode stage: single-writer): the gather-free read paths
                 # bound their page loop by max(lengths), so a retired slot
                 # must not keep advertising its old length
-                self._tables[b] = 0
                 self._lengths[b] = 0
                 self._last[b] = 0
+                if self.paged:
+                    self._tables[b] = 0
+                    self._pref_pos[b] = 0
+                    self._slot_prompt[b] = None
+                    zero_rows.append(b)
                 retire.append((b, req, out))
+        if zero_rows:
+            # fixed-shape zeroing scatter (pad with repeats; idempotent)
+            B = len(self._slot_req)
+            zero_rows += [zero_rows[-1]] * (B - len(zero_rows))
+            self._tables_dev = self._set_rows(
+                self._tables_dev, jnp.asarray(zero_rows, jnp.int32),
+                jnp.zeros((B, self._tables.shape[1]), jnp.int32))
         return retire
 
     def _st_complete(self, pf, msg):
@@ -431,9 +794,11 @@ class ServeEngine:
         for slot, req, out in retire:
             self._scheduler.finish(req, out, now)
             with self._state_lock:
-                self._pool.free(self._slot_blocks[slot])
-                self._slot_blocks[slot] = None
+                if self.paged:
+                    self._pool.free(self._slot_blocks[slot])
+                    self._slot_blocks[slot] = None
                 self._free_slots.append(slot)
+                self._inflight.discard(req)
                 self.stats["retired"] += 1
         with self._state_lock:
             self._cycle_tokens.discard(pf.token)
@@ -474,11 +839,9 @@ class ServeEngine:
     def submit(self, prompt, max_new: int = 16) -> ServeRequest:
         """Enqueue one generation request on the resident pipeline and
         return its future. Thread-safe; callable while earlier requests are
-        mid-decode — that is the point."""
-        if not self.paged:
-            raise NotImplementedError(
-                f"{self.cfg.name}: submit/result requires a paged attention "
-                "cache; SSM/hybrid archs serve through generate()")
+        mid-decode — that is the point. All architectures: paged attention
+        KV for dense/MoE models, the fixed-slot recurrent-state pool for
+        SSM/hybrid ones."""
         if self._broken is not None:
             raise RuntimeError("serve pipeline is broken") from self._broken
         if self._closing:
@@ -502,21 +865,21 @@ class ServeEngine:
         """Compatibility shim: submit every prompt, gather results in input
         order. Greedy tokens are bit-identical to the per-call engine this
         replaces (same compiled prefill math, same argmax chain — verified
-        against the contiguous reference in tests). SSM/hybrid archs take
-        the retained per-call grouped pipeline."""
+        against the contiguous reference in tests)."""
         if not prompts:
             return []
-        if not self.paged:
-            return self._generate_grouped(prompts, max_new)
         reqs = [self.submit(p, max_new) for p in prompts]
         return [self.result(r, timeout=600.0) for r in reqs]
 
-    # ----------------------------------------- per-call fallback (ssm/hybrid)
+    # -------------------------------------------- per-call baseline (bench)
     def _generate_grouped(self, prompts: List[Any], max_new: int
                           ) -> List[Any]:
         """PR 1's per-call pipeline: length groups flow admit -> prefill ->
         chunked contiguous decode -> complete through a throwaway
-        DataPipeline. Kept for architectures without a pageable KV cache."""
+        DataPipeline. No longer a serving fallback (submit()/result() covers
+        every arch through the resident pipeline); kept as the per-call
+        BASELINE the serve benchmark compares against and as a bit-identity
+        reference in tests."""
         groups: "OrderedDict[int, List[int]]" = OrderedDict()
         arrs = [np.asarray(p, np.int32) for p in prompts]
         for i, a in enumerate(arrs):
@@ -534,7 +897,7 @@ class ServeEngine:
             toks = np.stack([arrs[i] for i in idxs])
             max_len = toks.shape[1] + max_new + 1
             logits, cache = self._prefill(self.params, jnp.asarray(toks),
-                                          max_len=max_len)
+                                          None, max_len=max_len)
             cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             return idxs, cache, cur
 

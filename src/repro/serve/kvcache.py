@@ -16,20 +16,26 @@ read paths fetch page pairs with a single gather (previously two separate
 Two halves, deliberately separated:
 
 * :class:`BlockPool` — the HOST-side allocator: a free list of block ids
-  with ``alloc`` / ``free`` / ``fragmentation`` / ``defragment``. Thread-safe
-  (admission allocates from the pipeline's SERIAL admit stage while
-  retirement frees from the complete stage). Block id 0 is a reserved *sink*:
-  it is never handed out, and jit-compiled decode redirects the KV writes of
-  inactive batch rows into it, so masked rows can never corrupt a live
-  sequence's blocks.
-* pure jit-able helpers (``scatter_prefill_rows`` / ``gather_pages`` /
-  ``append_kv``) — the device-side gather/scatter through block tables, used
-  by :func:`repro.models.lm.decode_step_paged` and the engine's compiled
-  chunk program. They close over nothing and take/return arrays only, so
-  they trace cleanly under ``jax.jit``/``lax.scan``. ``gather_pages`` is the
-  *reference oracle* read path: the serve hot path reads pages in place via
-  :mod:`repro.kernels.paged_attention` instead of materializing a gathered
-  copy.
+  with ``alloc`` / ``free`` / ``grow_table`` (mid-decode extension of a live
+  sequence's allocation — phase 2 of two-phase admission) /
+  ``fragmentation`` / ``defragment``. Thread-safe (admission allocates from
+  the pipeline's SERIAL admit stage while retirement frees from the
+  complete stage and the decode stage grows). Block id 0 is a reserved
+  *sink*: it is never handed out, and jit-compiled decode redirects the KV
+  writes of inactive batch rows into it, so masked rows can never corrupt a
+  live sequence's blocks.
+* pure jit-able helpers (``scatter_prefill_rows`` / ``scatter_token_window``
+  / ``gather_pages`` / ``append_kv`` / ``extend_block_tables`` /
+  ``set_table_rows``) — the device-side gather/scatter through block
+  tables, used by :func:`repro.models.lm.decode_step_paged`,
+  :func:`repro.models.lm.prefill_window_paged` (chunked prefill) and the
+  engine's compiled chunk program; ``extend_block_tables`` keeps the
+  block-table array device-resident across cycles (growth is an in-place
+  scatter, not a re-upload). They close over nothing and take/return
+  arrays only, so they trace cleanly under ``jax.jit``/``lax.scan``.
+  ``gather_pages`` is the *reference oracle* read path: the serve hot path
+  reads pages in place via :mod:`repro.kernels.paged_attention` instead of
+  materializing a gathered copy.
 """
 from __future__ import annotations
 
@@ -41,8 +47,9 @@ import jax.numpy as jnp
 from ..configs.base import ModelConfig
 
 __all__ = ["BlockPool", "init_kv_pool", "scatter_prefill_row",
-           "scatter_prefill_rows", "gather_pages", "gather_read_attention",
-           "append_kv", "SINK_BLOCK"]
+           "scatter_prefill_rows", "scatter_token_window", "gather_pages",
+           "gather_read_attention", "append_kv", "extend_block_tables",
+           "set_table_rows", "SINK_BLOCK"]
 
 #: Block id 0 is reserved: never allocated, target of masked-row KV writes.
 SINK_BLOCK = 0
@@ -116,6 +123,19 @@ class BlockPool:
                         f"(double free, or the reserved sink)")
                 self._allocated.discard(b)
                 self._free.append(b)
+
+    def grow_table(self, blocks: List[int], n: int) -> Optional[List[int]]:
+        """Extend a sequence's existing allocation by ``n`` blocks — the
+        mid-decode growth primitive of two-phase admission. All-or-nothing
+        like :meth:`alloc`: returns the new ids (also appended to ``blocks``
+        in place, keeping the caller's table mirror authoritative) or None
+        (taking nothing) when the pool cannot cover the growth — the
+        engine's preemption signal."""
+        ids = self.alloc(n)
+        if ids is None:
+            return None
+        blocks.extend(ids)
+        return ids
 
     # ---------------------------------------------------------- fragmentation
     def fragmentation(self) -> float:
@@ -199,6 +219,56 @@ def scatter_prefill_rows(pool: jnp.ndarray, blocks: jnp.ndarray,
     paged = rows.reshape(L, 2, Bg, KV, nb, bs, hd).transpose(
         0, 1, 2, 4, 3, 5, 6)
     return pool.at[:, :, blocks].set(paged)
+
+
+def scatter_token_window(pool_l: jnp.ndarray, new_k: jnp.ndarray,
+                         new_v: jnp.ndarray, tables: jnp.ndarray,
+                         start: jnp.ndarray, valid: jnp.ndarray
+                         ) -> jnp.ndarray:
+    """Write a WINDOW of ``C`` consecutive tokens per batch row through the
+    block tables — the chunked-prefill scatter (one launch per layer per
+    window, however many rows are mid-prefill).
+
+    pool_l: (2, N, KV, bs, hd) one layer's stacked pages; new_k/new_v:
+    (B, C, KV, hd); tables: (B, max_blocks) int32; start: (B,) int32 first
+    write position per row (token ``c`` lands at ``start[b] + c``); valid:
+    (B, C) bool — invalid entries (rows not prefilling, window tail past the
+    prompt) are redirected to the sink block. Valid entries of different
+    rows go through disjoint blocks, so the scatter indices never collide.
+    """
+    _, _, _, bs, _ = pool_l.shape
+    B, mb = tables.shape
+    C = new_k.shape[1]
+    pos = start[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]   # (B, C)
+    idx = jnp.clip(pos // bs, 0, mb - 1)
+    blk = jnp.where(valid, jnp.take_along_axis(tables, idx, axis=1),
+                    SINK_BLOCK)
+    off = jnp.where(valid, pos % bs, 0)
+    new = jnp.stack([new_k, new_v], axis=2)          # (B, C, 2, KV, hd)
+    return pool_l.at[:, blk, :, off].set(new.astype(pool_l.dtype))
+
+
+def extend_block_tables(tables: jnp.ndarray, rows: jnp.ndarray,
+                        cols: jnp.ndarray, blocks: jnp.ndarray
+                        ) -> jnp.ndarray:
+    """Device-side per-row table-extension scatter: write newly granted
+    block ids into the resident block-table array at ``(rows[i], cols[i])``.
+    The engine keeps the table array device-resident across cycles; growth
+    updates it in place (one tiny scatter) instead of re-uploading the whole
+    ``(B, max_blocks)`` table every time a row crosses a block boundary.
+
+    tables: (B, max_blocks) int32; rows/cols/blocks: (M,) int32.
+    """
+    return tables.at[rows, cols].set(blocks)
+
+
+def set_table_rows(tables: jnp.ndarray, rows: jnp.ndarray,
+                   new_rows: jnp.ndarray) -> jnp.ndarray:
+    """Replace whole block-table rows (admission merge writes a sequence's
+    prompt blocks; retirement/preemption zeroes the row so the length-bound
+    page loops stop advertising it). tables: (B, mb); rows: (M,) int32;
+    new_rows: (M, mb) int32."""
+    return tables.at[rows].set(new_rows)
 
 
 def gather_pages(pool_l: jnp.ndarray, tables: jnp.ndarray):

@@ -6,24 +6,28 @@ batch. The engine's SERIAL admit stage calls :meth:`Scheduler.try_admit`
 with the currently free resources; retirement calls :meth:`finish` /
 :meth:`fail` to fulfil the request futures.
 
-Admission policy — *length-bucketed FIFO*:
+Admission policy — *FIFO on prompt-only footprint* (two-phase admission):
 
-* requests are grouped by prompt length (one compiled prefill shape per
-  admitted group — no re-padding, no shape churn);
-* the bucket of the OLDEST waiting request goes first (no starvation), and
-  up to ``max_admit`` same-length requests ride along with it;
-* a group is admitted only if the block pool can cover every member's full
-  ``prompt + max_new`` KV footprint AND free decode slots exist — admission
-  is all-or-nothing per request, so a running sequence can never hit KV
-  exhaustion mid-decode (back-pressure happens at admission, where the
-  pipeline can defer, not in the compiled chunk).
+* requests admit strictly oldest-first from ONE queue. There are no prompt
+  length buckets any more: chunked prefill processes every prompt in
+  fixed-size windows, so an admission group's compiled shapes no longer
+  depend on its members' prompt lengths and mixed-length groups ride one
+  prefill launch together;
+* a group is admitted when the block pool covers every member's **prompt**
+  KV footprint (not ``prompt + max_new``) and free decode slots exist.
+  Decode-time KV is allocated lazily, block by block, as sequences grow
+  (:meth:`repro.serve.kvcache.BlockPool.grow_table`); pool exhaustion
+  mid-decode preempts the youngest running row back onto this queue
+  (:meth:`requeue_front`) instead of deadlocking;
+* admission stops at the first request that does not fit — head-of-line
+  order is preserved (no starvation via younger requests skipping ahead).
 """
 from __future__ import annotations
 
 import itertools
 import threading
-from collections import OrderedDict
-from typing import Any, Callable, List, Optional
+from collections import deque
+from typing import Any, Callable, Deque, Iterable, List, Optional
 
 import numpy as np
 
@@ -38,6 +42,13 @@ class ServeRequest:
     ``submit()`` hands these out; :meth:`result` blocks until the engine's
     complete stage retires the sequence (or the resident pipeline fails, in
     which case the failure re-raises here instead of deadlocking).
+
+    :attr:`state` tracks the request through the engine — ``"created"`` →
+    ``"waiting"`` (queued) → ``"prefilling"`` (admitted, prompt KV being
+    chunked in) → ``"decoding"`` → ``"done"``/``"failed"``; a mid-decode
+    preemption moves it back to ``"waiting"``. Purely informational (the
+    timeout message below reports it); transitions are made by the single
+    SERIAL writer stages, so torn reads can at worst be one step stale.
     """
 
     def __init__(self, prompt: Any, max_new: int) -> None:
@@ -48,7 +59,9 @@ class ServeRequest:
         if max_new < 1:
             raise ValueError("max_new must be >= 1")
         self.max_new = int(max_new)
+        self.state = "created"
         self.submitted_at: Optional[float] = None   # set by the engine
+        self.admitted_at: Optional[float] = None    # first admission
         self.finished_at: Optional[float] = None
         self._done = threading.Event()
         self._tokens: Optional[np.ndarray] = None
@@ -60,16 +73,20 @@ class ServeRequest:
 
     def set_result(self, tokens: np.ndarray) -> None:
         self._tokens = tokens
+        self.state = "done"
         self._done.set()
 
     def set_error(self, err: BaseException) -> None:
         if not self._done.is_set():
             self._error = err
+            self.state = "failed"
             self._done.set()
 
     def result(self, timeout: Optional[float] = 120.0) -> np.ndarray:
         if not self._done.wait(timeout):
-            raise TimeoutError(f"request {self.id} did not complete in time")
+            raise TimeoutError(
+                f"request {self.id} did not complete within {timeout}s "
+                f"(state: {self.state})")
         if self._error is not None:
             raise RuntimeError(
                 f"request {self.id} failed in the serve pipeline"
@@ -89,63 +106,81 @@ class Scheduler:
             raise ValueError("max_admit must be >= 1")
         self.max_admit = max_admit
         self._lock = threading.Lock()
-        # prompt_len -> FIFO of ServeRequest; OrderedDict keeps bucket
-        # creation order, but admission order follows the oldest REQUEST
-        self._buckets: "OrderedDict[int, List[ServeRequest]]" = OrderedDict()
-        self._num_waiting = 0
+        # ONE FIFO ordered by request id (enqueue appends, preemption
+        # re-inserts at the front — preempted requests are older than
+        # anything still waiting, so id order is preserved)
+        self._queue: Deque[ServeRequest] = deque()
 
     # -------------------------------------------------------------- enqueue
     def enqueue(self, req: ServeRequest) -> None:
+        req.state = "waiting"
         with self._lock:
-            self._buckets.setdefault(req.prompt_len, []).append(req)
-            self._num_waiting += 1
+            self._queue.append(req)
+
+    def requeue_front(self, reqs: Iterable[ServeRequest]) -> None:
+        """Put preempted (or admission-race-unwound) requests back into the
+        line at their id positions. A plain extendleft would suffice from
+        ONE caller, but the decode stage (preemption) and the admit stage
+        (alloc-race unwind) can both re-queue concurrently — merging by id
+        keeps the queue's FIFO/no-starvation invariant under that race."""
+        reqs = sorted(reqs, key=lambda r: r.id)
+        for r in reqs:
+            r.state = "waiting"
+        with self._lock:
+            merged = sorted(list(self._queue) + list(reqs),
+                            key=lambda r: r.id)
+            self._queue = deque(merged)
 
     @property
     def num_waiting(self) -> int:
         with self._lock:
-            return self._num_waiting
+            return len(self._queue)
+
+    def _head_locked(self) -> Optional[ServeRequest]:
+        """The single head-of-line rule: the oldest waiting request leads.
+        Shared by :meth:`oldest` and :meth:`try_admit` so the two can never
+        disagree about who goes first. Caller holds ``_lock``."""
+        return self._queue[0] if self._queue else None
 
     def oldest(self) -> Optional[ServeRequest]:
         with self._lock:
-            heads = [b[0] for b in self._buckets.values() if b]
-            if not heads:
-                return None
-            return min(heads, key=lambda r: r.id)
+            return self._head_locked()
 
     # ------------------------------------------------------------- admission
     def try_admit(self, free_slots: int,
-                  blocks_free: int,
-                  blocks_for: Callable[[int], int]
+                  blocks_free: Optional[int],
+                  blocks_for: Optional[Callable[[int], int]] = None
                   ) -> Optional[List[ServeRequest]]:
         """Pop the next admission group, or None (taking nothing) when the
         oldest waiting request cannot be covered — the engine turns that
         into either a deferred-token park or a plain decode-pump cycle.
 
-        ``blocks_for(num_tokens)`` converts a KV footprint to block count
-        (comes from the engine's :class:`~repro.serve.kvcache.BlockPool`).
+        The block budget covers each member's PROMPT footprint only
+        (``blocks_for(prompt_len)``): decode-time blocks are granted lazily
+        by the engine as rows grow. ``blocks_free=None`` skips block
+        budgeting entirely (the SSM/hybrid slot-pool path, whose recurrent
+        state is pre-allocated per slot). The engine allocates the group's
+        blocks AFTER this pop (one all-or-nothing ``BlockPool.alloc``); if
+        that races with a concurrent grow it re-queues via
+        :meth:`requeue_front`.
         """
         with self._lock:
-            heads = [b[0] for b in self._buckets.values() if b]
-            if not heads or free_slots < 1:
+            if self._head_locked() is None or free_slots < 1:
                 return None
-            head = min(heads, key=lambda r: r.id)
-            bucket = self._buckets[head.prompt_len]
             group: List[ServeRequest] = []
             budget = blocks_free
-            for req in bucket:
-                if len(group) >= min(self.max_admit, free_slots):
-                    break
-                need = blocks_for(req.prompt_len + req.max_new)
-                if need > budget:
-                    break
-                budget -= need
+            cap = min(self.max_admit, free_slots)
+            for req in itertools.islice(self._queue, cap):
+                if budget is not None:
+                    need = blocks_for(req.prompt_len)
+                    if need > budget:
+                        break
+                    budget -= need
                 group.append(req)
             if not group:
                 return None  # head of line does not fit: back-pressure
-            del bucket[:len(group)]
-            if not bucket:
-                del self._buckets[head.prompt_len]
-            self._num_waiting -= len(group)
+            for _ in group:
+                self._queue.popleft()
             return group
 
     # ------------------------------------------------------------ retirement
@@ -158,8 +193,7 @@ class Scheduler:
         """Resident pipeline died: fail queued requests so result() raises
         instead of timing out."""
         with self._lock:
-            waiting = [r for b in self._buckets.values() for r in b]
-            self._buckets.clear()
-            self._num_waiting = 0
+            waiting = list(self._queue)
+            self._queue.clear()
         for r in waiting:
             r.set_error(err)

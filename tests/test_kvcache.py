@@ -60,6 +60,58 @@ def test_blocks_for_and_fragmentation():
     assert bp.fragmentation() == 0.0
 
 
+def test_defragment_ascending_run_property():
+    """After compaction the free list hands out ASCENDING, contiguous-when-
+    possible id runs (LIFO pop order), and the metric never increases."""
+    bp = BlockPool(num_blocks=33, block_size=4)
+    held = [bp.alloc(1) for _ in range(32)]
+    import random
+    random.Random(7).shuffle(held)
+    for ids in held[:24]:                # free in shuffled order
+        bp.free(ids)
+    before = bp.fragmentation()
+    after = bp.defragment()
+    assert after <= before
+    # ascending-run property: subsequent allocations pop ascending ids,
+    # and with every lower id free the run is perfectly contiguous
+    got = bp.alloc(24)
+    assert all(b > a for a, b in zip(got, got[1:]))  # strictly ascending
+    # the freed ids come back as the sorted set itself: one pass, no holes
+    # beyond those still held by the live allocations
+    assert got == sorted(got)
+
+
+def test_double_free_raises_and_frees_nothing_further():
+    """The double-free ValueError path: a batch containing an already-free
+    id raises, ids BEFORE the bad one in the batch are returned (the loop
+    is not transactional — documented behaviour), nothing after."""
+    bp = BlockPool(num_blocks=8, block_size=2)
+    a = bp.alloc(3)
+    b = bp.alloc(2)
+    bp.free([a[0]])
+    free_before = bp.num_free
+    with pytest.raises(ValueError, match=f"free of block {a[0]}"):
+        bp.free([a[1], a[0], a[2]])      # a[1] freed, a[0] double-free
+    assert bp.num_free == free_before + 1      # only a[1] made it back
+    assert bp.num_allocated == 1 + len(b)      # a[2] still held
+    bp.free([a[2]] + b)                        # and still freeable
+
+
+def test_grow_table_extends_in_place_and_is_all_or_nothing():
+    """Mid-decode growth: grow_table appends the granted ids to the row's
+    block list; on exhaustion it returns None and takes nothing (the
+    engine's preemption signal)."""
+    bp = BlockPool(num_blocks=6, block_size=4)
+    mine = bp.alloc(2)
+    snapshot = list(mine)
+    got = bp.grow_table(mine, 2)
+    assert got is not None and mine == snapshot + got
+    assert bp.num_free == 1
+    assert bp.grow_table(mine, 2) is None      # all-or-nothing: 1 < 2
+    assert bp.num_free == 1 and len(mine) == 4
+    bp.free(mine)
+
+
 # ------------------------------------------------------- gather / scatter
 def test_scatter_gather_roundtrip_and_sink():
     cfg = get_config("stablelm-1.6b").smoke()
@@ -99,6 +151,47 @@ def test_scatter_gather_roundtrip_and_sink():
                                   np.asarray(pool[0][:, 3:6]))
     assert np.any(np.asarray(p_in[0, SINK_BLOCK]) == 63.0)
     assert np.any(np.asarray(p_in[1, SINK_BLOCK]) == 45.0)
+
+
+def test_scatter_token_window_and_table_extension():
+    """Chunked-prefill window scatter through the tables + the device-side
+    per-row table-extension scatter used by mid-decode growth."""
+    from repro.serve.kvcache import (extend_block_tables,
+                                     scatter_token_window, set_table_rows)
+    cfg = get_config("stablelm-1.6b").smoke()
+    pool = init_kv_pool(cfg, num_blocks=8, block_size=4)
+    L, _, N, KV, bs, hd = pool.shape
+    B, mb = 2, 4
+    tables = jnp.zeros((B, mb), jnp.int32)
+    tables = set_table_rows(tables, jnp.asarray([1], jnp.int32),
+                            jnp.asarray([[2, 3, 0, 0]], jnp.int32))
+    # grow row 1 by one block at column 2 — in-place device scatter
+    tables = extend_block_tables(tables, jnp.asarray([1], jnp.int32),
+                                 jnp.asarray([2], jnp.int32),
+                                 jnp.asarray([6], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(tables),
+                                  [[0, 0, 0, 0], [2, 3, 6, 0]])
+    # write a 5-token window starting at position 6 on row 1 (crosses the
+    # block-1 -> block-2 boundary); row 0 invalid -> sink
+    C = 5
+    rng = np.random.default_rng(0)
+    ks = jnp.asarray(rng.standard_normal((B, C, KV, hd)), pool.dtype)
+    vs = jnp.asarray(rng.standard_normal((B, C, KV, hd)), pool.dtype)
+    valid = np.zeros((B, C), bool)
+    valid[1, :4] = True                  # 4 valid tokens, 1 past-prompt
+    p0 = scatter_token_window(pool[0], ks, vs, tables,
+                              jnp.asarray([0, 6], jnp.int32),
+                              jnp.asarray(valid))
+    got_k, got_v = gather_pages(p0, tables)
+    np.testing.assert_array_equal(np.asarray(got_k[1, :, 6:10]),
+                                  np.asarray(ks[1, :4]).swapaxes(0, 1))
+    np.testing.assert_array_equal(np.asarray(got_v[1, :, 6:10]),
+                                  np.asarray(vs[1, :4]).swapaxes(0, 1))
+    # row 0 (all invalid) and the past-prompt tail went to the sink: blocks
+    # owned by nobody are untouched
+    for untouched in (1, 4, 5, 7):
+        np.testing.assert_array_equal(np.asarray(p0[:, untouched]),
+                                      np.asarray(pool[0][:, untouched]))
 
 
 def test_init_kv_pool_rejects_ssm():
