@@ -18,6 +18,9 @@ serve   — continuous-batching engine under Poisson arrivals vs the
           per-call baseline (tokens/sec, p50/p99 latency); honors --quick
 paged_decode — gather-free paged decode read path vs the gather oracle
           across pool occupancies; honors --quick
+decode_overlap — async decode lookahead vs the synchronous decode loop:
+          per-cycle dispatch/sync/bookkeeping wall-time breakdown and
+          host-gap fraction across decode-chunk sizes; honors --quick
 
 Each completed suite drops ``BENCH_<suite>.json`` into --bench-dir
 (default: CWD): the run config, every emitted row, and the well-known
@@ -77,11 +80,11 @@ def main() -> None:
                          "(lognormal = heavy tail)")
     args = ap.parse_args()
 
-    from . import (fig9_micro_random_dag, fig11_corun_throughput,
-                   fig13_lsdnn, fig17_conditional_memory,
-                   fig21_incremental_timing, paged_decode_microbench,
-                   pipeline_throughput, roofline_report, serve_continuous,
-                   table2_task_overhead)
+    from . import (decode_overlap_microbench, fig9_micro_random_dag,
+                   fig11_corun_throughput, fig13_lsdnn,
+                   fig17_conditional_memory, fig21_incremental_timing,
+                   paged_decode_microbench, pipeline_throughput,
+                   roofline_report, serve_continuous, table2_task_overhead)
 
     suites = {
         "table2": lambda: table2_task_overhead.bench(200_000),
@@ -96,10 +99,13 @@ def main() -> None:
             quick=args.quick, prompt_dist=args.prompt_dist),
         "paged_decode":
             lambda: paged_decode_microbench.bench(quick=args.quick),
+        "decode_overlap":
+            lambda: decode_overlap_microbench.bench(quick=args.quick),
     }
     config = {"quick": args.quick, "only": args.only,
               "prompt_dist": args.prompt_dist,
-              "paged_impl_env": os.environ.get("REPRO_PAGED_IMPL", "")}
+              "paged_impl_env": os.environ.get("REPRO_PAGED_IMPL", ""),
+              "async_decode_env": os.environ.get("REPRO_ASYNC_DECODE", "")}
     only = [s for s in args.only.split(",") if s]
     failures = 0
     for name, fn in suites.items():

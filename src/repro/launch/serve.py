@@ -39,6 +39,12 @@ def main() -> None:
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--stagger", type=float, default=0.0,
                     help="seconds between submissions (0 = all at once)")
+    ap.add_argument("--async-decode", default=None,
+                    action=argparse.BooleanOptionalAction,
+                    help="async decode lookahead: device-resident carry + "
+                         "one-chunk dispatch pipelining. Unset defers to "
+                         "REPRO_ASYNC_DECODE; --no-async-decode forces the "
+                         "synchronous reference path even with the env set")
     ap.add_argument("--per-call", action="store_true",
                     help="use the generate() batch-call shim instead of "
                          "submit/result")
@@ -60,7 +66,8 @@ def main() -> None:
     with ServeEngine(cfg, params, decode_chunk=args.decode_chunk,
                      prefill_chunk=args.prefill_chunk,
                      kv_blocks=args.kv_blocks,
-                     block_size=args.block_size) as eng:
+                     block_size=args.block_size,
+                     async_decode=args.async_decode) as eng:
         t0 = time.time()
         if args.per_call:
             # the retired per-call grouped pipeline, kept as the baseline

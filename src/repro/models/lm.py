@@ -40,7 +40,7 @@ from .moe import init_moe, moe_layer
 
 __all__ = ["init_params", "forward", "loss_fn", "init_cache", "prefill",
            "prefill_window_paged", "decode_step", "decode_step_paged",
-           "decode_step_slots"]
+           "decode_step_slots", "decode_chunk_paged", "decode_chunk_slots"]
 
 
 # ------------------------------------------------------------------ init
@@ -511,6 +511,68 @@ def decode_step_paged(cfg: ModelConfig, params, pool_kv, tables,
     logits = jnp.einsum("bd,dv->bv", x1, head.astype(cdt),
                         preferred_element_type=jnp.float32)
     return logits, pool_kv
+
+
+def _decode_chunk_scan(step, state, carry, n: int):
+    """Shared chunk loop of :func:`decode_chunk_paged` /
+    :func:`decode_chunk_slots`: ``n`` greedy steps of ``step(state, tok,
+    lengths, active) -> (logits, state)`` threading the device carry.
+    Rows with ``rem == 0`` are inactive: their token repeats (stable
+    carry) and the engine discards their emitted tokens host-side."""
+    lengths, last, rem = carry
+
+    def body(c, _):
+        st, tok, ln, rm = c
+        active = rm > 0
+        logits, st = step(st, tok, ln, active)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        nxt = jnp.where(active, nxt, tok)
+        ln = ln + active.astype(jnp.int32)
+        rm = rm - active.astype(jnp.int32)
+        return (st, nxt, ln, rm), nxt
+
+    (state, tok, ln, rm), toks = jax.lax.scan(
+        body, (state, last, lengths, rem), None, length=n)
+    return state, (ln, tok, rm), toks.swapaxes(0, 1)
+
+
+def decode_chunk_paged(cfg: ModelConfig, params, pool_kv, tables, carry,
+                       n: int, impl: Optional[str] = None):
+    """``n`` greedy paged decode steps over the resident batch in one traced
+    loop — the chunk program of the continuous-batching engine.
+
+    ``carry = (lengths, last, rem)`` is the DEVICE-RESIDENT decode carry:
+    per-row KV length / last emitted token / decode steps remaining. The
+    async-lookahead engine feeds chunk N's output carry straight into chunk
+    N+1 without a host round-trip, so the device-side dependency chain never
+    waits on host scheduling; the synchronous engine passes uploaded host
+    mirrors through the SAME function (one compiled program serves both
+    modes). Inactive rows' KV writes go to the sink block.
+
+    Returns ``(pool_kv, (lengths, last, rem), toks)`` with ``toks`` the
+    ``(B, n)`` greedy tokens (rows active for ``k < n`` steps repeat their
+    final token in the tail — the host takes ``toks[b, :k]``).
+    """
+    def step(pkv, tok, ln, active):
+        return decode_step_paged(cfg, params, pkv, tables, ln, tok, active,
+                                 impl=impl)
+
+    return _decode_chunk_scan(step, pool_kv, carry, n)
+
+
+def decode_chunk_slots(cfg: ModelConfig, params, state, carry, n: int):
+    """``n`` greedy decode steps over the SSM/hybrid slot-state pool — the
+    recurrent-state counterpart of :func:`decode_chunk_paged`, with the same
+    device-resident ``(lengths, last, rem)`` carry contract (chunk N+1 can
+    consume chunk N's carry without a host sync). Inactive slots step on
+    stale state harmlessly (row-wise math; tokens discarded host-side).
+
+    Returns ``(state, (lengths, last, rem), toks)``.
+    """
+    def step(st, tok, ln, active):
+        return decode_step_slots(cfg, params, st, tok, ln)
+
+    return _decode_chunk_scan(step, state, carry, n)
 
 
 def _block_window(p, x, cfg: ModelConfig, attn_fn, pkv_l):

@@ -60,6 +60,7 @@ from __future__ import annotations
 
 import enum
 import threading
+import time
 from typing import Callable, Dict, List, Optional
 
 from ..core.atomic import AtomicInt
@@ -181,6 +182,10 @@ class Pipeline:
         self._pipeflows = [Pipeflow(l) for l in range(num_lines)]
         self._counters = [[AtomicInt(0) for _ in pipes]
                           for _ in range(num_lines)]
+        # per-(line, pipe) cumulative wall time inside the stage body; a
+        # slot runs exclusively (its join counter serialises visits), so
+        # plain int accumulation is race-free
+        self._stage_ns = [[0] * len(pipes) for _ in range(num_lines)]
         self._num_tokens = 0
         self._num_deferrals = AtomicInt(0)
         self._stopped = False
@@ -235,6 +240,21 @@ class Pipeline:
         return self._num_resumes.value()
 
     @property
+    def stage_times(self) -> Dict[str, float]:
+        """Cumulative wall-clock seconds spent INSIDE each pipe's body,
+        summed over lines and runs (keyed by pipe name). Pure
+        observability: where a long-running pipeline actually spends its
+        time — e.g. the serve engine's admit/prefill/decode/complete
+        breakdown the decode-overlap microbench reports. Safe to read
+        concurrently (monotone per-slot counters; a mid-stage read is at
+        worst one stage-visit stale)."""
+        out: Dict[str, float] = {}
+        for s, pipe in enumerate(self._pipes):
+            ns = sum(self._stage_ns[l][s] for l in range(self._num_lines))
+            out[pipe.name] = out.get(pipe.name, 0.0) + ns / 1e9
+        return out
+
+    @property
     def taskflow(self) -> Taskflow:
         return self._taskflow
 
@@ -281,7 +301,9 @@ class Pipeline:
                 pf._stopped = False
                 pf._defer_on = None
                 while True:
+                    _t = time.perf_counter_ns()
                     self._invoke(pipe, pf)
+                    self._stage_ns[l][s] += time.perf_counter_ns() - _t
                     if pf._stopped:
                         self._stopped = True
                         return ()  # break both chains: in-flight drain
@@ -309,7 +331,9 @@ class Pipeline:
                     return ()
                 self._num_tokens += 1
             else:
+                _t = time.perf_counter_ns()
                 self._invoke(pipe, pf)
+                self._stage_ns[l][s] += time.perf_counter_ns() - _t
             if s == S - 1:
                 # token fully done: wake a deferred token waiting on it.
                 # Done BEFORE this task's pending-tally so the topology

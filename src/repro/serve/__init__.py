@@ -44,6 +44,31 @@ continuous batching covers them through the same resident pipeline
 (:func:`repro.models.lm.decode_step_slots`); admission for them is
 bounded by free slots alone.
 
+Async decode lookahead
+----------------------
+``ServeEngine(async_decode=True)`` (or ``REPRO_ASYNC_DECODE=1``) pipelines
+the decode loop one chunk deep so host scheduling overlaps device compute:
+
+* the decode carry ``(lengths, last, rem)`` is DEVICE-RESIDENT across
+  cycles — chunk N+1 consumes chunk N's output carry directly, and
+  admission merges / prefill-window completions / retirement / preemption
+  mutate it via the same fixed-shape padded scatters the block-table array
+  uses (:func:`repro.serve.kvcache.set_carry_rows`);
+* each cycle the SERIAL decode stage runs **dispatch -> sync**: chunk N+1
+  is dispatched first (queued behind N by JAX async dispatch), then chunk
+  N's tokens are synced and all host bookkeeping runs while N+1 computes.
+
+Consequences, handled explicitly: retirement takes effect ONE CHUNK LATE
+(the finished row stays masked on device by ``rem == 0``; its surplus
+in-flight tokens are discarded host-side by a seat-generation guard), and
+a preempted row's blocks re-enter the pool only after the engine has
+synced past the device work that could still write them (the
+``BlockPool.free_deferred`` / ``release_deferred`` fence). Greedy tokens
+are bit-identical to the synchronous engine, which remains the reference
+path (default off). ``ServeEngine.overlap_stats`` exposes the per-cycle
+dispatch/wait/bookkeeping/host-gap breakdown; see
+``benchmarks/decode_overlap_microbench.py``.
+
 Paged read-path selection
 -------------------------
 The compiled decode chunk reads the KV pool through one of three

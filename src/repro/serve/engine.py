@@ -48,6 +48,52 @@ scatter, not a re-upload). The compiled chunk reads the pool gather-free
 (``paged_impl``: the Pallas kernel or its XLA page-loop lowering, see
 :mod:`repro.serve`).
 
+Async decode lookahead (``async_decode=`` / ``REPRO_ASYNC_DECODE``)
+-------------------------------------------------------------------
+The synchronous decode stage blocks on every chunk's tokens and runs all
+grow/preempt/retire/admit bookkeeping while the device idles. With
+``async_decode=True`` the stage is split into **dispatch -> sync** at a
+pipeline depth of 2:
+
+* the decode carry (``lengths``, ``last``, ``rem``) is DEVICE-RESIDENT
+  across cycles, alongside the block tables: chunk N+1 consumes chunk N's
+  output carry directly, so the device-side dependency chain never waits
+  on the host. Merge/retire/preempt mutate the carry through the same
+  fixed-shape padded scatters the table array uses
+  (:func:`repro.serve.kvcache.set_carry_rows`); the host keeps exact
+  ``lengths``/``rem`` mirrors by pure arithmetic (chunk advance is
+  token-independent) while ``last`` lives only on device.
+* each cycle dispatches chunk N+1 FIRST (JAX async dispatch queues it
+  behind N), then syncs chunk N's tokens and does every piece of host
+  bookkeeping — emit tokens, collect finished rows, stream prefill
+  windows, grow tables — while N+1 runs on device. Admission scatters,
+  window launches and growth scatters are sequenced BEFORE the dispatch.
+
+The new scheduling hazards this opens are closed explicitly:
+
+* **retirement is one chunk late**: a row that exhausts ``rem`` during
+  chunk N stays seated through N+1 — masked on device by ``rem == 0``
+  (KV writes go to the sink) — and detaches after N's sync; tokens a
+  chunk computed for a row whose seat changed since dispatch (preempted,
+  retired, re-seated) are discarded host-side via a per-slot seat
+  generation.
+* **deferred-free fence**: a preempted row's blocks may still be written
+  by the chunk in flight at preemption time (and by the prefill window
+  launched the same cycle), so :meth:`repro.serve.kvcache.BlockPool
+  .free_deferred` parks them — invisible to allocation — until the
+  engine has synced past that device work (two fence advances).
+* **prefill-window completion is deferred one cycle**: the window launch
+  precedes the next chunk on the pool's dependency chain, so reading its
+  first-token logits a cycle later never stalls the loop behind the
+  in-flight chunk.
+
+Greedy tokens are bit-identical to the synchronous engine (same compiled
+chunk program, same carry values — asserted on the ``gather`` oracle in
+``tests/test_serve_async.py``); the synchronous path remains the
+reference. ``self.overlap_stats`` tracks the per-cycle dispatch / wait /
+bookkeeping / host-gap breakdown that
+``benchmarks/decode_overlap_microbench.py`` reports.
+
 SSM / hybrid architectures (mamba, zamba2) serve through the SAME
 resident pipeline via a fixed-slot recurrent-state pool: prefilled
 ``(conv, h)`` states (plus zamba2's shared-block KV span) are scattered
@@ -71,10 +117,11 @@ broken.
 """
 from __future__ import annotations
 
+import os
 import threading
 import time
 from collections import OrderedDict, deque
-from typing import Any, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -86,7 +133,7 @@ from ..distributed.sharding import ShardCtx, use_shard_ctx
 from ..models import lm
 from ..pipeline import DataPipe, DataPipeline, PipeType
 from .kvcache import (BlockPool, extend_block_tables, init_kv_pool,
-                      scatter_prefill_rows, set_table_rows)
+                      scatter_prefill_rows, set_carry_rows, set_table_rows)
 from .scheduler import Scheduler, ServeRequest
 
 __all__ = ["ServeEngine", "ServeRequest"]
@@ -126,6 +173,12 @@ class ServeEngine:
         oracle). None resolves via
         :func:`repro.kernels.ops.default_paged_impl` (honors the
         ``REPRO_PAGED_IMPL`` env var; pallas on TPU, xla elsewhere).
+    async_decode:
+        pipeline the decode loop one chunk deep: the carry stays
+        device-resident, chunk N+1 is dispatched before chunk N's tokens
+        are synced, and all host bookkeeping overlaps device compute (see
+        the module docstring). None resolves via the ``REPRO_ASYNC_DECODE``
+        env var (default off — the synchronous path is the reference).
     record_stages:
         keep an in-memory (stage, cycle-token, info, t) event log — the
         observer hook the overlap tests read.
@@ -143,6 +196,7 @@ class ServeEngine:
                  max_admit: int = 4,
                  max_seq_len: Optional[int] = None,
                  paged_impl: Optional[str] = None,
+                 async_decode: Optional[bool] = None,
                  record_stages: bool = False):
         self.cfg = cfg
         self.params = params
@@ -167,6 +221,12 @@ class ServeEngine:
         #: read path of the compiled decode chunk; None on non-paged archs
         self.paged_impl = (paged_impl or default_paged_impl()) \
             if self.paged else None
+        if async_decode is None:
+            async_decode = os.environ.get("REPRO_ASYNC_DECODE", "") \
+                .strip().lower() in ("1", "true", "yes", "on")
+        #: dispatch->sync pipelined decode loop (depth 2); False = the
+        #: synchronous reference path
+        self.async_decode = bool(async_decode)
         self._closing = False
         self._broken: Optional[BaseException] = None
         self._stage_log = [] if record_stages else None
@@ -180,6 +240,32 @@ class ServeEngine:
         self._lengths = np.zeros((B,), np.int32)   # KV/state tokens written
         self._rem = np.zeros((B,), np.int32)       # decode steps remaining
         self._last = np.zeros((B,), np.int32)      # last emitted token
+        # DEVICE-RESIDENT decode carry (lengths, last, rem): in async mode
+        # chunk N+1 consumes chunk N's output carry directly (merge/grow/
+        # retire/preempt mutate it via fixed-shape scatters) and the host
+        # mirrors above are maintained deterministically — lengths/rem
+        # arithmetic is token-independent, `last` is refreshed lazily from
+        # synced chunk outputs. The sync path uploads the mirrors instead.
+        self._carry = (jnp.zeros((B,), jnp.int32),
+                       jnp.zeros((B,), jnp.int32),
+                       jnp.zeros((B,), jnp.int32))
+        self._set_carry = jax.jit(set_carry_rows)
+        # seat generation per slot, bumped on every seat/retire/preempt:
+        # guards late token emission in async mode (a synced chunk's tokens
+        # only land on the seat they were computed for)
+        self._slot_gen = np.zeros((B,), np.int64)
+        self._pending: Optional[Dict[str, Any]] = None   # in-flight chunk
+        self._window_pending: Optional[Dict[str, Any]] = None
+        #: per-decode-cycle wall-time breakdown (all modes): dispatch_s =
+        #: chunk launch, wait_s = blocking device sync, book_s = host
+        #: bookkeeping, gap_s = host time with NO device work in flight
+        #: (the host gap the async mode exists to close)
+        #: ``min_chunk_s`` is the cleanest observed upload+launch+block
+        #: interval of a sync-mode cycle — the microbench's device-time
+        #: calibration constant (0 until a sync chunk has run)
+        self.overlap_stats = {"cycles": 0, "dispatch_s": 0.0, "wait_s": 0.0,
+                              "book_s": 0.0, "gap_s": 0.0, "total_s": 0.0,
+                              "min_chunk_s": 0.0}
         self._slot_req: List[Optional[ServeRequest]] = [None] * B
         self._slot_out: List[Optional[List[int]]] = [None] * B
         self._slot_phase: List[Optional[str]] = [None] * B  # prefill|decode
@@ -195,7 +281,7 @@ class ServeEngine:
         self.stats = {"admitted": 0, "admit_parks": 0, "pump_cycles": 0,
                       "decode_cycles": 0, "prefills": 0,
                       "prefill_windows": 0, "tokens_out": 0, "retired": 0,
-                      "grown_blocks": 0, "preempted": 0}
+                      "grown_blocks": 0, "preempted": 0, "stalls": 0}
 
         if self.paged:
             self._pool = BlockPool(kv_blocks, block_size)
@@ -214,10 +300,26 @@ class ServeEngine:
             self._pref_pos = np.zeros((B,), np.int32)  # prompt tokens done
             self._slot_blocks: List[Optional[List[int]]] = [None] * B
             self._slot_prompt: List[Optional[np.ndarray]] = [None] * B
+            # preallocated chunked-prefill window buffers: each cycle only
+            # the rows actually mid-prefill are (re)written — invariant: a
+            # row's `valid` entries are False unless it is mid-prefill
+            # (cleared on decode transition and preemption)
+            C = self.prefill_chunk
+            self._wp_toks = np.zeros((B, C), np.int32)
+            self._wp_valid = np.zeros((B, C), bool)
+            self._wp_start = np.zeros((B,), np.int32)
+            self._wp_last_idx = np.zeros((B,), np.int32)
             # worst-case blocks granted in one cycle: every row crosses into
             # ceil(decode_chunk / block_size) new blocks plus one boundary
             # block — the fixed width of the growth scatter
             self._grow_burst_max = B * (-(-decode_chunk // block_size) + 1)
+            # async stall ledger: a row whose growth failed ONLY because the
+            # needed blocks sit behind the deferred-free fence is masked on
+            # device (rem -> 0) instead of preempted; its remaining steps
+            # park here until the fence releases and growth succeeds
+            self._stall_rem = np.zeros((B,), np.int32)
+            self._set_rem = jax.jit(
+                lambda rem, rows, vals: rem.at[rows].set(vals))
             self._decode_paged = jax.jit(self._decode_paged_impl,
                                          static_argnames=("n",),
                                          donate_argnums=(1,))
@@ -261,48 +363,29 @@ class ServeEngine:
     def _decode_paged_impl(self, params, pkv, tables, lengths, last,
                            rem, n: int):
         """One chunk: ``n`` paged decode steps over the resident batch in a
-        single XLA launch. Rows with ``rem == 0`` are inactive: their KV
+        single XLA launch (:func:`repro.models.lm.decode_chunk_paged` — the
+        shared device-carry chunk program; the sync path feeds it uploaded
+        host mirrors, the async path feeds it the previous chunk's output
+        carry directly). Rows with ``rem == 0`` are inactive: their KV
         writes go to the sink block and their emitted tokens are discarded
         host-side. The attention read path is ``self.paged_impl``.
         Returns the advanced state + (B, n) greedy tokens."""
         with use_shard_ctx(self.ctx):
-            def body(carry, _):
-                pkv, tok, ln, rm = carry
-                active = rm > 0
-                logits, pkv = lm.decode_step_paged(
-                    self.cfg, params, pkv, tables, ln, tok, active,
-                    impl=self.paged_impl)
-                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-                nxt = jnp.where(active, nxt, tok)
-                ln = ln + active.astype(jnp.int32)
-                rm = rm - active.astype(jnp.int32)
-                return (pkv, nxt, ln, rm), nxt
-
-            (pkv, tok, ln, rm), toks = jax.lax.scan(
-                body, (pkv, last, lengths, rem), None, length=n)
-            return pkv, tok, ln, rm, toks.swapaxes(0, 1)
+            pkv, (ln, tok, rm), toks = lm.decode_chunk_paged(
+                self.cfg, params, pkv, tables, (lengths, last, rem), n,
+                impl=self.paged_impl)
+            return pkv, tok, ln, rm, toks
 
     def _decode_slots_impl(self, params, state, last, lengths, rem, n: int):
-        """One chunk over the SSM/hybrid slot-state pool: ``n`` steps of
-        :func:`repro.models.lm.decode_step_slots` at per-row positions.
+        """One chunk over the SSM/hybrid slot-state pool
+        (:func:`repro.models.lm.decode_chunk_slots` at per-row positions).
         Inactive slots step on stale state harmlessly (row-wise math; their
         tokens are discarded host-side and their slot is overwritten at the
         next admission)."""
         with use_shard_ctx(self.ctx):
-            def body(carry, _):
-                st, tok, ln, rm = carry
-                active = rm > 0
-                logits, st = lm.decode_step_slots(self.cfg, params, st, tok,
-                                                  ln)
-                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-                nxt = jnp.where(active, nxt, tok)
-                ln = ln + active.astype(jnp.int32)
-                rm = rm - active.astype(jnp.int32)
-                return (st, nxt, ln, rm), nxt
-
-            (st, tok, ln, rm), toks = jax.lax.scan(
-                body, (state, last, lengths, rem), None, length=n)
-            return st, tok, ln, rm, toks.swapaxes(0, 1)
+            st, (ln, tok, rm), toks = lm.decode_chunk_slots(
+                self.cfg, params, state, (lengths, last, rem), n)
+            return st, tok, ln, rm, toks
 
     def _prefill_window_impl(self, params, pkv, tables, tokens, start,
                              valid, last_idx):
@@ -346,6 +429,11 @@ class ServeEngine:
                         self._scheduler.num_waiting == 0:
                     break
                 time.sleep(0.005)
+        if self.paged and self._pending is None:
+            # drained: no chunk in flight, every deferred block is past the
+            # device work that fenced it — flush the fence
+            while self._pool.num_deferred:
+                self._pool.release_deferred()
         if self._own_executor and self._executor is not None:
             self._executor.shutdown()
             self._executor = None
@@ -384,8 +472,20 @@ class ServeEngine:
             # resident grid (no rebuild)
             pf.stop()
             return None
+        # async back-pressure gate: a STALLED resident row is starving for
+        # blocks that are (or will be) released by the deferred-free fence.
+        # Admitting here would hand those blocks to a new request, which the
+        # grow pass then preempts to feed the older stalled row — an
+        # admit/preempt livelock. Stalled residents claim released blocks
+        # first; admission resumes once no row is stalled. (Benign race: a
+        # one-cycle-stale read costs at most one wasted admission, which the
+        # next cycle's gate stops.)
+        stalled = self.paged and self.async_decode \
+            and bool((self._stall_rem > 0).any())
         group = None
-        if self.paged:
+        if stalled:
+            pass                        # fall through to park / decode pump
+        elif self.paged:
             # phase 1 of two-phase admission: budget the PROMPT footprint
             # only; decode-time blocks are granted lazily by the decode
             # stage as rows grow
@@ -493,6 +593,24 @@ class ServeEngine:
         return ("admit", (group, C0, cache["k"], cache["v"], first))
 
     # ------------------------------------------------- decode-stage helpers
+    def _scatter_carry(self, rows, lens, lasts, rems, pad_to: int) -> None:
+        """Fixed-shape scatter onto the device-resident carry: pad every
+        list with repeats of its last element (duplicate writes of the same
+        row are idempotent) so each call site compiles exactly ONE shape
+        regardless of how many rows it touches. Async mode only — the sync
+        path re-uploads the host mirrors each cycle instead."""
+        rows, lens = list(rows), list(lens)
+        lasts, rems = list(lasts), list(rems)
+        while len(rows) < pad_to:
+            rows.append(rows[-1])
+            lens.append(lens[-1])
+            lasts.append(lasts[-1])
+            rems.append(rems[-1])
+        self._carry = self._set_carry(
+            *self._carry, jnp.asarray(rows, jnp.int32),
+            jnp.asarray(lens, jnp.int32), jnp.asarray(lasts, jnp.int32),
+            jnp.asarray(rems, jnp.int32))
+
     def _merge_group(self, payload) -> None:
         """Seat an admitted group: assign slots, install block tables, and
         scatter the window-0 KV into the pool (single-writer: we are inside
@@ -503,6 +621,7 @@ class ServeEngine:
         first = np.asarray(first)
         nb0 = self._pool.blocks_for(C0)
         rows_idx, rows_tab = [], []
+        c_len, c_last, c_rem = [], [], []
         for i, (req, blocks) in enumerate(group):
             with self._state_lock:
                 slot = self._free_slots.pop()
@@ -510,7 +629,10 @@ class ServeEngine:
                 self._slot_req[slot] = req
                 self._slot_blocks[slot] = list(blocks)
                 self._slot_out[slot] = []
+            self._slot_gen[slot] += 1
             self._slot_prompt[slot] = req.prompt
+            self._wp_valid[slot] = False
+            self._stall_rem[slot] = 0
             self._tables[slot] = 0
             self._tables[slot, :len(blocks)] = blocks
             self._pref_pos[slot] = min(req.prompt_len, C0)
@@ -527,7 +649,10 @@ class ServeEngine:
                 self._rem[slot] = 0   # masked out of decode until prefilled
             rows_idx.append(slot)
             rows_tab.append(self._tables[slot].copy())
-        # pad the row-set scatter to the admission cap (duplicate writes of
+            c_len.append(int(self._lengths[slot]))
+            c_last.append(int(self._last[slot]))
+            c_rem.append(int(self._rem[slot]))
+        # pad the row-set scatters to the admission cap (duplicate writes of
         # the same row are idempotent): ONE compiled shape per engine, not
         # one per group size
         A = self._scheduler.max_admit
@@ -537,6 +662,13 @@ class ServeEngine:
         self._tables_dev = self._set_rows(
             self._tables_dev, jnp.asarray(rows_idx, jnp.int32),
             jnp.asarray(np.stack(rows_tab)))
+        if self.async_decode:
+            # admission scatter onto the device carry, sequenced BEFORE the
+            # next chunk dispatch: the seated rows were inactive (rem==0) in
+            # the chunk still in flight, so scattering onto its output carry
+            # is exact
+            self._scatter_carry(rows_idx[:len(group)], c_len, c_last, c_rem,
+                                pad_to=A)
         # window-0 scatter: per-row block lists trimmed/padded to the window
         # footprint (sink-filled beyond a short prompt's own blocks and for
         # the group's pad rows), so the compiled shape keys on the window
@@ -551,6 +683,7 @@ class ServeEngine:
         """Seat an admitted SSM/hybrid group: scatter each member's
         prefilled recurrent state (and zamba2 shared-KV span) into its
         slot of the fixed-slot state pool."""
+        rows_idx, c_len, c_last, c_rem = [], [], [], []
         for req, cache, first in payload:
             with self._state_lock:
                 slot = self._free_slots.pop()
@@ -558,11 +691,19 @@ class ServeEngine:
                 self._slot_req[slot] = req
                 self._slot_out[slot] = [first]
                 self._slot_phase[slot] = "decode"
+            self._slot_gen[slot] += 1
             self._write_slot_state(slot, cache, req.prompt_len)
             self._lengths[slot] = req.prompt_len
             self._last[slot] = first
             self._rem[slot] = req.max_new - 1
             req.state = "decoding"
+            rows_idx.append(slot)
+            c_len.append(req.prompt_len)
+            c_last.append(first)
+            c_rem.append(req.max_new - 1)
+        if self.async_decode:
+            self._scatter_carry(rows_idx, c_len, c_last, c_rem,
+                                pad_to=self._scheduler.max_admit)
 
     def _write_slot_state(self, slot: int, cache, plen: int) -> None:
         cfg = self.cfg
@@ -587,37 +728,71 @@ class ServeEngine:
                                    sh.at[:, slot].set(h[:, 0]))
 
     def _window_prefill_step(self, pf) -> None:
-        """Stream ONE prefill window for every mid-prefill row: the window's
+        """Synchronous chunked prefill: build, launch and complete ONE
+        prefill window for every mid-prefill row in the same cycle. The
+        async path instead calls :meth:`_dispatch_window_prefill` directly
+        and completes the window next cycle (:meth:`_finish_window`), so
+        reading its first-token logits never blocks behind the in-flight
+        decode chunk."""
+        pend = self._dispatch_window_prefill(pf)
+        if pend is not None:
+            self._finish_window(pend)
+
+    def _dispatch_window_prefill(self, pf) -> Optional[Dict[str, Any]]:
+        """Launch ONE prefill window for every mid-prefill row: the window's
         KV is computed against the row's paged prefix and scattered straight
         into the pool (one fixed-shape launch however many rows are
-        prefilling — resident rows keep decoding in the same cycle)."""
+        prefilling — resident rows keep decoding in the same cycle). Only
+        the prefilling rows are written into the preallocated window
+        buffers; everyone else's ``valid`` entries are invariantly False.
+        Returns the pending-window descriptor (or None if no row is
+        prefilling); completion is :meth:`_finish_window`."""
         B = len(self._slot_req)
         pref = [b for b in range(B) if self._slot_phase[b] == "prefill"]
         if not pref:
-            return
+            return None
         C = self.prefill_chunk
-        toks = np.zeros((B, C), np.int32)
-        valid = np.zeros((B, C), bool)
-        start = np.zeros((B,), np.int32)
-        last_idx = np.zeros((B,), np.int32)
+        toks, valid = self._wp_toks, self._wp_valid
+        start, last_idx = self._wp_start, self._wp_last_idx
+        ks = {}
         for b in pref:
             prompt = self._slot_prompt[b]
             s = int(self._pref_pos[b])
             k = min(C, len(prompt) - s)
             toks[b, :k] = prompt[s:s + k]
             valid[b, :k] = True
+            valid[b, k:] = False
             start[b] = s
             last_idx[b] = min(len(prompt) - 1 - s, C - 1)
+            ks[b] = k
         first, pkv = self._prefill_window(
             self.params, self._pkv, self._tables_dev, jnp.asarray(toks),
             jnp.asarray(start), jnp.asarray(valid), jnp.asarray(last_idx))
         self._pkv = pkv
-        first = np.asarray(first)
-        for b in pref:
+        with self._state_lock:
+            self.stats["prefill_windows"] += 1
+        return {"first": first, "rows": pref, "k": ks, "token": pf.token,
+                "gen": {b: self._slot_gen[b] for b in pref}}
+
+    def _finish_window(self, pend: Dict[str, Any]) -> None:
+        """Complete a dispatched prefill window: advance per-row prompt
+        positions and flip rows whose prompt just finished into decode
+        (their first-token logits seed the stream). Async mode runs this
+        one cycle AFTER the dispatch — the window launch precedes the next
+        chunk on the pool's dependency chain, so by then its outputs are
+        ready and the ``np.asarray`` below does not stall the loop — and
+        scatters the transitions onto the device carry."""
+        first = np.asarray(pend["first"])
+        t_rows, t_len, t_last, t_rem = [], [], [], []
+        done = []
+        for b in pend["rows"]:
+            if self._slot_gen[b] != pend["gen"][b] \
+                    or self._slot_phase[b] != "prefill":
+                continue                    # preempted since the dispatch
             prompt = self._slot_prompt[b]
-            k = min(C, len(prompt) - int(self._pref_pos[b]))
-            self._pref_pos[b] += k
+            self._pref_pos[b] += pend["k"][b]
             self._lengths[b] = self._pref_pos[b]
+            done.append(b)
             if self._pref_pos[b] >= len(prompt):
                 req = self._slot_req[b]
                 self._slot_phase[b] = "decode"
@@ -625,10 +800,16 @@ class ServeEngine:
                 self._rem[b] = req.max_new - 1
                 self._slot_out[b].append(int(first[b]))
                 req.state = "decoding"
-        with self._state_lock:
-            self.stats["prefill_windows"] += 1
-        self._log("prefill_chunk", pf.token,
-                  [(b, int(self._pref_pos[b])) for b in pref])
+                self._wp_valid[b] = False
+                t_rows.append(b)
+                t_len.append(int(self._lengths[b]))
+                t_last.append(int(first[b]))
+                t_rem.append(req.max_new - 1)
+        if self.async_decode and t_rows:
+            self._scatter_carry(t_rows, t_len, t_last, t_rem,
+                                pad_to=len(self._slot_req))
+        self._log("prefill_chunk", pend["token"],
+                  [(b, int(self._pref_pos[b])) for b in done])
 
     def _grow_or_preempt(self, pf) -> None:
         """Phase 2 of two-phase admission: grant each decoding row the
@@ -638,22 +819,40 @@ class ServeEngine:
         onto the wait queue instead of deadlocking: its blocks free
         immediately, the oldest rows keep decoding, and the preempted
         request re-runs from scratch later (greedy decode is deterministic,
-        so its tokens are unchanged)."""
+        so its tokens are unchanged).
+
+        Async refinements: a growth failure while blocks sit behind the
+        deferred-free fence STALLS the row (``rem`` masked to 0 on device,
+        the balance parked in ``_stall_rem``) instead of preempting —
+        preempting on in-transit memory could cascade into the oldest row
+        evicting itself and replaying forever. Stalled rows retry here
+        every cycle and resume the moment growth succeeds."""
         bs = self._pool.block_size
         n = self.decode_chunk
         grow_rows: List[int] = []
         grow_cols: List[int] = []
         grow_ids: List[int] = []
+        stall_rows: List[int] = []
+        stall_vals: List[int] = []
         order = sorted((b for b in range(len(self._slot_req))
                         if self._slot_phase[b] == "decode"
-                        and self._rem[b] > 0),
+                        and (self._rem[b] > 0 or self._stall_rem[b] > 0)),
                        key=lambda b: self._slot_req[b].id)
+        # youngest-first victim order, computed ONCE per cycle (the old
+        # code re-ran a max() over all slots on every failed grow attempt);
+        # slots preempted along the way are skipped by the slot_req check
+        victims = sorted((v for v in range(len(self._slot_req))
+                          if self._slot_req[v] is not None),
+                         key=lambda v: self._slot_req[v].id, reverse=True)
+        vi = 0
         for b in order:
             if self._slot_req[b] is None:
                 continue                    # preempted as a younger victim
-            k = int(min(n, self._rem[b]))
+            rem_b = int(self._rem[b]) + int(self._stall_rem[b])
+            k = int(min(n, rem_b))
             need = (int(self._lengths[b]) + k - 1) // bs + 1
             cur = len(self._slot_blocks[b])
+            covered = need <= cur
             while need > cur:
                 ids = self._pool.grow_table(self._slot_blocks[b], need - cur)
                 if ids is not None:
@@ -663,13 +862,48 @@ class ServeEngine:
                     grow_ids.extend(ids)
                     with self._state_lock:
                         self.stats["grown_blocks"] += len(ids)
+                    covered = True
                     break
-                victim = max((v for v in range(len(self._slot_req))
-                              if self._slot_req[v] is not None),
-                             key=lambda v: self._slot_req[v].id)
+                if self.async_decode and self._pool.num_deferred > 0:
+                    break       # blocks in transit behind the fence: stall
+                while vi < len(victims) \
+                        and self._slot_req[victims[vi]] is None:
+                    vi += 1
+                if vi == len(victims):
+                    break                   # nothing left to preempt
+                victim = victims[vi]
+                vi += 1
                 self._preempt(victim, pf)
                 if victim == b:
                     break                   # b itself was the youngest
+            if self._slot_req[b] is None:
+                continue                    # b preempted itself
+            if covered:
+                if self._stall_rem[b]:      # fence released: resume the row
+                    self._rem[b] += self._stall_rem[b]
+                    self._stall_rem[b] = 0
+                    stall_rows.append(b)
+                    stall_vals.append(int(self._rem[b]))
+                    self._log("resume", pf.token, b)
+            elif self._rem[b] > 0:
+                # newly stalled: mask the row out of the next dispatch
+                self._stall_rem[b] = int(self._rem[b])
+                self._rem[b] = 0
+                stall_rows.append(b)
+                stall_vals.append(0)
+                with self._state_lock:
+                    self.stats["stalls"] += 1
+                self._log("stall", pf.token, b)
+        if stall_rows and self.async_decode:
+            # fixed-shape rem-only carry scatter (lengths/last unchanged —
+            # `last` is device-only in async mode; pad with repeats)
+            B = len(self._slot_req)
+            rows = stall_rows + [stall_rows[-1]] * (B - len(stall_rows))
+            vals = stall_vals + [stall_vals[-1]] * (B - len(stall_vals))
+            ln, la, rm = self._carry
+            self._carry = (ln, la, self._set_rem(
+                rm, jnp.asarray(rows, jnp.int32),
+                jnp.asarray(vals, jnp.int32)))
         if grow_rows:
             # device-side per-row table extension: the resident table array
             # is updated in place, not re-uploaded. Padded with repeats
@@ -692,24 +926,40 @@ class ServeEngine:
             self._slot_req[slot] = None
             self._slot_out[slot] = None
             self._slot_phase[slot] = None
-            self._pool.free(self._slot_blocks[slot])
+            if self.async_decode:
+                # deferred-free FENCE: the chunk in flight at preemption
+                # time (and any prefill window launched this cycle) may
+                # still write these blocks — they return to the pool only
+                # after the engine has synced past that device work
+                self._pool.free_deferred(self._slot_blocks[slot])
+            else:
+                self._pool.free(self._slot_blocks[slot])
             self._slot_blocks[slot] = None
             self._free_slots.append(slot)
             self._inflight.discard(req)
             self.stats["preempted"] += 1
+        self._slot_gen[slot] += 1      # in-flight tokens become surplus
+        req.preempted_count += 1
         self._slot_prompt[slot] = None
+        self._wp_valid[slot] = False
         self._tables[slot] = 0
         self._lengths[slot] = 0
         self._last[slot] = 0
         self._rem[slot] = 0
+        self._stall_rem[slot] = 0
         self._pref_pos[slot] = 0
         self._tables_dev = self._set_rows(
             self._tables_dev, jnp.asarray([slot], jnp.int32),
             jnp.zeros((1, self._tables.shape[1]), jnp.int32))
+        if self.async_decode:
+            self._scatter_carry([slot], [0], [0], [0], pad_to=1)
         self._scheduler.requeue_front([req])
         self._log("preempt", pf.token, req.id)
 
     def _st_decode(self, pf, msg):
+        if self.async_decode:
+            return self._st_decode_async(pf, msg)
+        t0 = time.perf_counter()
         kind, payload = msg
         if kind == "admit":
             if self.paged:
@@ -722,8 +972,9 @@ class ServeEngine:
         rem_before = self._rem.copy()
         if not (rem_before > 0).any():
             self._log("decode", pf.token, 0)
-            return ("cycle", self._collect_finished(rem_before))
+            return ("cycle", self._collect_finished())
         n = self.decode_chunk
+        t1 = time.perf_counter()
         if self.paged:
             pkv, tok, ln, rm, toks = self._decode_paged(
                 self.params, self._pkv, self._tables_dev,
@@ -735,12 +986,15 @@ class ServeEngine:
                 self.params, self._sstate, jnp.asarray(self._last),
                 jnp.asarray(self._lengths), jnp.asarray(self._rem), n=n)
             self._sstate = st
+        t1b = time.perf_counter()      # carry uploads + launch: device idle
         toks = np.asarray(toks)        # (B, n): the chunk's device sync
+        t2a = time.perf_counter()
         # np.array (not asarray): device views are read-only and these
         # mirrors are mutated by the next cycle's merge
         self._last = np.array(tok)
         self._lengths = np.array(ln)
         self._rem = np.array(rm)
+        t2 = time.perf_counter()
         emitted = 0
         for b in np.nonzero(rem_before > 0)[0]:
             k = int(min(n, rem_before[b]))
@@ -749,43 +1003,176 @@ class ServeEngine:
         with self._state_lock:
             self.stats["decode_cycles"] += 1
             self.stats["tokens_out"] += emitted
+        retire = self._collect_finished()
+        t3 = time.perf_counter()
+        o = self.overlap_stats
+        o["cycles"] += 1
+        # dispatch_s here = mirror uploads + launch; under CPU contention
+        # the chunk starts computing mid-interval, so it is EXCLUDED from
+        # the gap (conservative: the true sync gap is larger)
+        o["dispatch_s"] += t1b - t1
+        o["wait_s"] += t2a - t1b
+        o["book_s"] += (t1 - t0) + (t2 - t2a) + (t3 - t2)
+        # sync-mode host gap: pre-work, the mirror download copies and all
+        # bookkeeping run with nothing queued on the device — the gap the
+        # async mode exists to close
+        o["gap_s"] += (t1 - t0) + (t2 - t2a) + (t3 - t2)
+        o["total_s"] += t3 - t0
+        chunk_s = t2a - t1             # upload + launch + block: the device
+        if o["min_chunk_s"] == 0.0 or chunk_s < o["min_chunk_s"]:
+            o["min_chunk_s"] = chunk_s  # cleanest (least contended) sample
         self._log("decode", pf.token, emitted)
-        return ("cycle", self._collect_finished(rem_before))
+        return ("cycle", retire)
 
-    def _collect_finished(self, rem_before) -> List[tuple]:
-        """Rows that just hit rem==0: detach them from the batch (their slot
-        stays reserved until complete frees it)."""
+    def _st_decode_async(self, pf, msg):
+        """Async decode lookahead (pipeline depth 2): dispatch chunk N+1
+        FIRST — JAX async dispatch queues it behind the in-flight chunk N,
+        so the device-side dependency chain never drains — then sync chunk
+        N's tokens and do all host bookkeeping (emit tokens, retire
+        finished rows, advance the deferred-free fence) while N+1 runs.
+        Admission merges, streamed prefill windows and table growth are
+        sequenced BEFORE the dispatch; retirement takes effect one chunk
+        late (already masked on device by ``rem == 0``); a preempted row's
+        in-flight tokens are discarded via the seat-generation guard."""
+        t0 = time.perf_counter()
+        kind, payload = msg
+        pend = self._pending
+        device_idle = (pend is None or bool(pend["toks"].is_ready())) \
+            and self._window_pending is None
+        # ---- pre-dispatch: everything chunk N+1 must observe ----
+        wpend, self._window_pending = self._window_pending, None
+        if wpend is not None:
+            self._finish_window(wpend)
+        if kind == "admit":
+            if self.paged:
+                self._merge_group(payload)
+            else:
+                self._merge_group_slots(payload)
+        if self.paged:
+            self._window_pending = self._dispatch_window_prefill(pf)
+            self._grow_or_preempt(pf)
+        # ---- dispatch chunk N+1 (the device never waits on the host
+        # bookkeeping below) ----
+        n = self.decode_chunk
+        new_pend = None
+        t1 = time.perf_counter()
+        if (self._rem > 0).any():
+            rem_before = self._rem.copy()
+            if self.paged:
+                pkv, tok, ln, rm, toks = self._decode_paged(
+                    self.params, self._pkv, self._tables_dev,
+                    *self._carry, n=n)
+                self._pkv = pkv
+            else:
+                lengths, last, rem = self._carry
+                st, tok, ln, rm, toks = self._decode_slots(
+                    self.params, self._sstate, last, lengths, rem, n=n)
+                self._sstate = st
+            self._carry = (ln, tok, rm)
+            # advance the host lengths/rem mirrors deterministically (the
+            # chunk's length/rem arithmetic is token-independent); the
+            # host `last` mirror stays stale — it is never read in async
+            # mode, the device carry is authoritative
+            adv = np.minimum(n, rem_before)
+            self._lengths += adv
+            self._rem -= adv
+            new_pend = {"toks": toks, "rem_before": rem_before,
+                        "gen": self._slot_gen.copy(), "token": pf.token}
+            with self._state_lock:
+                self.stats["decode_cycles"] += 1
+            self._log("dispatch", pf.token, int((rem_before > 0).sum()))
+        t2 = time.perf_counter()
+        # ---- sync chunk N + host bookkeeping (overlaps N+1 on device) ----
+        emitted = 0
+        wait_s = 0.0
+        if pend is not None:
+            ts = time.perf_counter()
+            toks = np.asarray(pend["toks"])
+            wait_s = time.perf_counter() - ts
+            for b in np.nonzero(pend["rem_before"] > 0)[0]:
+                if self._slot_gen[b] != pend["gen"][b]:
+                    continue    # seat changed since dispatch: surplus tokens
+                k = int(min(n, pend["rem_before"][b]))
+                self._slot_out[b].extend(toks[b, :k].tolist())
+                emitted += k
+            with self._state_lock:
+                self.stats["tokens_out"] += emitted
+            self._log("sync", pf.token, (pend["token"], emitted))
+        self._pending = new_pend
+        retire = self._collect_finished()
+        if self.paged and (pend is not None or (
+                new_pend is None and self._window_pending is None)):
+            # fence advance: a chunk was synced (or nothing is in flight
+            # at all) — blocks deferred two advances ago are now provably
+            # past every device write that could touch them
+            self._pool.release_deferred()
+        t3 = time.perf_counter()
+        o = self.overlap_stats
+        o["cycles"] += 1
+        o["dispatch_s"] += t2 - t1
+        o["wait_s"] += wait_s
+        o["book_s"] += (t1 - t0) + (t3 - t2 - wait_s)
+        gap = 0.0
+        if device_idle:
+            gap += t1 - t0          # nothing in flight during pre-dispatch
+        if new_pend is None:
+            gap += t3 - t2 - wait_s  # nothing in flight during bookkeeping
+        o["gap_s"] += gap
+        o["total_s"] += t3 - t0
+        self._log("decode", pf.token, emitted)
+        return ("cycle", retire)
+
+    def _collect_finished(self) -> List[tuple]:
+        """Rows that hit rem==0: detach them from the batch (their slot
+        stays reserved until complete frees it) and zero their mirrors —
+        still inside the SERIAL decode stage (single-writer); the
+        gather-free read paths bound their page loop by max(lengths), so a
+        retired slot must not keep advertising its old length.
+
+        Async mode retires one chunk LATE by construction: a row that hit
+        ``rem == 0`` during chunk N is collected only after N's sync —
+        rows still finishing inside the freshly dispatched chunk (or
+        stalled behind the deferred-free fence) are skipped, and the
+        zeroing scatters land on the in-flight chunk's OUTPUT carry/
+        tables (the retired rows are already inactive in that chunk), so
+        the detach never races device work."""
+        pend = self._pending
         retire = []
         zero_rows = []
         for b in range(len(self._rem)):
-            if self._slot_req[b] is not None \
-                    and self._slot_phase[b] == "decode" \
-                    and self._rem[b] == 0:
-                req = self._slot_req[b]
-                out = np.asarray(self._slot_out[b], np.int32)
-                with self._state_lock:
-                    self._slot_req[b] = None
-                    self._slot_out[b] = None
-                    self._slot_phase[b] = None
-                # zero the detached row's mirrors (still inside the SERIAL
-                # decode stage: single-writer): the gather-free read paths
-                # bound their page loop by max(lengths), so a retired slot
-                # must not keep advertising its old length
-                self._lengths[b] = 0
-                self._last[b] = 0
-                if self.paged:
-                    self._tables[b] = 0
-                    self._pref_pos[b] = 0
-                    self._slot_prompt[b] = None
-                    zero_rows.append(b)
-                retire.append((b, req, out))
+            if self._slot_req[b] is None or self._slot_phase[b] != "decode" \
+                    or self._rem[b] != 0:
+                continue
+            if self.paged and self.async_decode and self._stall_rem[b] > 0:
+                continue        # stalled behind the fence, not finished
+            if pend is not None and pend["rem_before"][b] > 0:
+                continue        # active in the in-flight chunk: next cycle
+            req = self._slot_req[b]
+            out = np.asarray(self._slot_out[b], np.int32)
+            with self._state_lock:
+                self._slot_req[b] = None
+                self._slot_out[b] = None
+                self._slot_phase[b] = None
+            self._slot_gen[b] += 1
+            self._lengths[b] = 0
+            self._last[b] = 0
+            if self.paged:
+                self._tables[b] = 0
+                self._pref_pos[b] = 0
+                self._slot_prompt[b] = None
+            zero_rows.append(b)
+            retire.append((b, req, out))
         if zero_rows:
-            # fixed-shape zeroing scatter (pad with repeats; idempotent)
+            # fixed-shape zeroing scatters (pad with repeats; idempotent)
             B = len(self._slot_req)
-            zero_rows += [zero_rows[-1]] * (B - len(zero_rows))
-            self._tables_dev = self._set_rows(
-                self._tables_dev, jnp.asarray(zero_rows, jnp.int32),
-                jnp.zeros((B, self._tables.shape[1]), jnp.int32))
+            z = [0] * len(zero_rows)
+            if self.async_decode:
+                self._scatter_carry(zero_rows, z, z, z, pad_to=B)
+            if self.paged:
+                rows = zero_rows + [zero_rows[-1]] * (B - len(zero_rows))
+                self._tables_dev = self._set_rows(
+                    self._tables_dev, jnp.asarray(rows, jnp.int32),
+                    jnp.zeros((B, self._tables.shape[1]), jnp.int32))
         return retire
 
     def _st_complete(self, pf, msg):

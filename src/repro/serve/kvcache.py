@@ -18,16 +18,19 @@ Two halves, deliberately separated:
 * :class:`BlockPool` — the HOST-side allocator: a free list of block ids
   with ``alloc`` / ``free`` / ``grow_table`` (mid-decode extension of a live
   sequence's allocation — phase 2 of two-phase admission) /
-  ``fragmentation`` / ``defragment``. Thread-safe (admission allocates from
-  the pipeline's SERIAL admit stage while retirement frees from the
-  complete stage and the decode stage grows). Block id 0 is a reserved
-  *sink*: it is never handed out, and jit-compiled decode redirects the KV
-  writes of inactive batch rows into it, so masked rows can never corrupt a
-  live sequence's blocks.
+  ``fragmentation`` / ``defragment``, plus the async-decode DEFERRED-FREE
+  FENCE (``free_deferred`` / ``release_deferred``): a preempted row's
+  blocks may still be written by the compiled chunk in flight at preemption
+  time, so they return to the pool only after the engine has synced past
+  that chunk. Thread-safe (admission allocates from the pipeline's SERIAL
+  admit stage while retirement frees from the complete stage and the decode
+  stage grows). Block id 0 is a reserved *sink*: it is never handed out,
+  and jit-compiled decode redirects the KV writes of inactive batch rows
+  into it, so masked rows can never corrupt a live sequence's blocks.
 * pure jit-able helpers (``scatter_prefill_rows`` / ``scatter_token_window``
   / ``gather_pages`` / ``append_kv`` / ``extend_block_tables`` /
-  ``set_table_rows``) — the device-side gather/scatter through block
-  tables, used by :func:`repro.models.lm.decode_step_paged`,
+  ``set_table_rows`` / ``set_carry_rows``) — the device-side gather/scatter
+  through block tables, used by :func:`repro.models.lm.decode_step_paged`,
   :func:`repro.models.lm.prefill_window_paged` (chunked prefill) and the
   engine's compiled chunk program; ``extend_block_tables`` keeps the
   block-table array device-resident across cycles (growth is an in-place
@@ -49,7 +52,7 @@ from ..configs.base import ModelConfig
 __all__ = ["BlockPool", "init_kv_pool", "scatter_prefill_row",
            "scatter_prefill_rows", "scatter_token_window", "gather_pages",
            "gather_read_attention", "append_kv", "extend_block_tables",
-           "set_table_rows", "SINK_BLOCK"]
+           "set_table_rows", "set_carry_rows", "SINK_BLOCK"]
 
 #: Block id 0 is reserved: never allocated, target of masked-row KV writes.
 SINK_BLOCK = 0
@@ -82,6 +85,13 @@ class BlockPool:
         # LIFO free list: recently freed blocks are re-used first (warm)
         self._free: List[int] = list(range(num_blocks - 1, SINK_BLOCK, -1))
         self._allocated: set = set()
+        # deferred-free fence (async decode lookahead): blocks whose owner
+        # row may still be WRITTEN by an in-flight compiled chunk sit here —
+        # still accounted as allocated, invisible to alloc — until the
+        # engine advances the fence (see free_deferred / release_deferred)
+        self._deferred_young: List[int] = []
+        self._deferred_old: List[int] = []
+        self._deferred_set: set = set()
 
     # ------------------------------------------------------------- accounting
     @property
@@ -117,12 +127,55 @@ class BlockPool:
     def free(self, ids: Sequence[int]) -> None:
         with self._lock:
             for b in ids:
-                if b not in self._allocated:
+                if b not in self._allocated or b in self._deferred_set:
                     raise ValueError(
                         f"free of block {b} that is not allocated "
-                        f"(double free, or the reserved sink)")
+                        f"(double free, a deferred block, or the sink)")
                 self._allocated.discard(b)
                 self._free.append(b)
+
+    # ------------------------------------------------- deferred-free fence
+    def free_deferred(self, ids: Sequence[int]) -> None:
+        """Queue blocks for return to the pool behind the async-decode
+        FENCE. A preempted row may still be written by the chunk program in
+        flight at preemption time (and by a chunked-prefill window enqueued
+        the same cycle), so its blocks must not be handed back out until
+        that device work has provably retired. Deferred blocks stay
+        accounted as allocated (the ``num_free + num_allocated`` invariant
+        holds) but are invisible to :meth:`alloc` / :meth:`grow_table`
+        until TWO :meth:`release_deferred` calls later."""
+        with self._lock:
+            for b in ids:
+                if b not in self._allocated or b in self._deferred_set:
+                    raise ValueError(
+                        f"deferred free of block {b} that is not allocated "
+                        f"(double free, or the reserved sink)")
+                self._deferred_set.add(b)
+            self._deferred_young.extend(ids)
+
+    def release_deferred(self) -> int:
+        """Advance the fence by one chunk sync: blocks deferred before the
+        PREVIOUS advance return to the free list; blocks deferred since then
+        age one stage. The engine calls this each time it has synced a
+        compiled chunk (every device write enqueued when the blocks were
+        deferred precedes the NEXT chunk on the pool's data-dependency
+        chain, so two syncs bound all of them). Returns the number of
+        blocks released."""
+        with self._lock:
+            old = self._deferred_old
+            self._deferred_old = self._deferred_young
+            self._deferred_young = []
+            for b in old:
+                self._deferred_set.discard(b)
+                self._allocated.discard(b)
+                self._free.append(b)
+            return len(old)
+
+    @property
+    def num_deferred(self) -> int:
+        """Blocks parked behind the deferred-free fence."""
+        with self._lock:
+            return len(self._deferred_young) + len(self._deferred_old)
 
     def grow_table(self, blocks: List[int], n: int) -> Optional[List[int]]:
         """Extend a sequence's existing allocation by ``n`` blocks — the
@@ -269,6 +322,26 @@ def set_table_rows(tables: jnp.ndarray, rows: jnp.ndarray,
     page loops stop advertising it). tables: (B, mb); rows: (M,) int32;
     new_rows: (M, mb) int32."""
     return tables.at[rows].set(new_rows)
+
+
+def set_carry_rows(lengths: jnp.ndarray, last: jnp.ndarray, rem: jnp.ndarray,
+                   rows: jnp.ndarray, new_lengths: jnp.ndarray,
+                   new_last: jnp.ndarray, new_rem: jnp.ndarray):
+    """Scatter per-row values into the DEVICE-RESIDENT decode carry
+    ``(lengths, last, rem)`` — the async-lookahead counterpart of
+    :func:`set_table_rows` for the carry arrays. Admission merge seats new
+    rows, chunked-prefill completion flips a row into decode, and
+    retirement/preemption zeroes a row, all without re-uploading the whole
+    mirrors (chunk N+1 consumes chunk N's carry plus these scatters
+    directly, so the device dependency chain never waits on the host).
+
+    lengths/last/rem: (B,) int32; rows: (M,) int32 (pad with repeats —
+    duplicate writes of the same row are idempotent, keeping the compiled
+    shape fixed); new_lengths/new_last/new_rem: (M,) int32.
+    """
+    return (lengths.at[rows].set(new_lengths),
+            last.at[rows].set(new_last),
+            rem.at[rows].set(new_rem))
 
 
 def gather_pages(pool_l: jnp.ndarray, tables: jnp.ndarray):

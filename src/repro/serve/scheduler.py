@@ -46,9 +46,13 @@ class ServeRequest:
     :attr:`state` tracks the request through the engine — ``"created"`` →
     ``"waiting"`` (queued) → ``"prefilling"`` (admitted, prompt KV being
     chunked in) → ``"decoding"`` → ``"done"``/``"failed"``; a mid-decode
-    preemption moves it back to ``"waiting"``. Purely informational (the
-    timeout message below reports it); transitions are made by the single
-    SERIAL writer stages, so torn reads can at worst be one step stale.
+    preemption moves it back to ``"waiting"`` and bumps
+    :attr:`preempted_count` (under the async-lookahead engine the tokens
+    the in-flight chunk computed for the preempted seat are discarded, and
+    the re-run emits an identical stream — greedy decode is
+    deterministic). Purely informational (the timeout message below
+    reports it); transitions are made by the single SERIAL writer stages,
+    so torn reads can at worst be one step stale.
     """
 
     def __init__(self, prompt: Any, max_new: int) -> None:
@@ -60,6 +64,7 @@ class ServeRequest:
             raise ValueError("max_new must be >= 1")
         self.max_new = int(max_new)
         self.state = "created"
+        self.preempted_count = 0       # mid-decode evictions (see above)
         self.submitted_at: Optional[float] = None   # set by the engine
         self.admitted_at: Optional[float] = None    # first admission
         self.finished_at: Optional[float] = None

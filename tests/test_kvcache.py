@@ -198,3 +198,40 @@ def test_init_kv_pool_rejects_ssm():
     cfg = get_config("falcon-mamba-7b").smoke()
     with pytest.raises(ValueError, match="attention"):
         init_kv_pool(cfg, 8, 4)
+
+
+def test_set_carry_rows_scatter():
+    from repro.serve.kvcache import set_carry_rows
+    lengths = jnp.asarray([5, 0, 9, 0], jnp.int32)
+    last = jnp.asarray([11, 0, 12, 0], jnp.int32)
+    rem = jnp.asarray([3, 0, 1, 0], jnp.int32)
+    # seat rows 1 and 3; pad with a repeat of row 3 (idempotent)
+    rows = jnp.asarray([1, 3, 3], jnp.int32)
+    ln, la, rm = set_carry_rows(
+        lengths, last, rem, rows,
+        jnp.asarray([7, 4, 4], jnp.int32),
+        jnp.asarray([21, 22, 22], jnp.int32),
+        jnp.asarray([8, 6, 6], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(ln), [5, 7, 9, 4])
+    np.testing.assert_array_equal(np.asarray(la), [11, 21, 12, 22])
+    np.testing.assert_array_equal(np.asarray(rm), [3, 8, 1, 6])
+
+
+def test_deferred_free_keeps_invariant_and_defragment():
+    """Deferred blocks stay allocated for accounting, are skipped by
+    defragment's free-list sort, and release in FIFO fence order."""
+    bp = BlockPool(num_blocks=9, block_size=4)
+    a = bp.alloc(4)
+    b = bp.alloc(2)
+    bp.free_deferred(a)
+    bp.free(b)
+    assert bp.num_free + bp.num_allocated == bp.num_blocks - 1
+    assert bp.num_deferred == 4
+    bp.defragment()                  # must not disturb deferred blocks
+    assert bp.num_deferred == 4
+    bp.release_deferred()
+    bp.free_deferred(bp.alloc(1))    # second batch enters young stage
+    assert bp.release_deferred() == 4
+    assert bp.num_deferred == 1
+    assert bp.release_deferred() == 1
+    assert bp.num_free == bp.num_blocks - 1
