@@ -32,8 +32,14 @@ programs. A final parity pass pins
 ``paged_impl="gather"`` (the bit-exact oracle) and asserts the async
 token streams equal the synchronous engine's, chunked prefill included.
 
-The serve pipeline's per-stage wall-time split (``Pipeline.stage_times``)
-is reported for the async engine as an observability cross-check.
+The per-cycle numbers are read from the engine's metrics registry
+(:mod:`repro.obs` — ``engine.cycle_s`` / ``engine.dispatch_s`` /
+``engine.chunk_sync_s`` / ``engine.book_s`` histograms, reset in place
+between repetitions; the device-time calibration constant is the min of
+the sync-mode ``engine.chunk_s`` histogram), and ``trace_path`` writes
+the last timed repetition's Chrome trace-event JSON artifact. The serve
+pipeline's per-stage wall-time split (``Pipeline.stage_times``) is
+reported for the async engine as an observability cross-check.
 """
 from __future__ import annotations
 
@@ -47,17 +53,21 @@ def _run(eng, prompts, max_new: int) -> Tuple[float, List]:
         eng.stats[k] = 0
     for k in eng.overlap_stats:
         eng.overlap_stats[k] = 0
+    if eng.obs is not None:
+        eng.obs.reset()     # in place: the engine's cached handles survive
     t0 = time.perf_counter()
     reqs = [eng.submit(p, max_new) for p in prompts]
     outs = [eng.result(r, timeout=600.0) for r in reqs]
     return time.perf_counter() - t0, outs
 
 
-def bench(quick: bool = False) -> Iterator[Tuple[str, str, str]]:
+def bench(quick: bool = False,
+          trace_path: str = None) -> Iterator[Tuple[str, str, str]]:
     import jax
     import numpy as np
     from repro.configs import get_config
     from repro.models import lm
+    from repro.obs import Observability
     from repro.serve.engine import ServeEngine
 
     cfg = get_config("stablelm-1.6b").smoke()
@@ -74,6 +84,7 @@ def bench(quick: bool = False) -> Iterator[Tuple[str, str, str]]:
     cycles_target = 16 if quick else 24
     geo = dict(max_batch=8, kv_blocks=224, block_size=8, prefill_chunk=16)
 
+    obs = Observability()
     stage_times = None
     for chunk in chunks:
         max_new = cycles_target * chunk
@@ -84,7 +95,7 @@ def bench(quick: bool = False) -> Iterator[Tuple[str, str, str]]:
         # two modes on the SAME compiled chunk/prefill programs
         reps = 3
         with ServeEngine(cfg, params, decode_chunk=chunk,
-                         async_decode=False, **geo) as eng:
+                         async_decode=False, obs=obs, **geo) as eng:
             samples = {"sync": [], "async": []}
             for mode in ("sync", "async"):
                 # per-mode warm-up: compiles the chunk/prefill programs AND
@@ -98,15 +109,21 @@ def bench(quick: bool = False) -> Iterator[Tuple[str, str, str]]:
                 for mode in ("sync", "async"):
                     eng.async_decode = mode == "async"
                     dt, _ = _run(eng, prompts, max_new)
-                    o = dict(eng.overlap_stats)
-                    cyc = max(1, o["cycles"])
+                    # per-cycle breakdown straight from the registry: the
+                    # engine records one histogram sample per decode cycle
+                    # exactly where overlap_stats accumulates, so the means
+                    # below equal the old sum/cycles arithmetic
+                    snap = obs.metrics.snapshot()
                     samples[mode].append({
                         "tok_per_s": total_tokens / dt,
-                        "min_chunk_ms": 1e3 * o["min_chunk_s"],
-                        "cycle_ms": 1e3 * o["total_s"] / cyc,
-                        "disp_ms": 1e3 * o["dispatch_s"] / cyc,
-                        "wait_ms": 1e3 * o["wait_s"] / cyc,
-                        "book_ms": 1e3 * o["book_s"] / cyc,
+                        # sync-mode cycles only record engine.chunk_s; its
+                        # min is the device-time calibration sample
+                        "min_chunk_ms": 1e3 * snap["engine.chunk_s"]["min"],
+                        "cycle_ms": 1e3 * snap["engine.cycle_s"]["mean"],
+                        "disp_ms": 1e3 * snap["engine.dispatch_s"]["mean"],
+                        "wait_ms":
+                            1e3 * snap["engine.chunk_sync_s"]["mean"],
+                        "book_ms": 1e3 * snap["engine.book_s"]["mean"],
                     })
             res = {mode: {k: float(np.median([s[k] for s in runs]))
                           for k in runs[0]}
@@ -156,6 +173,11 @@ def bench(quick: bool = False) -> Iterator[Tuple[str, str, str]]:
         yield ("overlap_async_stage_times_s",
                "|".join(f"{k}={v:.2f}" for k, v in stage_times.items()),
                "pipeline_stage_wall_time")
+    if trace_path:
+        # spans of the LAST timed repetition (the registry/tracer reset
+        # between reps keeps the artifact one clean run)
+        obs.export(trace_path)
+        yield ("overlap_trace_spans", str(len(obs.tracer)), trace_path)
 
     # parity: async greedy tokens bit-identical to the synchronous engine
     # on the gather oracle, chunked prefill included (one long prompt)
@@ -181,6 +203,10 @@ if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write the last timed repetition's Chrome "
+                         "trace-event JSON here")
     args = ap.parse_args()
-    for name, val, derived in bench(quick=args.quick):
+    for name, val, derived in bench(quick=args.quick,
+                                    trace_path=args.trace):
         print(f"{name},{val},{derived}")

@@ -1,0 +1,101 @@
+# Observability overhead gate (ROADMAP production-serve goal, not a paper
+# figure): instrumentation must be effectively free.
+"""Serve throughput with observability ON vs OFF, gated to a budget.
+
+The serve engine's instrumentation discipline (``repro.obs``: cached
+metric handles, ring-buffer span appends, single ``None`` checks on the
+disabled path) only holds if it is *measured*: this gate drives ONE
+engine over an identical saturated decode workload with observability
+enabled and disabled and asserts the enabled-path tokens/sec stays within
+a budget of the disabled path.
+
+Methodology: repetitions are INTERLEAVED off/on and each mode is scored
+by its BEST repetition (minimum wall time). Instrumentation cost is
+deterministic work on every cycle, so it survives into the cleanest
+repetition; CPU-quota throttling on a shared container does not (run-to-
+run throughput here swings ±15%, far more than the budget — a mean or
+median gate would be pure noise). Both modes run the SAME compiled
+programs (``ServeEngine.set_obs`` rebinding at idle — no second jit
+warm-up that would dwarf the effect being measured).
+
+Budget: the ``REPRO_OBS_GATE_BUDGET`` env var (fraction, default 0.02 —
+the local 2% budget; CI passes 0.05 for shared-runner slack).
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Iterator, Tuple
+
+
+def _run(eng, prompts, max_new: int) -> float:
+    for k in eng.stats:
+        eng.stats[k] = 0
+    if eng.obs is not None:
+        eng.obs.reset()
+    t0 = time.perf_counter()
+    reqs = [eng.submit(p, max_new) for p in prompts]
+    for r in reqs:
+        eng.result(r, timeout=600.0)
+    return time.perf_counter() - t0
+
+
+def bench(quick: bool = False) -> Iterator[Tuple[str, str, str]]:
+    import jax
+    import numpy as np
+    from repro.configs import get_config
+    from repro.models import lm
+    from repro.obs import Observability
+    from repro.serve.engine import ServeEngine
+
+    budget = float(os.environ.get("REPRO_OBS_GATE_BUDGET", "0.02"))
+    cfg = get_config("stablelm-1.6b").smoke()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    chunk = 4
+    n_req = 6
+    max_new = 64 if quick else 128
+    reps = 5 if quick else 8
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size, size=8).astype(np.int32)
+               for _ in range(n_req)]
+    total_tokens = n_req * max_new
+    obs = Observability()
+
+    samples = {"off": [], "on": []}
+    with ServeEngine(cfg, params, decode_chunk=chunk, max_batch=8,
+                     kv_blocks=224, block_size=8, prefill_chunk=16,
+                     max_seq_len=-(-(8 + max_new) // 8) * 8) as eng:
+        # warm-up compiles every program both modes will run (identical:
+        # obs never changes compiled shapes)
+        _run(eng, prompts, max(2, chunk + 1))
+        for _ in range(reps):
+            for mode in ("off", "on"):
+                eng.set_obs(obs if mode == "on" else None)
+                dt = _run(eng, prompts, max_new)
+                samples[mode].append(total_tokens / dt)
+        eng.set_obs(None)
+    # best-of (min wall time) per mode: deterministic per-cycle
+    # instrumentation work survives into the cleanest repetition,
+    # container contention does not
+    off = float(np.max(samples["off"]))
+    on = float(np.max(samples["on"]))
+    ratio = on / off
+    yield ("obs_gate_off_tok_per_s", f"{off:.1f}", f"best_of_{reps}")
+    yield ("obs_gate_on_tok_per_s", f"{on:.1f}", f"{ratio:.3f}x_off")
+    yield ("obs_gate_overhead_frac", f"{max(0.0, 1.0 - ratio):.4f}",
+           f"budget_{budget:.2f}")
+    if ratio < 1.0 - budget:
+        raise AssertionError(
+            f"observability overhead gate failed: enabled path at "
+            f"{on:.1f} tok/s vs disabled {off:.1f} tok/s "
+            f"({(1.0 - ratio) * 100:.1f}% > {budget * 100:.0f}% budget)")
+    yield ("obs_gate", "ok", f"within_{budget * 100:.0f}pct")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    for name, val, derived in bench(quick=args.quick):
+        print(f"{name},{val},{derived}")

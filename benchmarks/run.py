@@ -21,24 +21,42 @@ paged_decode — gather-free paged decode read path vs the gather oracle
 decode_overlap — async decode lookahead vs the synchronous decode loop:
           per-cycle dispatch/sync/bookkeeping wall-time breakdown and
           host-gap fraction across decode-chunk sizes; honors --quick
+obs_gate — observability overhead gate: serve tok/s with the obs stack
+          enabled must stay within REPRO_OBS_GATE_BUDGET (default 2%)
+          of disabled; honors --quick
 
 Each completed suite drops ``BENCH_<suite>.json`` into --bench-dir
-(default: CWD): the run config, every emitted row, and the well-known
+(default: CWD): the run config, every emitted row, the well-known
 metrics (``tok_per_s`` / ``p50_ms`` / ``p99_ms`` where a suite reports
-them) — the machine-readable perf trajectory that used to exist only as
-stdout CSV.
+them), and provenance (git sha + ISO-8601 UTC timestamp) — the
+machine-readable perf trajectory that used to exist only as stdout CSV.
+The serve and decode_overlap suites also write their run's Chrome
+trace-event JSON (``TRACE_<suite>.json``, Perfetto-loadable) alongside.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import subprocess
 import sys
 import time
 import traceback
+from datetime import datetime, timezone
 
 #: row-name suffix -> trajectory metric key (suite-agnostic extraction)
 _METRIC_SUFFIXES = ("tok_per_s", "p50_ms", "p99_ms")
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip()
+    except OSError:
+        return ""
 
 
 def _write_trajectory(bench_dir: str, suite: str, config: dict,
@@ -54,7 +72,9 @@ def _write_trajectory(bench_dir: str, suite: str, config: dict,
     payload = {
         "suite": suite,
         "config": config,
+        "git_sha": _git_sha(),
         "timestamp": time.time(),
+        "timestamp_iso": datetime.now(timezone.utc).isoformat(),
         "elapsed_s": round(elapsed_s, 3),
         "rows": [{"name": n, "value": v, "derived": d} for n, v, d in rows],
         "metrics": metrics,
@@ -83,8 +103,15 @@ def main() -> None:
     from . import (decode_overlap_microbench, fig9_micro_random_dag,
                    fig11_corun_throughput, fig13_lsdnn,
                    fig17_conditional_memory, fig21_incremental_timing,
-                   paged_decode_microbench, pipeline_throughput,
-                   roofline_report, serve_continuous, table2_task_overhead)
+                   obs_overhead_gate, paged_decode_microbench,
+                   pipeline_throughput, roofline_report, serve_continuous,
+                   table2_task_overhead)
+
+    # trace artifacts land next to the BENCH_*.json they belong to
+    os.makedirs(args.bench_dir, exist_ok=True)
+
+    def _trace(suite: str) -> str:
+        return os.path.join(args.bench_dir, f"TRACE_{suite}.json")
 
     suites = {
         "table2": lambda: table2_task_overhead.bench(200_000),
@@ -96,16 +123,21 @@ def main() -> None:
         "roofline": roofline_report.bench,
         "pipeline": lambda: pipeline_throughput.bench(quick=args.quick),
         "serve": lambda: serve_continuous.bench(
-            quick=args.quick, prompt_dist=args.prompt_dist),
+            quick=args.quick, prompt_dist=args.prompt_dist,
+            trace_path=_trace("serve")),
         "paged_decode":
             lambda: paged_decode_microbench.bench(quick=args.quick),
         "decode_overlap":
-            lambda: decode_overlap_microbench.bench(quick=args.quick),
+            lambda: decode_overlap_microbench.bench(
+                quick=args.quick, trace_path=_trace("decode_overlap")),
+        "obs_gate": lambda: obs_overhead_gate.bench(quick=args.quick),
     }
     config = {"quick": args.quick, "only": args.only,
               "prompt_dist": args.prompt_dist,
               "paged_impl_env": os.environ.get("REPRO_PAGED_IMPL", ""),
-              "async_decode_env": os.environ.get("REPRO_ASYNC_DECODE", "")}
+              "async_decode_env": os.environ.get("REPRO_ASYNC_DECODE", ""),
+              "obs_gate_budget_env":
+                  os.environ.get("REPRO_OBS_GATE_BUDGET", "")}
     only = [s for s in args.only.split(",") if s]
     failures = 0
     for name, fn in suites.items():

@@ -21,10 +21,18 @@ Prompt-length distributions (``--prompt-dist``):
   it has not earned yet, and mixed lengths admit together (no buckets).
 
 Reported per mode: wall-clock tokens/sec, p50/p99 request latency
-(submit -> result) and — continuous only — p50/p99 ADMISSION latency
-(nominal arrival -> first admission into the running batch: the queueing
-delay the prompt-only block budget is meant to shrink). The derived column
-of the continuous rows shows the speedup over the per-call baseline.
+(nominal arrival -> result) and — continuous only — p50/p99 ADMISSION
+latency (nominal arrival -> first admission into the running batch: the
+queueing delay the prompt-only block budget is meant to shrink) plus
+p50/p99 TTFT. The derived column of the continuous rows shows the speedup
+over the per-call baseline.
+
+The continuous engine runs with a live :class:`repro.obs.Observability`:
+every percentile row is read back from the metrics registry (exact
+nearest-rank percentiles — the bench records each request's latency into
+a registry histogram rather than a private list, and TTFT comes from the
+engine's own ``serve.ttft_s`` instrumentation), and ``trace_path`` writes
+the run's Chrome trace-event JSON artifact alongside ``BENCH_*.json``.
 """
 from __future__ import annotations
 
@@ -64,15 +72,18 @@ def _percentiles(lat: List[float]) -> Tuple[float, float]:
 
 def bench(quick: bool = False,
           impl: str = None,
-          prompt_dist: str = "choice") -> Iterator[Tuple[str, str, str]]:
+          prompt_dist: str = "choice",
+          trace_path: str = None) -> Iterator[Tuple[str, str, str]]:
     """impl picks the continuous engine's paged read path ("pallas" /
     "xla" / "gather"); None = engine default (REPRO_PAGED_IMPL env or
     backend-based, see repro.kernels.ops.default_paged_impl).
-    prompt_dist: "choice" (fixed lengths) or "lognormal" (heavy tail)."""
+    prompt_dist: "choice" (fixed lengths) or "lognormal" (heavy tail).
+    trace_path: write the continuous run's Chrome trace-event JSON here."""
     import jax
     import numpy as np
     from repro.configs import get_config
     from repro.models import lm
+    from repro.obs import Observability
     from repro.serve.engine import ServeEngine
 
     if prompt_dist not in PROMPT_DISTS:
@@ -104,10 +115,11 @@ def bench(quick: bool = False,
     prefill_chunk = 2 * bs
 
     # ---------------------------------------------------------- continuous
+    obs = Observability()
     with ServeEngine(cfg, params, decode_chunk=chunk, block_size=bs,
                      max_seq_len=max_seq, kv_blocks=128,
                      prefill_chunk=prefill_chunk,
-                     paged_impl=impl) as eng:
+                     paged_impl=impl, obs=obs) as eng:
         read_impl = eng.paged_impl
         # warm-up: chunked prefill keys compiled shapes on the pow2-rounded
         # window size, so one request per distinct pow2 bucket (not per
@@ -123,6 +135,14 @@ def bench(quick: bool = False,
         eng.generate([p for _, p, _ in trace], max_new=chunk + 1)
         for k in eng.stats:
             eng.stats[k] = 0
+        # drop warm-up spans/counts; metric handles the engine cached at
+        # bind time stay valid (in-place registry reset)
+        obs.reset()
+        # request latencies go into registry histograms too, so every
+        # percentile row below reads back from ONE source (exact
+        # nearest-rank percentiles at these request counts)
+        h_lat = obs.metrics.histogram("bench.request_latency_s")
+        h_adm = obs.metrics.histogram("bench.admission_latency_s")
         t0 = time.perf_counter()
         reqs = []
         for at, prompt, mn in trace:
@@ -130,19 +150,21 @@ def bench(quick: bool = False,
             if now < at:
                 time.sleep(at - now)
             reqs.append((at, eng.submit(prompt, mn)))
-        lat, alat = [], []
         for at, r in reqs:
             eng.result(r, timeout=600.0)
             # latency from NOMINAL arrival to completion (includes any
             # admission queueing — same clock the baseline is held to)
-            lat.append(r.finished_at - t0 - at)
+            h_lat.record(r.finished_at - t0 - at)
             # admission latency: nominal arrival -> first admission (the
             # wait the prompt-only block budget is meant to shrink)
-            alat.append(max(0.0, r.admitted_at - t0 - at))
+            h_adm.record(max(0.0, r.admitted_at - t0 - at))
         cont_dt = time.perf_counter() - t0
-        cont_p50, cont_p99 = _percentiles(lat)
-        adm_p50, adm_p99 = _percentiles(alat)
+        cont_p50, cont_p99 = h_lat.percentile(50), h_lat.percentile(99)
+        adm_p50, adm_p99 = h_adm.percentile(50), h_adm.percentile(99)
+        ttft = obs.metrics.get("serve.ttft_s").summary()
         stats = dict(eng.stats)
+        if trace_path:
+            obs.export(trace_path)
 
     # ------------------------------------------------------------ per-call
     with ServeEngine(cfg, params, decode_chunk=chunk) as base:
@@ -176,6 +198,9 @@ def bench(quick: bool = False,
            f"{base_p99/max(cont_p99,1e-9):.2f}x_per_call")
     yield ("serve_admission_p50_ms", f"{adm_p50*1e3:.0f}", "")
     yield ("serve_admission_p99_ms", f"{adm_p99*1e3:.0f}", "")
+    yield ("serve_ttft_p50_ms", f"{ttft['p50']*1e3:.0f}",
+           f"count_{ttft['count']}")
+    yield ("serve_ttft_p99_ms", f"{ttft['p99']*1e3:.0f}", "")
     yield ("serve_percall_tok_per_s", f"{total_tokens/base_dt:.1f}", "")
     yield ("serve_percall_p50_ms", f"{base_p50*1e3:.0f}", "")
     yield ("serve_percall_p99_ms", f"{base_p99*1e3:.0f}", "")
@@ -186,6 +211,8 @@ def bench(quick: bool = False,
     yield ("serve_continuous_growth", str(stats["grown_blocks"]),
            f"{stats['preempted']}_preemptions_"
            f"{stats['prefill_windows']}_windows")
+    if trace_path:
+        yield ("serve_trace_spans", str(len(obs.tracer)), trace_path)
 
 
 if __name__ == "__main__":
@@ -199,7 +226,11 @@ if __name__ == "__main__":
                     choices=PROMPT_DISTS,
                     help="prompt-length distribution of the trace "
                          "(lognormal = heavy tail)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write the continuous run's Chrome trace-event "
+                         "JSON here")
     args = ap.parse_args()
     for name, val, derived in bench(quick=args.quick, impl=args.impl,
-                                    prompt_dist=args.prompt_dist):
+                                    prompt_dist=args.prompt_dist,
+                                    trace_path=args.trace):
         print(f"{name},{val},{derived}")

@@ -10,6 +10,16 @@ comparison.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b \
         --preset smoke --batch 4 --prompt-len 32 --max-new 32 --stagger 0.05
+
+Observability (:mod:`repro.obs`): ``--stats-interval N`` prints a one-line
+runtime summary every N seconds (tok/s, queue depth, resident rows, pool
+occupancy, preempt/stall counts, TTFT p50); ``--trace PATH`` writes a
+Chrome trace-event JSON of the run — open it at https://ui.perfetto.dev
+or ``chrome://tracing`` to see every request's lifecycle on its slot
+track next to the engine-cycle and pipeline-line tracks:
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --stats-interval 1 --trace out.json
 """
 from __future__ import annotations
 
@@ -21,12 +31,15 @@ import numpy as np
 
 from ..configs import get_config
 from ..models import lm
+from ..obs import Observability, StatsLogger
 from ..serve.engine import ServeEngine
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default="stablelm-1.6b",
+                    help="model architecture (default: the quick smoke "
+                         "workload's stablelm-1.6b)")
     ap.add_argument("--preset", default="smoke", choices=["smoke", "full"])
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -49,6 +62,13 @@ def main() -> None:
                     help="use the generate() batch-call shim instead of "
                          "submit/result")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--stats-interval", type=float, default=None,
+                    help="print a one-line runtime stats summary every N "
+                         "seconds (implies observability on)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON (Perfetto/"
+                         "chrome://tracing) of the run (implies "
+                         "observability on)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -63,11 +83,20 @@ def main() -> None:
                .astype(np.int32) for _ in range(args.batch)]
     total_new = args.batch * args.max_new
 
+    obs = Observability() \
+        if (args.stats_interval is not None or args.trace) else None
+    logger = None
+    if args.stats_interval is not None:
+        logger = StatsLogger(obs.metrics, interval=args.stats_interval)
+
     with ServeEngine(cfg, params, decode_chunk=args.decode_chunk,
                      prefill_chunk=args.prefill_chunk,
                      kv_blocks=args.kv_blocks,
                      block_size=args.block_size,
-                     async_decode=args.async_decode) as eng:
+                     async_decode=args.async_decode,
+                     obs=obs) as eng:
+        if logger is not None:
+            logger.start()
         t0 = time.time()
         if args.per_call:
             # the retired per-call grouped pipeline, kept as the baseline
@@ -87,6 +116,12 @@ def main() -> None:
               f"mode={'per-call' if args.per_call else 'continuous'})")
         print("engine stats:", eng.stats)
         print("sample:", outs[0][:16].tolist())
+        if logger is not None:
+            logger.stop()
+    if args.trace:
+        obs.export(args.trace)
+        print(f"trace written to {args.trace} "
+              f"({len(obs.tracer)} spans; open at https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

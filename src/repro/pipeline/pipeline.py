@@ -186,6 +186,11 @@ class Pipeline:
         # slot runs exclusively (its join counter serialises visits), so
         # plain int accumulation is race-free
         self._stage_ns = [[0] * len(pipes) for _ in range(num_lines)]
+        # optional repro.obs.Tracer: when set, every pipe-body interval is
+        # also recorded as a span on a per-line track ("line0", "line1",
+        # ...) — the stage_times aggregate, promoted to a timeline. Plain
+        # attribute so callers can attach/detach between runs.
+        self.tracer = None
         self._num_tokens = 0
         self._num_deferrals = AtomicInt(0)
         self._stopped = False
@@ -303,7 +308,11 @@ class Pipeline:
                 while True:
                     _t = time.perf_counter_ns()
                     self._invoke(pipe, pf)
-                    self._stage_ns[l][s] += time.perf_counter_ns() - _t
+                    _t2 = time.perf_counter_ns()
+                    self._stage_ns[l][s] += _t2 - _t
+                    if self.tracer is not None:
+                        self.tracer.add(pipe.name, f"line{l}",
+                                        _t / 1e9, _t2 / 1e9)
                     if pf._stopped:
                         self._stopped = True
                         return ()  # break both chains: in-flight drain
@@ -333,7 +342,11 @@ class Pipeline:
             else:
                 _t = time.perf_counter_ns()
                 self._invoke(pipe, pf)
-                self._stage_ns[l][s] += time.perf_counter_ns() - _t
+                _t2 = time.perf_counter_ns()
+                self._stage_ns[l][s] += _t2 - _t
+                if self.tracer is not None:
+                    self.tracer.add(pipe.name, f"line{l}",
+                                    _t / 1e9, _t2 / 1e9)
             if s == S - 1:
                 # token fully done: wake a deferred token waiting on it.
                 # Done BEFORE this task's pending-tally so the topology

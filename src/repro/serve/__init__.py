@@ -89,6 +89,40 @@ implementations, chosen by ``ServeEngine(paged_impl=...)`` (or the
   per layer per token regardless of true length. Kept as the reference
   oracle (``tests/test_paged_attention.py`` checks both gather-free paths
   against it).
+
+Observability
+-------------
+``ServeEngine(obs=repro.obs.Observability())`` — or ``REPRO_OBS=1`` in the
+environment — turns on the serve-layer observability stack
+(:mod:`repro.obs`; see ``docs/observability.md`` for a quick-start):
+
+* **Spans** (ring-buffer :class:`repro.obs.Tracer`): each decode SLOT is a
+  track carrying its seated request's lifecycle — ``queued`` → ``admitted``
+  → ``prefill``/``prefill_window`` → ``decode`` → ``stalled`` — plus
+  ``retired``/``preempted`` instants; a preempted request re-enters with a
+  fresh queued/admitted chain, so the track replays every re-entry. The
+  ``"engine"`` track carries per-cycle phases (``admission``, ``growth``,
+  ``cycle`` with its ``dispatch``/``sync``/``bookkeeping`` split), and
+  ``lineN`` tracks carry the raw pipeline pipe-body intervals
+  (``Pipeline.stage_times`` promoted to a timeline).
+* **Metrics** (:class:`repro.obs.MetricsRegistry`): counters
+  ``serve.tokens_out`` / ``serve.requests.{admitted,retired,preempted,
+  stalled}`` / ``pool.grown_blocks``; gauges ``serve.queue_depth`` /
+  ``serve.resident_rows`` / ``pool.blocks_{free,used,deferred}``;
+  histograms ``serve.ttft_s`` / ``serve.queue_wait_s`` /
+  ``engine.{cycle,dispatch,chunk_sync,book,gap,chunk}_s``.
+* **Export**: ``obs.export(path)`` writes Chrome trace-event JSON that
+  loads directly in Perfetto (https://ui.perfetto.dev) or
+  ``chrome://tracing``; ``repro.launch.serve --stats-interval N --trace
+  out.json`` prints a one-line stats summary per interval and writes the
+  artifact on exit. Requests themselves carry lifecycle timestamps
+  (:attr:`ServeRequest.submitted_at` / ``admitted_at`` /
+  ``first_token_at`` / ``finished_at`` and the derived ``ttft`` /
+  ``queue_wait``).
+
+A ``None`` obs handle (the default) keeps every hot path to a single
+attribute check; ``benchmarks/obs_overhead_gate.py`` enforces the
+enabled-path budget (2% local, 5% CI).
 """
 from .engine import ServeEngine
 from .kvcache import BlockPool, init_kv_pool

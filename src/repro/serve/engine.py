@@ -131,6 +131,8 @@ from ..configs.base import ModelConfig
 from ..core import ACCEL, HOST, Executor
 from ..distributed.sharding import ShardCtx, use_shard_ctx
 from ..models import lm
+from ..obs import TRACK_ENGINE
+from ..obs import from_env as _obs_from_env
 from ..pipeline import DataPipe, DataPipeline, PipeType
 from .kvcache import (BlockPool, extend_block_tables, init_kv_pool,
                       scatter_prefill_rows, set_carry_rows, set_table_rows)
@@ -182,6 +184,14 @@ class ServeEngine:
     record_stages:
         keep an in-memory (stage, cycle-token, info, t) event log — the
         observer hook the overlap tests read.
+    obs:
+        a :class:`repro.obs.Observability` (tracer + metrics registry).
+        The engine records request lifecycle spans on per-slot tracks,
+        engine-cycle phase spans on the ``"engine"`` track, and the
+        counters/gauges/histograms listed in :mod:`repro.serve`'s
+        observability section. None resolves via the ``REPRO_OBS`` env
+        var (default off — the disabled path costs attribute checks
+        only). Rebindable at idle via :meth:`set_obs`.
     """
 
     def __init__(self, cfg: ModelConfig, params,
@@ -197,7 +207,8 @@ class ServeEngine:
                  max_seq_len: Optional[int] = None,
                  paged_impl: Optional[str] = None,
                  async_decode: Optional[bool] = None,
-                 record_stages: bool = False):
+                 record_stages: bool = False,
+                 obs=None):
         self.cfg = cfg
         self.params = params
         self.ctx = ctx or ShardCtx(mesh=None)
@@ -341,6 +352,88 @@ class ServeEngine:
                                          static_argnames=("n",),
                                          donate_argnums=(1,))
 
+        # observability: one open phase span per seated slot (name, t0);
+        # None obs = fully disabled (hot paths guard on self._tr/_mh)
+        self._slot_span: List[Optional[tuple]] = [None] * B
+        self.set_obs(obs if obs is not None else _obs_from_env())
+
+    # ---------------------------------------------------------- observability
+    def set_obs(self, obs) -> None:
+        """Attach (or detach, with None) a :class:`repro.obs.Observability`.
+
+        Binding caches every metric handle once (``self._mh``) and hands the
+        metrics registry to the scheduler and block pool and the tracer to
+        the resident pipeline, so an instrumented event costs one cached-
+        handle call and a disabled one a single ``None`` check. Rebindable
+        while the engine is idle — the overhead-gate benchmark toggles obs
+        on ONE engine instead of paying a second jit warm-up.
+        """
+        self.obs = obs
+        self._tr = obs.tracer if obs is not None else None
+        metrics = obs.metrics if obs is not None else None
+        self._scheduler.set_metrics(metrics)
+        if self.paged:
+            self._pool.set_metrics(metrics)
+        if self._pipeline is not None:
+            self._pipeline.tracer = self._tr
+        if metrics is None:
+            self._mh = None
+            return
+        self._mh = {
+            "tokens_out": metrics.counter("serve.tokens_out"),
+            "admitted": metrics.counter("serve.requests.admitted"),
+            "retired": metrics.counter("serve.requests.retired"),
+            "preempted": metrics.counter("serve.requests.preempted"),
+            "stalled": metrics.counter("serve.requests.stalled"),
+            "grown_blocks": metrics.counter("pool.grown_blocks"),
+            "resident": metrics.gauge("serve.resident_rows"),
+            "ttft": metrics.histogram("serve.ttft_s"),
+            "qwait": metrics.histogram("serve.queue_wait_s"),
+            "cycle": metrics.histogram("engine.cycle_s"),
+            "dispatch": metrics.histogram("engine.dispatch_s"),
+            "sync": metrics.histogram("engine.chunk_sync_s"),
+            "book": metrics.histogram("engine.book_s"),
+            "gap": metrics.histogram("engine.gap_s"),
+            "chunk": metrics.histogram("engine.chunk_s"),
+        }
+
+    def _phase_begin(self, slot: int, name: str, t: float) -> None:
+        self._slot_span[slot] = (name, t)
+
+    def _phase_end(self, slot: int, t: float, req=None) -> None:
+        cur = self._slot_span[slot]
+        self._slot_span[slot] = None
+        if cur is not None and self._tr is not None:
+            args = {"req": req.id} if req is not None else None
+            self._tr.add(cur[0], f"slot{slot}", cur[1], t, args)
+
+    def _note_seated(self, slot: int, req, now: float) -> None:
+        """Retroactive lifecycle spans, emitted at seat time (the slot a
+        request will occupy is unknown until the decode-stage merge):
+        ``queued`` [enqueue -> admission pop], ``admitted`` [pop -> merge],
+        then the open ``prefill``/``decode`` phase span. A preempted
+        request re-enters here on its NEXT admission, so its track shows
+        every queued/admitted/decode re-entry."""
+        tr = self._tr
+        track = f"slot{slot}"
+        adm = req.last_admitted_at or now
+        if req.queued_since is not None:
+            tr.add("queued", track, req.queued_since, adm,
+                   {"req": req.id, "preempted": req.preempted_count})
+        tr.add("admitted", track, adm, now, {"req": req.id})
+        self._phase_begin(slot, self._slot_phase[slot], now)
+
+    def _note_first_token(self, req, now: float) -> None:
+        if req.first_token_at is None:
+            req.first_token_at = now
+            if self._mh is not None and req.submitted_at is not None:
+                self._mh["ttft"].record(now - req.submitted_at)
+
+    def _note_resident(self) -> None:
+        if self._mh is not None:
+            self._mh["resident"].set(
+                sum(r is not None for r in self._slot_req))
+
     # ---------------------------------------------------------- compiled fns
     def _prefill_impl(self, params, tokens, last_positions, max_len: int):
         with use_shard_ctx(self.ctx):
@@ -415,6 +508,8 @@ class ServeEngine:
                 DataPipe(PipeType.PARALLEL, self._st_complete,
                          name="complete"),
                 name="serve-continuous")
+            # promote stage_times into per-line spans when tracing is on
+            self._pipeline.tracer = self._tr
         return self._pipeline
 
     def close(self, timeout: float = 300.0) -> None:
@@ -459,6 +554,7 @@ class ServeEngine:
             return list(self._stage_log or [])
 
     def _st_admit(self, pf):
+        t_adm = time.perf_counter()
         with self._state_lock:
             occupied = any(r is not None for r in self._slot_req)
             reserved = self._slots_reserved
@@ -515,11 +611,18 @@ class ServeEngine:
                 r.state = "prefilling"
                 if r.admitted_at is None:
                     r.admitted_at = now
+                    if self._mh is not None and r.submitted_at is not None:
+                        self._mh["qwait"].record(now - r.submitted_at)
             with self._state_lock:
                 self._slots_reserved += len(group)
                 self._inflight.update(r for r, _ in group)
                 self._cycle_tokens.add(pf.token)
                 self.stats["admitted"] += len(group)
+            if self._mh is not None:
+                self._mh["admitted"].inc(len(group))
+            if self._tr is not None:
+                self._tr.add("admission", TRACK_ENGINE, t_adm, now,
+                             {"reqs": [r.id for r, _ in group]})
             self._log("admit", pf.token, [r.id for r, _ in group])
             return ("admit", group)
         if waiting and deps:
@@ -539,6 +642,9 @@ class ServeEngine:
         with self._state_lock:
             self._cycle_tokens.add(pf.token)
             self.stats["pump_cycles"] += 1
+        if self._tr is not None:
+            self._tr.add("admission", TRACK_ENGINE, t_adm,
+                         time.perf_counter(), {"pump": True})
         self._log("pump", pf.token, None)
         return ("pump", None)
 
@@ -620,6 +726,7 @@ class ServeEngine:
         group, C0, ck, cv, first = payload
         first = np.asarray(first)
         nb0 = self._pool.blocks_for(C0)
+        now = time.perf_counter()
         rows_idx, rows_tab = [], []
         c_len, c_last, c_rem = [], [], []
         for i, (req, blocks) in enumerate(group):
@@ -643,10 +750,13 @@ class ServeEngine:
                 self._rem[slot] = req.max_new - 1
                 self._slot_out[slot].append(int(first[i]))
                 req.state = "decoding"
+                self._note_first_token(req, now)
             else:
                 self._slot_phase[slot] = "prefill"
                 self._last[slot] = 0
                 self._rem[slot] = 0   # masked out of decode until prefilled
+            if self._tr is not None:
+                self._note_seated(slot, req, now)
             rows_idx.append(slot)
             rows_tab.append(self._tables[slot].copy())
             c_len.append(int(self._lengths[slot]))
@@ -678,11 +788,13 @@ class ServeEngine:
             row = blocks[:nb0]
             blocks2d[i, :len(row)] = row
         self._pkv = self._scatter(self._pkv, jnp.asarray(blocks2d), ck, cv)
+        self._note_resident()
 
     def _merge_group_slots(self, payload) -> None:
         """Seat an admitted SSM/hybrid group: scatter each member's
         prefilled recurrent state (and zamba2 shared-KV span) into its
         slot of the fixed-slot state pool."""
+        now = time.perf_counter()
         rows_idx, c_len, c_last, c_rem = [], [], [], []
         for req, cache, first in payload:
             with self._state_lock:
@@ -697,6 +809,9 @@ class ServeEngine:
             self._last[slot] = first
             self._rem[slot] = req.max_new - 1
             req.state = "decoding"
+            self._note_first_token(req, now)
+            if self._tr is not None:
+                self._note_seated(slot, req, now)
             rows_idx.append(slot)
             c_len.append(req.prompt_len)
             c_last.append(first)
@@ -704,6 +819,7 @@ class ServeEngine:
         if self.async_decode:
             self._scatter_carry(rows_idx, c_len, c_last, c_rem,
                                 pad_to=self._scheduler.max_admit)
+        self._note_resident()
 
     def _write_slot_state(self, slot: int, cache, plen: int) -> None:
         cfg = self.cfg
@@ -772,7 +888,8 @@ class ServeEngine:
         with self._state_lock:
             self.stats["prefill_windows"] += 1
         return {"first": first, "rows": pref, "k": ks, "token": pf.token,
-                "gen": {b: self._slot_gen[b] for b in pref}}
+                "gen": {b: self._slot_gen[b] for b in pref},
+                "t_disp": time.perf_counter()}
 
     def _finish_window(self, pend: Dict[str, Any]) -> None:
         """Complete a dispatched prefill window: advance per-row prompt
@@ -783,6 +900,7 @@ class ServeEngine:
         ready and the ``np.asarray`` below does not stall the loop — and
         scatters the transitions onto the device carry."""
         first = np.asarray(pend["first"])
+        now = time.perf_counter()
         t_rows, t_len, t_last, t_rem = [], [], [], []
         done = []
         for b in pend["rows"]:
@@ -793,6 +911,11 @@ class ServeEngine:
             self._pref_pos[b] += pend["k"][b]
             self._lengths[b] = self._pref_pos[b]
             done.append(b)
+            if self._tr is not None:
+                self._tr.add("prefill_window", f"slot{b}",
+                             pend["t_disp"], now,
+                             {"req": self._slot_req[b].id,
+                              "pos": int(self._pref_pos[b])})
             if self._pref_pos[b] >= len(prompt):
                 req = self._slot_req[b]
                 self._slot_phase[b] = "decode"
@@ -800,6 +923,10 @@ class ServeEngine:
                 self._rem[b] = req.max_new - 1
                 self._slot_out[b].append(int(first[b]))
                 req.state = "decoding"
+                self._note_first_token(req, now)
+                if self._tr is not None:
+                    self._phase_end(b, now, req)     # close "prefill"
+                    self._phase_begin(b, "decode", now)
                 self._wp_valid[b] = False
                 t_rows.append(b)
                 t_len.append(int(self._lengths[b]))
@@ -862,6 +989,8 @@ class ServeEngine:
                     grow_ids.extend(ids)
                     with self._state_lock:
                         self.stats["grown_blocks"] += len(ids)
+                    if self._mh is not None:
+                        self._mh["grown_blocks"].inc(len(ids))
                     covered = True
                     break
                 if self.async_decode and self._pool.num_deferred > 0:
@@ -884,6 +1013,10 @@ class ServeEngine:
                     self._stall_rem[b] = 0
                     stall_rows.append(b)
                     stall_vals.append(int(self._rem[b]))
+                    if self._tr is not None:
+                        _t = time.perf_counter()
+                        self._phase_end(b, _t, self._slot_req[b])  # stalled
+                        self._phase_begin(b, "decode", _t)
                     self._log("resume", pf.token, b)
             elif self._rem[b] > 0:
                 # newly stalled: mask the row out of the next dispatch
@@ -893,6 +1026,12 @@ class ServeEngine:
                 stall_vals.append(0)
                 with self._state_lock:
                     self.stats["stalls"] += 1
+                if self._mh is not None:
+                    self._mh["stalled"].inc()
+                if self._tr is not None:
+                    _t = time.perf_counter()
+                    self._phase_end(b, _t, self._slot_req[b])  # close decode
+                    self._phase_begin(b, "stalled", _t)
                 self._log("stall", pf.token, b)
         if stall_rows and self.async_decode:
             # fixed-shape rem-only carry scatter (lengths/last unchanged —
@@ -953,6 +1092,13 @@ class ServeEngine:
             jnp.zeros((1, self._tables.shape[1]), jnp.int32))
         if self.async_decode:
             self._scatter_carry([slot], [0], [0], [0], pad_to=1)
+        if self._mh is not None:
+            self._mh["preempted"].inc()
+            self._note_resident()
+        if self._tr is not None:
+            _t = time.perf_counter()
+            self._phase_end(slot, _t, req)
+            self._tr.instant("preempted", f"slot{slot}", _t, {"req": req.id})
         self._scheduler.requeue_front([req])
         self._log("preempt", pf.token, req.id)
 
@@ -967,8 +1113,12 @@ class ServeEngine:
             else:
                 self._merge_group_slots(payload)
         if self.paged:
+            tg0 = time.perf_counter()
             self._window_prefill_step(pf)
             self._grow_or_preempt(pf)
+            if self._tr is not None:
+                self._tr.add("growth", TRACK_ENGINE, tg0,
+                             time.perf_counter())
         rem_before = self._rem.copy()
         if not (rem_before > 0).any():
             self._log("decode", pf.token, 0)
@@ -1021,6 +1171,21 @@ class ServeEngine:
         chunk_s = t2a - t1             # upload + launch + block: the device
         if o["min_chunk_s"] == 0.0 or chunk_s < o["min_chunk_s"]:
             o["min_chunk_s"] = chunk_s  # cleanest (least contended) sample
+        if self._mh is not None:
+            mh = self._mh
+            mh["cycle"].record(t3 - t0)
+            mh["dispatch"].record(t1b - t1)
+            mh["sync"].record(t2a - t1b)
+            mh["book"].record((t1 - t0) + (t2 - t2a) + (t3 - t2))
+            mh["gap"].record((t1 - t0) + (t2 - t2a) + (t3 - t2))
+            mh["chunk"].record(chunk_s)
+            mh["tokens_out"].inc(emitted)
+        if self._tr is not None:
+            tr = self._tr
+            tr.add("cycle", TRACK_ENGINE, t0, t3, {"emitted": emitted})
+            tr.add("dispatch", TRACK_ENGINE, t1, t1b)
+            tr.add("sync", TRACK_ENGINE, t1b, t2a)
+            tr.add("bookkeeping", TRACK_ENGINE, t2a, t3)
         self._log("decode", pf.token, emitted)
         return ("cycle", retire)
 
@@ -1049,8 +1214,12 @@ class ServeEngine:
             else:
                 self._merge_group_slots(payload)
         if self.paged:
+            tg0 = time.perf_counter()
             self._window_pending = self._dispatch_window_prefill(pf)
             self._grow_or_preempt(pf)
+            if self._tr is not None:
+                self._tr.add("growth", TRACK_ENGINE, tg0,
+                             time.perf_counter())
         # ---- dispatch chunk N+1 (the device never waits on the host
         # bookkeeping below) ----
         n = self.decode_chunk
@@ -1119,6 +1288,22 @@ class ServeEngine:
             gap += t3 - t2 - wait_s  # nothing in flight during bookkeeping
         o["gap_s"] += gap
         o["total_s"] += t3 - t0
+        if self._mh is not None:
+            mh = self._mh
+            mh["cycle"].record(t3 - t0)
+            mh["dispatch"].record(t2 - t1)
+            mh["sync"].record(wait_s)
+            mh["book"].record((t1 - t0) + (t3 - t2 - wait_s))
+            mh["gap"].record(gap)
+            mh["tokens_out"].inc(emitted)
+        if self._tr is not None:
+            tr = self._tr
+            tr.add("cycle", TRACK_ENGINE, t0, t3, {"emitted": emitted})
+            if new_pend is not None:
+                tr.add("dispatch", TRACK_ENGINE, t1, t2)
+            if pend is not None:
+                tr.add("sync", TRACK_ENGINE, ts, ts + wait_s)
+            tr.add("bookkeeping", TRACK_ENGINE, t2, t3)
         self._log("decode", pf.token, emitted)
         return ("cycle", retire)
 
@@ -1162,6 +1347,11 @@ class ServeEngine:
                 self._slot_prompt[b] = None
             zero_rows.append(b)
             retire.append((b, req, out))
+            if self._tr is not None:
+                _t = time.perf_counter()
+                self._phase_end(b, _t, req)
+                self._tr.instant("retired", f"slot{b}", _t,
+                                 {"req": req.id, "tokens": len(out)})
         if zero_rows:
             # fixed-shape zeroing scatters (pad with repeats; idempotent)
             B = len(self._slot_req)
@@ -1189,6 +1379,9 @@ class ServeEngine:
                 self.stats["retired"] += 1
         with self._state_lock:
             self._cycle_tokens.discard(pf.token)
+        if retire and self._mh is not None:
+            self._mh["retired"].inc(len(retire))
+            self._note_resident()
         self._log("complete", pf.token, len(retire))
         return None
 

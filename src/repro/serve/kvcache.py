@@ -92,6 +92,29 @@ class BlockPool:
         self._deferred_young: List[int] = []
         self._deferred_old: List[int] = []
         self._deferred_set: set = set()
+        self._g_free = self._g_used = self._g_deferred = None
+
+    def set_metrics(self, metrics) -> None:
+        """Bind (or unbind with None) a :class:`repro.obs.MetricsRegistry`:
+        the pool keeps ``pool.blocks_free`` / ``pool.blocks_used`` /
+        ``pool.blocks_deferred`` gauges current at every alloc, free,
+        deferred-free and fence advance. Pool mutations are per-block-batch
+        (a handful per engine cycle), so three gauge writes are noise."""
+        if metrics is None:
+            self._g_free = self._g_used = self._g_deferred = None
+            return
+        self._g_free = metrics.gauge("pool.blocks_free")
+        self._g_used = metrics.gauge("pool.blocks_used")
+        self._g_deferred = metrics.gauge("pool.blocks_deferred")
+        with self._lock:
+            self._note_locked()
+
+    def _note_locked(self) -> None:
+        if self._g_free is not None:
+            self._g_free.set(len(self._free))
+            self._g_used.set(len(self._allocated))
+            self._g_deferred.set(len(self._deferred_young)
+                                 + len(self._deferred_old))
 
     # ------------------------------------------------------------- accounting
     @property
@@ -122,6 +145,7 @@ class BlockPool:
                 return None
             ids = [self._free.pop() for _ in range(n)]
             self._allocated.update(ids)
+            self._note_locked()
             return ids
 
     def free(self, ids: Sequence[int]) -> None:
@@ -133,6 +157,7 @@ class BlockPool:
                         f"(double free, a deferred block, or the sink)")
                 self._allocated.discard(b)
                 self._free.append(b)
+            self._note_locked()
 
     # ------------------------------------------------- deferred-free fence
     def free_deferred(self, ids: Sequence[int]) -> None:
@@ -152,6 +177,7 @@ class BlockPool:
                         f"(double free, or the reserved sink)")
                 self._deferred_set.add(b)
             self._deferred_young.extend(ids)
+            self._note_locked()
 
     def release_deferred(self) -> int:
         """Advance the fence by one chunk sync: blocks deferred before the
@@ -169,6 +195,8 @@ class BlockPool:
                 self._deferred_set.discard(b)
                 self._allocated.discard(b)
                 self._free.append(b)
+            if old:
+                self._note_locked()
             return len(old)
 
     @property

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import itertools
 import threading
+import time
 from collections import deque
 from typing import Any, Callable, Deque, Iterable, List, Optional
 
@@ -65,9 +66,16 @@ class ServeRequest:
         self.max_new = int(max_new)
         self.state = "created"
         self.preempted_count = 0       # mid-decode evictions (see above)
+        # Lifecycle timestamps, all on the time.perf_counter clock (the
+        # same clock the tracer uses, so spans and these agree):
         self.submitted_at: Optional[float] = None   # set by the engine
-        self.admitted_at: Optional[float] = None    # first admission
+        self.admitted_at: Optional[float] = None    # FIRST admission
+        self.first_token_at: Optional[float] = None
         self.finished_at: Optional[float] = None
+        # re-set on every (re-)enqueue / admission — a preempted request's
+        # current wait, vs the *_at fields which keep first-occurrence
+        self.queued_since: Optional[float] = None
+        self.last_admitted_at: Optional[float] = None
         self._done = threading.Event()
         self._tokens: Optional[np.ndarray] = None
         self._error: Optional[BaseException] = None
@@ -91,16 +99,40 @@ class ServeRequest:
         if not self._done.wait(timeout):
             raise TimeoutError(
                 f"request {self.id} did not complete within {timeout}s "
-                f"(state: {self.state})")
+                f"(state: {self.state}, preempted {self.preempted_count}x; "
+                f"submitted_at={self._fmt(self.submitted_at)} "
+                f"admitted_at={self._fmt(self.admitted_at)} "
+                f"first_token_at={self._fmt(self.first_token_at)} "
+                f"finished_at={self._fmt(self.finished_at)})")
         if self._error is not None:
             raise RuntimeError(
                 f"request {self.id} failed in the serve pipeline"
             ) from self._error
         return self._tokens
 
+    @staticmethod
+    def _fmt(t: Optional[float]) -> str:
+        return f"{t:.3f}" if t is not None else "unset"
+
     @property
     def prompt_len(self) -> int:
         return int(self.prompt.shape[0])
+
+    # -------------------------------------------------- derived lifecycle SLOs
+    @property
+    def ttft(self) -> Optional[float]:
+        """Time to first token (submit -> first decode token), or None
+        until one exists."""
+        if self.first_token_at is None or self.submitted_at is None:
+            return None
+        return self.first_token_at - self.submitted_at
+
+    @property
+    def queue_wait(self) -> Optional[float]:
+        """Submit -> first admission wait, or None while still queued."""
+        if self.admitted_at is None or self.submitted_at is None:
+            return None
+        return self.admitted_at - self.submitted_at
 
 
 class Scheduler:
@@ -115,12 +147,27 @@ class Scheduler:
         # re-inserts at the front — preempted requests are older than
         # anything still waiting, so id order is preserved)
         self._queue: Deque[ServeRequest] = deque()
+        self._g_depth = None           # serve.queue_depth gauge when bound
+
+    def set_metrics(self, metrics) -> None:
+        """Bind (or unbind with None) a :class:`repro.obs.MetricsRegistry`:
+        the scheduler keeps a ``serve.queue_depth`` gauge current at every
+        queue mutation. Cheap enough to leave on: queue ops are per-request,
+        not per-token."""
+        self._g_depth = metrics.gauge("serve.queue_depth") \
+            if metrics is not None else None
+
+    def _note_depth_locked(self) -> None:
+        if self._g_depth is not None:
+            self._g_depth.set(len(self._queue))
 
     # -------------------------------------------------------------- enqueue
     def enqueue(self, req: ServeRequest) -> None:
         req.state = "waiting"
+        req.queued_since = time.perf_counter()
         with self._lock:
             self._queue.append(req)
+            self._note_depth_locked()
 
     def requeue_front(self, reqs: Iterable[ServeRequest]) -> None:
         """Put preempted (or admission-race-unwound) requests back into the
@@ -129,12 +176,15 @@ class Scheduler:
         (alloc-race unwind) can both re-queue concurrently — merging by id
         keeps the queue's FIFO/no-starvation invariant under that race."""
         reqs = sorted(reqs, key=lambda r: r.id)
+        now = time.perf_counter()
         for r in reqs:
             r.state = "waiting"
+            r.queued_since = now
         with self._lock:
             merged = sorted(list(self._queue) + list(reqs),
                             key=lambda r: r.id)
             self._queue = deque(merged)
+            self._note_depth_locked()
 
     @property
     def num_waiting(self) -> int:
@@ -186,6 +236,10 @@ class Scheduler:
                 return None  # head of line does not fit: back-pressure
             for _ in group:
                 self._queue.popleft()
+            self._note_depth_locked()
+            now = time.perf_counter()
+            for req in group:
+                req.last_admitted_at = now
             return group
 
     # ------------------------------------------------------------ retirement
@@ -200,5 +254,6 @@ class Scheduler:
         with self._lock:
             waiting = list(self._queue)
             self._queue.clear()
+            self._note_depth_locked()
         for r in waiting:
             r.set_error(err)

@@ -203,6 +203,50 @@ def test_profiler_observer():
         ex.shutdown()
 
 
+def test_profiler_per_domain_and_idle_workers():
+    """Per-domain aggregation + utilization normalized by every worker that
+    REPORTED (sleepers included): with 4 host workers and ~serial 1ms
+    tasks, a profiler that only counted task-executing workers would
+    overstate utilization whenever some workers never won a task."""
+    prof = Profiler()
+    ex = Executor(domains={HOST: 4, "accel": 1}, observer=prof)
+    try:
+        tf = Taskflow()
+        prev = None
+        for _ in range(10):           # a chain: at most ONE task runnable
+            t = tf.static(lambda: time.sleep(0.002))
+            if prev is not None:
+                prev.precede(t)
+            prev = t
+        ex.run(tf).wait()
+        # settle: give idle workers time to report a sleep hook
+        time.sleep(0.05)
+        s = prof.summary()
+        assert s["tasks"] == 10
+        pd = s["per_domain"]
+        assert set(pd) <= {HOST, "accel"} and HOST in pd
+        assert pd[HOST]["tasks"] == 10
+        assert pd[HOST]["busy_s"] > 0
+        assert sum(d["tasks"] for d in pd.values()) == s["tasks"]
+        assert abs(sum(d["busy_s"] for d in pd.values()) - s["busy_s"]) \
+            < 1e-9
+        # the accel domain ran nothing; its worker still reported
+        if "accel" in pd:
+            assert pd["accel"]["tasks"] == 0
+        # normalization: every reporting worker counts. A serial chain on a
+        # 4-worker domain can never be >= 50% busy per worker; the old
+        # len(tasks_executed) normalization reported exactly that whenever
+        # fewer than half the workers won tasks.
+        assert s["workers"] >= pd[HOST]["workers"] >= 1
+        assert s["utilization"] <= 1.0
+        busy, wall = s["busy_s"], s["wall_s"]
+        assert abs(s["utilization"] - busy / (wall * s["workers"])) < 1e-9
+        if pd[HOST]["workers"] == 4:
+            assert pd[HOST]["utilization"] < 0.5
+    finally:
+        ex.shutdown()
+
+
 def test_stress_wide_random_dag(executor):
     random.seed(7)
     tf = Taskflow()

@@ -368,6 +368,103 @@ def test_defer_resumes_across_reruns(executor):
     assert pl.num_token_deferrals == 1 and pl.num_resumes == 1
 
 
+# ------------------------------------------------------------ stage_times
+def test_stage_times_accumulate_monotone(executor):
+    """stage_times sums body wall time per pipe name, over lines AND runs:
+    a second run only ever grows the numbers."""
+    import time as _time
+    budget = [6]
+
+    def admit(pf):
+        if pf.token >= budget[0]:
+            pf.stop()
+            return
+        _time.sleep(0.002)
+
+    def work(pf):
+        _time.sleep(0.002)
+
+    pl = Pipeline(2, Pipe(PipeType.SERIAL, admit, name="admit"),
+                  Pipe(PipeType.PARALLEL, work, name="work"))
+    assert pl.stage_times == {"admit": 0.0, "work": 0.0}
+    pl.run(executor).wait(30)
+    first = pl.stage_times
+    # every body slept >= 2ms per visit: 6 admit visits + 6 work visits
+    # (the stopping admit adds a 7th, sleepless, visit)
+    assert first["admit"] >= 6 * 0.002
+    assert first["work"] >= 6 * 0.002
+    budget[0] = 12
+    pl.run(executor).wait(30)
+    second = pl.stage_times
+    assert set(second) == {"admit", "work"}
+    assert all(second[k] >= first[k] for k in first)  # monotone across runs
+    assert second["work"] >= 12 * 0.002
+
+
+def test_stage_times_no_slot_races_under_parallel(executor):
+    """Two lines INSIDE the PARALLEL stage at once (event rendezvous): the
+    per-(line, pipe) counters must not lose either line's interval — the
+    summed stage time covers both concurrent bodies, not just one."""
+    import time as _time
+    arrived = [threading.Event(), threading.Event()]
+    ok = []
+
+    def par(pf):
+        if pf.token < 2:
+            arrived[pf.token].set()
+            ok.append(arrived[1 - pf.token].wait(timeout=30))
+            _time.sleep(0.01)
+
+    pl = Pipeline(2, Pipe(PipeType.SERIAL, _counted_stop(4), name="admit"),
+                  Pipe(PipeType.PARALLEL, par, name="par"))
+    pl.run(executor).wait(30)
+    assert ok.count(True) == 2  # both tokens really overlapped in the stage
+    # both overlapped bodies slept 10ms: a lost per-slot update would leave
+    # the sum below 20ms
+    assert pl.stage_times["par"] >= 2 * 0.01
+
+
+def test_stage_times_fresh_on_rebuild(executor):
+    """A rebuilt Pipeline (the serve engine rebuilds its resident pipeline
+    on geometry change) starts from zero, while reset()+rerun of the SAME
+    object keeps accumulating (documented: summed over runs)."""
+    def mk():
+        return Pipeline(2, Pipe(PipeType.SERIAL, _counted_stop(5),
+                                name="admit"))
+
+    pl = mk()
+    pl.run(executor).wait(30)
+    assert pl.stage_times["admit"] > 0.0
+    rebuilt = mk()
+    assert rebuilt.stage_times == {"admit": 0.0}
+
+
+def test_stage_times_promote_to_tracer_spans(executor):
+    """With a repro.obs.Tracer attached, every pipe-body interval is also a
+    span on that line's track, consistent with the stage_times aggregate."""
+    from repro.obs import Tracer
+
+    tr = Tracer()
+    pl = Pipeline(2, Pipe(PipeType.SERIAL, _counted_stop(4), name="admit"),
+                  Pipe(PipeType.PARALLEL, lambda pf: None, name="work"))
+    pl.tracer = tr
+    pl.run(executor).wait(30)
+    spans = tr.spans()
+    # 4 tokens x 2 stages + the stopping admit visit
+    assert len(spans) == 4 * 2 + 1
+    assert {s[1] for s in spans} == {"line0", "line1"}
+    assert {s[0] for s in spans} == {"admit", "work"}
+    assert all(s[3] >= s[2] for s in spans)
+    # span sum == stage_times aggregate (same measurements, two views)
+    agg = sum(s[3] - s[2] for s in spans)
+    st = pl.stage_times
+    assert abs(agg - (st["admit"] + st["work"])) < 1e-6
+    # detaching stops recording without disturbing accumulation
+    pl.tracer = None
+    pl.run(executor).wait(30)
+    assert len(tr.spans()) == 4 * 2 + 1
+
+
 # -------------------------------------------------------------- data passing
 def test_data_pipeline_threads_buffers(executor):
     outs = []
