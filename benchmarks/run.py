@@ -15,7 +15,10 @@ roofline— the dry-run roofline table (§Roofline), from results/dryrun.jsonl
 pipeline— task-parallel pipeline throughput vs hand-rolled loop
           (Pipeflow follow-up, arXiv:2202.00717); honors --quick
 serve   — continuous-batching engine under Poisson arrivals vs the
-          per-call baseline (tokens/sec, p50/p99 latency); honors --quick
+          per-call baseline (tokens/sec, p50/p99 latency); honors --quick;
+          --prefix-share swaps in the shared-prefix workload (cold vs
+          warm prefix cache over one trace: hit-rate, tokens saved,
+          admission/TTFT p50/p99 deltas)
 paged_decode — gather-free paged decode read path vs the gather oracle
           across pool occupancies; honors --quick
 decode_overlap — async decode lookahead vs the synchronous decode loop:
@@ -98,6 +101,9 @@ def main() -> None:
                     choices=("choice", "lognormal"),
                     help="serve suite prompt-length distribution "
                          "(lognormal = heavy tail)")
+    ap.add_argument("--prefix-share", action="store_true",
+                    help="serve suite: shared-prefix workload, cold vs "
+                         "warm prefix cache over one trace")
     args = ap.parse_args()
 
     from . import (decode_overlap_microbench, fig9_micro_random_dag,
@@ -122,9 +128,13 @@ def main() -> None:
         "fig21": fig21_incremental_timing.bench,
         "roofline": roofline_report.bench,
         "pipeline": lambda: pipeline_throughput.bench(quick=args.quick),
-        "serve": lambda: serve_continuous.bench(
-            quick=args.quick, prompt_dist=args.prompt_dist,
-            trace_path=_trace("serve")),
+        "serve": lambda: (
+            serve_continuous.bench_prefix_share(
+                quick=args.quick, trace_path=_trace("serve"))
+            if args.prefix_share else
+            serve_continuous.bench(
+                quick=args.quick, prompt_dist=args.prompt_dist,
+                trace_path=_trace("serve"))),
         "paged_decode":
             lambda: paged_decode_microbench.bench(quick=args.quick),
         "decode_overlap":
@@ -134,6 +144,7 @@ def main() -> None:
     }
     config = {"quick": args.quick, "only": args.only,
               "prompt_dist": args.prompt_dist,
+              "prefix_share": args.prefix_share,
               "paged_impl_env": os.environ.get("REPRO_PAGED_IMPL", ""),
               "async_decode_env": os.environ.get("REPRO_ASYNC_DECODE", ""),
               "obs_gate_budget_env":

@@ -5,12 +5,17 @@
   EVERY architecture: attention models through the paged KV pool, SSM and
   hybrid models (mamba, zamba2) through a fixed-slot recurrent-state pool;
 * :mod:`.scheduler` — request queue + FIFO admission control (no length
-  buckets) budgeted on prompt-only footprints;
-* :mod:`.kvcache`   — paged KV-cache pool (block allocator with mid-decode
-  ``grow_table`` + jit-able fused K/V scatters through per-sequence block
-  tables, including the chunked-prefill ``scatter_token_window`` and the
-  device-side ``extend_block_tables`` growth scatter; the ``gather_pages``
-  reference read path).
+  buckets) budgeted on prompt-only footprints (minus any cached-prefix
+  blocks when prefix caching is on);
+* :mod:`.kvcache`   — paged KV-cache pool (REFCOUNTED block allocator with
+  mid-decode ``grow_table`` + jit-able fused K/V scatters through
+  per-sequence block tables, including the chunked-prefill
+  ``scatter_token_window``, the device-side ``extend_block_tables`` growth
+  scatter and the copy-on-write ``copy_blocks`` fork; the ``gather_pages``
+  reference read path);
+* :mod:`.prefix`    — the prefix cache: a hash trie over block-aligned
+  prompt chunks mapping cached prefixes to live pool blocks, with
+  pin/park/reuse-scored-evict semantics (see ``docs/prefix_caching.md``).
 
 Two-phase admission semantics
 -----------------------------
@@ -43,6 +48,29 @@ fixed-slot state pool indexed by decode slot, so ``submit()``/``result()``
 continuous batching covers them through the same resident pipeline
 (:func:`repro.models.lm.decode_step_slots`); admission for them is
 bounded by free slots alone.
+
+Prefix caching (copy-on-write KV block sharing)
+-----------------------------------------------
+``ServeEngine(prefix_cache=True)`` (or ``REPRO_PREFIX_CACHE=1``) indexes
+every admitted prompt's full ``block_size``-token chunks in a hash trie
+and lets later admissions SHARE the pool blocks already holding that
+prefix's KV:
+
+* a cache-hit admission budgets only its uncached suffix blocks, seeds
+  its block table with the shared blocks, and starts its prefill window
+  walk at the first uncached token (``serve.prefill_tokens_saved``);
+* a hit ending mid-block is consumed by a copy-on-write FORK (one device
+  block copy + table repoint) before the row's own writes land, so
+  co-holders keep reading the original bits — and a ``_cow_guard`` pass
+  enforces fork-before-write on every dispatch, sync and async;
+* retired requests' prefix blocks stay PARKED (held only by the index);
+  under pool pressure the engine evicts cold parked blocks by reuse
+  score (hits x recency, leaf-first) BEFORE preempting any resident row.
+
+Off by default; the uncached path is bit-exact unchanged, and cached
+greedy streams are bit-identical to uncached on the gather oracle
+(``tests/test_prefix_cache.py``). Attention/paged serving only — SSM
+recurrent state has no block-granular prefix identity (follow-up).
 
 Async decode lookahead
 ----------------------
@@ -107,10 +135,12 @@ environment — turns on the serve-layer observability stack
   (``Pipeline.stage_times`` promoted to a timeline).
 * **Metrics** (:class:`repro.obs.MetricsRegistry`): counters
   ``serve.tokens_out`` / ``serve.requests.{admitted,retired,preempted,
-  stalled}`` / ``pool.grown_blocks``; gauges ``serve.queue_depth`` /
-  ``serve.resident_rows`` / ``pool.blocks_{free,used,deferred}``;
-  histograms ``serve.ttft_s`` / ``serve.queue_wait_s`` /
-  ``engine.{cycle,dispatch,chunk_sync,book,gap,chunk}_s``.
+  stalled}`` / ``pool.grown_blocks`` / ``prefix.{hits,misses,evicted}`` /
+  ``serve.prefill_tokens_saved``; gauges ``serve.queue_depth`` /
+  ``serve.resident_rows`` / ``pool.blocks_{free,used,deferred,shared,
+  parked}``; histograms ``serve.ttft_s`` / ``serve.queue_wait_s`` /
+  ``engine.{cycle,dispatch,chunk_sync,book,gap,chunk}_s``; per-slot
+  ``cow_fork`` trace instants mark copy-on-write block forks.
 * **Export**: ``obs.export(path)`` writes Chrome trace-event JSON that
   loads directly in Perfetto (https://ui.perfetto.dev) or
   ``chrome://tracing``; ``repro.launch.serve --stats-interval N --trace

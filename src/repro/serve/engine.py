@@ -134,8 +134,10 @@ from ..models import lm
 from ..obs import TRACK_ENGINE
 from ..obs import from_env as _obs_from_env
 from ..pipeline import DataPipe, DataPipeline, PipeType
-from .kvcache import (BlockPool, extend_block_tables, init_kv_pool,
+from .kvcache import (SINK_BLOCK, BlockPool, copy_blocks,
+                      extend_block_tables, init_kv_pool,
                       scatter_prefill_rows, set_carry_rows, set_table_rows)
+from .prefix import PrefixCache
 from .scheduler import Scheduler, ServeRequest
 
 __all__ = ["ServeEngine", "ServeRequest"]
@@ -181,6 +183,18 @@ class ServeEngine:
         are synced, and all host bookkeeping overlaps device compute (see
         the module docstring). None resolves via the ``REPRO_ASYNC_DECODE``
         env var (default off — the synchronous path is the reference).
+    prefix_cache:
+        share KV blocks across requests with a common prompt prefix: full
+        prompt chunks are indexed in a :class:`repro.serve.prefix
+        .PrefixCache` trie, cache-hit admissions seed their block table
+        with the shared (refcount-pinned) blocks and budget/prefill only
+        their uncached suffix, a shared tail block is copy-on-write forked
+        before the first divergent write, and under pool pressure cold
+        PARKED prefix blocks are evicted by reuse score before any
+        resident row is preempted (see ``docs/prefix_caching.md``). None
+        resolves via the ``REPRO_PREFIX_CACHE`` env var (default off —
+        the uncached path is the bit-exact reference). Paged
+        (attention) archs only; ignored for SSM/hybrid models.
     record_stages:
         keep an in-memory (stage, cycle-token, info, t) event log — the
         observer hook the overlap tests read.
@@ -207,6 +221,7 @@ class ServeEngine:
                  max_seq_len: Optional[int] = None,
                  paged_impl: Optional[str] = None,
                  async_decode: Optional[bool] = None,
+                 prefix_cache: Optional[bool] = None,
                  record_stages: bool = False,
                  obs=None):
         self.cfg = cfg
@@ -238,6 +253,12 @@ class ServeEngine:
         #: dispatch->sync pipelined decode loop (depth 2); False = the
         #: synchronous reference path
         self.async_decode = bool(async_decode)
+        if prefix_cache is None:
+            prefix_cache = os.environ.get("REPRO_PREFIX_CACHE", "") \
+                .strip().lower() in ("1", "true", "yes", "on")
+        #: cross-request KV block sharing (paged archs only); False = the
+        #: uncached bit-exact reference path
+        self.prefix_cache = bool(prefix_cache) and self.paged
         self._closing = False
         self._broken: Optional[BaseException] = None
         self._stage_log = [] if record_stages else None
@@ -292,11 +313,17 @@ class ServeEngine:
         self.stats = {"admitted": 0, "admit_parks": 0, "pump_cycles": 0,
                       "decode_cycles": 0, "prefills": 0,
                       "prefill_windows": 0, "tokens_out": 0, "retired": 0,
-                      "grown_blocks": 0, "preempted": 0, "stalls": 0}
+                      "grown_blocks": 0, "preempted": 0, "stalls": 0,
+                      "prefix_hits": 0, "prefix_tokens_saved": 0,
+                      "cow_forks": 0}
 
+        self._prefix: Optional[PrefixCache] = None
         if self.paged:
             self._pool = BlockPool(kv_blocks, block_size)
             self._pkv = init_kv_pool(cfg, kv_blocks, block_size)
+            if self.prefix_cache:
+                self._prefix = PrefixCache(self._pool)
+            self._cow_copy = jax.jit(copy_blocks, donate_argnums=(0,))
             self._max_seq = min(max_seq_len or 32 * block_size,
                                 (kv_blocks - 1) * block_size)
             self.prefill_chunk = prefill_chunk or decode_chunk * block_size
@@ -374,6 +401,8 @@ class ServeEngine:
         self._scheduler.set_metrics(metrics)
         if self.paged:
             self._pool.set_metrics(metrics)
+        if self._prefix is not None:
+            self._prefix.set_metrics(metrics)
         if self._pipeline is not None:
             self._pipeline.tracer = self._tr
         if metrics is None:
@@ -386,6 +415,7 @@ class ServeEngine:
             "preempted": metrics.counter("serve.requests.preempted"),
             "stalled": metrics.counter("serve.requests.stalled"),
             "grown_blocks": metrics.counter("pool.grown_blocks"),
+            "prefill_saved": metrics.counter("serve.prefill_tokens_saved"),
             "resident": metrics.gauge("serve.resident_rows"),
             "ttft": metrics.histogram("serve.ttft_s"),
             "qwait": metrics.histogram("serve.queue_wait_s"),
@@ -583,22 +613,69 @@ class ServeEngine:
             pass                        # fall through to park / decode pump
         elif self.paged:
             # phase 1 of two-phase admission: budget the PROMPT footprint
-            # only; decode-time blocks are granted lazily by the decode
-            # stage as rows grow
-            popped = self._scheduler.try_admit(
-                free_slots, self._pool.num_free, self._pool.blocks_for)
+            # only — minus any prompt blocks the prefix cache already holds
+            # (peek is conservative: registration can only grow a match
+            # between the peek and the pin below) — and count PARKED cached
+            # blocks toward the budget, since they are evictable on demand;
+            # decode-time blocks are granted lazily by the decode stage
+            px = self._prefix
+            if px is not None:
+                bs = self._pool.block_size
+
+                def need_for(r):
+                    return self._pool.blocks_for(r.prompt_len) \
+                        - px.peek(r.prompt) // bs
+                budget = self._pool.num_free + px.num_parked
+            else:
+                def need_for(r):
+                    return self._pool.blocks_for(r.prompt_len)
+                budget = self._pool.num_free
+            popped = self._scheduler.try_admit(free_slots, budget, need_for)
             if popped is not None:
-                needs = [self._pool.blocks_for(r.prompt_len) for r in popped]
+                # pin the longest cached prefix per member (ref++ on every
+                # matched block) and allocate only the uncached suffixes
+                hits = [px.match_and_pin(r.prompt) if px is not None
+                        else None for r in popped]
+                needs = [self._pool.blocks_for(r.prompt_len)
+                         - (len(h.blocks) if h is not None else 0)
+                         for r, h in zip(popped, hits)]
                 ids = self._pool.alloc(sum(needs))  # atomic all-or-nothing
+                if ids is None and px is not None:
+                    # reuse-aware back-pressure: release cold PARKED prefix
+                    # blocks (leaf-first, coldest score first) before giving
+                    # up on the group — and long before the grow pass would
+                    # preempt any resident row
+                    short = sum(needs) - self._pool.num_free
+                    if short > 0:
+                        px.evict(short)
+                    ids = self._pool.alloc(sum(needs))
                 if ids is None:
-                    # raced a concurrent mid-decode grow: put the group back
-                    # (id order preserved) and fall through to park/pump
+                    # raced a concurrent mid-decode grow: unpin, put the
+                    # group back (id order preserved), fall through to
+                    # park/pump
+                    for h in hits:
+                        if h is None:
+                            continue
+                        pins = list(h.blocks)
+                        if h.partial_block is not None:
+                            pins.append(h.partial_block)
+                        if pins:
+                            px.unpin(pins)
                     self._scheduler.requeue_front(popped)
                 else:
-                    group, i = [], 0
-                    for r, need in zip(popped, needs):
-                        group.append((r, ids[i:i + need]))
+                    group, i, saved, nhit = [], 0, 0, 0
+                    for r, h, need in zip(popped, hits, needs):
+                        group.append((r, ids[i:i + need], h))
                         i += need
+                        if h is not None and h.tokens > 0:
+                            nhit += 1
+                            saved += h.tokens
+                    if nhit:
+                        with self._state_lock:
+                            self.stats["prefix_hits"] += nhit
+                            self.stats["prefix_tokens_saved"] += saved
+                        if self._mh is not None:
+                            self._mh["prefill_saved"].inc(saved)
         else:
             # slot-state pool: recurrent state is pre-allocated per slot, so
             # admission is bounded by free slots alone
@@ -607,7 +684,8 @@ class ServeEngine:
                 group = [(r, None) for r in popped]
         if group is not None:
             now = time.perf_counter()
-            for r, _ in group:
+            for g in group:
+                r = g[0]
                 r.state = "prefilling"
                 if r.admitted_at is None:
                     r.admitted_at = now
@@ -615,15 +693,15 @@ class ServeEngine:
                         self._mh["qwait"].record(now - r.submitted_at)
             with self._state_lock:
                 self._slots_reserved += len(group)
-                self._inflight.update(r for r, _ in group)
+                self._inflight.update(g[0] for g in group)
                 self._cycle_tokens.add(pf.token)
                 self.stats["admitted"] += len(group)
             if self._mh is not None:
                 self._mh["admitted"].inc(len(group))
             if self._tr is not None:
                 self._tr.add("admission", TRACK_ENGINE, t_adm, now,
-                             {"reqs": [r.id for r, _ in group]})
-            self._log("admit", pf.token, [r.id for r, _ in group])
+                             {"reqs": [g[0].id for g in group]})
+            self._log("admit", pf.token, [g[0].id for g in group])
             return ("admit", group)
         if waiting and deps:
             # deferred-token admission: the head request does not fit. Park
@@ -653,7 +731,7 @@ class ServeEngine:
         if kind != "admit":
             return msg
         group = payload
-        reqs = [r for r, _ in group]
+        reqs = [g[0] for g in group]
         if not self.paged:
             # SSM/hybrid: whole-prompt prefill per member (recurrent state
             # is O(1)/sequence — there is no per-token KV to chunk in; the
@@ -678,25 +756,38 @@ class ServeEngine:
         # the decode stage cycle by cycle. The window is rounded up to a
         # power of two (capped at prefill_chunk) so arbitrary prompt-length
         # mixes compile O(log prefill_chunk) shapes, not one per length.
-        longest = max(r.prompt_len for r in reqs)
+        # Prefix-cache HIT rows skip this launch entirely: their cached
+        # tokens never re-prefill — the decode stage seats them with the
+        # shared blocks and streams windows from the first uncached token
+        # (the group is reordered miss-first so launch row i is group
+        # member i for every window-0 participant).
+        miss = [g for g in group if g[2] is None or g[2].tokens == 0]
+        hitg = [g for g in group if not (g[2] is None or g[2].tokens == 0)]
+        group = miss + hitg
+        if not miss:
+            self._log("prefill", pf.token, [r.id for r in reqs])
+            return ("admit", (group, 0, None, None, None, 0))
+        longest = max(g[0].prompt_len for g in miss)
         C0 = min(self.prefill_chunk, 1 << max(0, longest - 1).bit_length())
         A = self._scheduler.max_admit
         toks = np.zeros((A, C0), np.int32)
         lastp = np.zeros((A,), np.int32)
-        for i, r in enumerate(reqs):
+        for i, g in enumerate(miss):
+            r = g[0]
             k = min(r.prompt_len, C0)
             toks[i, :k] = r.prompt[:k]
             lastp[i] = k - 1
-        for i in range(len(reqs), A):
-            toks[i] = toks[len(reqs) - 1]
-            lastp[i] = lastp[len(reqs) - 1]
+        for i in range(len(miss), A):
+            toks[i] = toks[len(miss) - 1]
+            lastp[i] = lastp[len(miss) - 1]
         logits, cache = self._prefill(self.params, jnp.asarray(toks),
                                       jnp.asarray(lastp), max_len=C0)
         first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         with self._state_lock:
             self.stats["prefills"] += 1
         self._log("prefill", pf.token, [r.id for r in reqs])
-        return ("admit", (group, C0, cache["k"], cache["v"], first))
+        return ("admit", (group, C0, cache["k"], cache["v"], first,
+                          len(miss)))
 
     # ------------------------------------------------- decode-stage helpers
     def _scatter_carry(self, rows, lens, lasts, rems, pad_to: int) -> None:
@@ -722,35 +813,68 @@ class ServeEngine:
         scatter the window-0 KV into the pool (single-writer: we are inside
         the SERIAL decode stage). Rows whose whole prompt fits window 0
         enter decode immediately; longer ones enter the prefill phase and
-        stream their remaining windows in subsequent cycles."""
-        group, C0, ck, cv, first = payload
-        first = np.asarray(first)
-        nb0 = self._pool.blocks_for(C0)
+        stream their remaining windows in subsequent cycles.
+
+        Prefix-cache HIT rows (group members past ``n_miss`` — they took no
+        window-0 launch row) seed their table with the pinned SHARED prefix
+        blocks followed by their own suffix blocks and enter the prefill
+        phase at the first uncached token; a partially-matched tail block
+        is copy-on-write FORKED here (device block copy into the row's
+        first suffix block, which the table already points at) so the
+        row's own writes never touch the shared original."""
+        group, C0, ck, cv, first, n_miss = payload
+        first = np.asarray(first) if first is not None else None
+        nb0 = self._pool.blocks_for(C0) if C0 else 0
         now = time.perf_counter()
         rows_idx, rows_tab = [], []
         c_len, c_last, c_rem = [], [], []
-        for i, (req, blocks) in enumerate(group):
+        fork_src, fork_dst = [], []
+        reg_slots = []
+        for i, (req, blocks, hit) in enumerate(group):
+            shared = list(hit.blocks) if (hit is not None and i >= n_miss) \
+                else []
+            tab = shared + list(blocks)
             with self._state_lock:
                 slot = self._free_slots.pop()
                 self._slots_reserved -= 1
                 self._slot_req[slot] = req
-                self._slot_blocks[slot] = list(blocks)
+                self._slot_blocks[slot] = tab
                 self._slot_out[slot] = []
             self._slot_gen[slot] += 1
             self._slot_prompt[slot] = req.prompt
             self._wp_valid[slot] = False
             self._stall_rem[slot] = 0
             self._tables[slot] = 0
-            self._tables[slot, :len(blocks)] = blocks
-            self._pref_pos[slot] = min(req.prompt_len, C0)
+            self._tables[slot, :len(tab)] = tab
+            if shared or (hit is not None and i >= n_miss):
+                # cache hit: cached tokens are already in the pool — start
+                # the window walk at the first uncached token
+                self._pref_pos[slot] = hit.tokens
+                if hit.partial_block is not None:
+                    # CoW fork of the partially-matched tail block into the
+                    # row's first suffix block (table column len(shared)):
+                    # its cached leading tokens come along, the row's own
+                    # writes land past them
+                    fork_src.append(hit.partial_block)
+                    fork_dst.append(blocks[0])
+                    with self._state_lock:
+                        self.stats["cow_forks"] += 1
+                    if self._tr is not None:
+                        self._tr.instant(
+                            "cow_fork", f"slot{slot}", now,
+                            {"req": req.id, "src": int(hit.partial_block),
+                             "dst": int(blocks[0])})
+            else:
+                self._pref_pos[slot] = min(req.prompt_len, C0)
             self._lengths[slot] = self._pref_pos[slot]
-            if req.prompt_len <= C0:
+            if i < n_miss and req.prompt_len <= C0:
                 self._slot_phase[slot] = "decode"
                 self._last[slot] = first[i]
                 self._rem[slot] = req.max_new - 1
                 self._slot_out[slot].append(int(first[i]))
                 req.state = "decoding"
                 self._note_first_token(req, now)
+                reg_slots.append(slot)
             else:
                 self._slot_phase[slot] = "prefill"
                 self._last[slot] = 0
@@ -779,16 +903,48 @@ class ServeEngine:
             # is exact
             self._scatter_carry(rows_idx[:len(group)], c_len, c_last, c_rem,
                                 pad_to=A)
-        # window-0 scatter: per-row block lists trimmed/padded to the window
-        # footprint (sink-filled beyond a short prompt's own blocks and for
-        # the group's pad rows), so the compiled shape keys on the window
-        # size alone — never on group size, prompt lengths, or max_new
-        blocks2d = np.zeros((ck.shape[1], nb0), np.int32)
-        for i, (_, blocks) in enumerate(group):
-            row = blocks[:nb0]
-            blocks2d[i, :len(row)] = row
-        self._pkv = self._scatter(self._pkv, jnp.asarray(blocks2d), ck, cv)
+        if fork_src:
+            # partial-tail forks: one padded device copy for the whole
+            # group, sequenced on the pool chain before any window launch
+            # that reads the forked blocks
+            self._copy_blocks_padded(fork_src, fork_dst)
+            self._prefix.unpin(fork_src)   # fork done: drop the tail pins
+        if n_miss:
+            # window-0 scatter: per-row block lists trimmed/padded to the
+            # window footprint (sink-filled beyond a short prompt's own
+            # blocks and for the group's pad rows), so the compiled shape
+            # keys on the window size alone — never on group size, prompt
+            # lengths, or max_new
+            blocks2d = np.zeros((ck.shape[1], nb0), np.int32)
+            for i, (_, blocks, _) in enumerate(group[:n_miss]):
+                row = blocks[:nb0]
+                blocks2d[i, :len(row)] = row
+            self._pkv = self._scatter(self._pkv, jnp.asarray(blocks2d),
+                                      ck, cv)
+        for slot in reg_slots:
+            self._register_prefix(slot)
         self._note_resident()
+
+    def _copy_blocks_padded(self, srcs: List[int], dsts: List[int]) -> None:
+        """One :func:`repro.serve.kvcache.copy_blocks` launch, padded with
+        ``SINK -> SINK`` repeats to the next power of two so arbitrary fork
+        counts compile O(log max_batch) shapes."""
+        m = 1 << max(0, len(srcs) - 1).bit_length()
+        srcs = list(srcs) + [SINK_BLOCK] * (m - len(srcs))
+        dsts = list(dsts) + [SINK_BLOCK] * (m - len(dsts))
+        self._pkv = self._cow_copy(self._pkv, jnp.asarray(srcs, jnp.int32),
+                                   jnp.asarray(dsts, jnp.int32))
+
+    def _register_prefix(self, slot: int) -> None:
+        """Index a just-prefilled row's FULL prompt chunks in the prefix
+        trie (decode entry is the registration point: every full prompt
+        block is final — decode writes land strictly past the prompt)."""
+        if self._prefix is None:
+            return
+        prompt = self._slot_prompt[slot]
+        blocks = self._slot_blocks[slot]
+        if prompt is not None and blocks is not None:
+            self._prefix.register(prompt, blocks)
 
     def _merge_group_slots(self, payload) -> None:
         """Seat an admitted SSM/hybrid group: scatter each member's
@@ -928,6 +1084,7 @@ class ServeEngine:
                     self._phase_end(b, now, req)     # close "prefill"
                     self._phase_begin(b, "decode", now)
                 self._wp_valid[b] = False
+                self._register_prefix(b)
                 t_rows.append(b)
                 t_len.append(int(self._lengths[b]))
                 t_last.append(int(first[b]))
@@ -993,6 +1150,10 @@ class ServeEngine:
                         self._mh["grown_blocks"].inc(len(ids))
                     covered = True
                     break
+                if self._prefix is not None \
+                        and self._prefix.evict(need - cur) > 0:
+                    continue    # cold parked prefix blocks released: retry
+                    # growth before stalling or preempting ANY resident row
                 if self.async_decode and self._pool.num_deferred > 0:
                     break       # blocks in transit behind the fence: stall
                 while vi < len(victims) \
@@ -1059,6 +1220,96 @@ class ServeEngine:
                 jnp.asarray(grow_cols, jnp.int32),
                 jnp.asarray(grow_ids, jnp.int32))
 
+    def _cow_guard(self, pf) -> None:
+        """Copy-on-write safety net, run BEFORE the window-prefill and
+        decode-chunk dispatches each cycle: any row about to WRITE into a
+        block that is still shared (refcount > 1) forks it first — device
+        block copy, table repoint (host mirror + device scatter), one
+        reference dropped on the original. Structurally this never fires
+        on the engine's own flows (admission forks partial tail blocks
+        eagerly at the merge, and FULL shared prefix blocks are never
+        written again by construction — decode appends land strictly past
+        the prompt), but ``append_kv`` into a shared block corrupting a
+        co-holder would be silent and unbounded, so the invariant is
+        enforced here unconditionally (tests trigger it via an artificial
+        ``incref``)."""
+        if self._prefix is None:
+            return
+        bs = self._pool.block_size
+        srcs, dsts, rows, cols = [], [], [], []
+        for b in range(len(self._slot_req)):
+            if self._slot_req[b] is None or self._slot_blocks[b] is None:
+                continue
+            if self._slot_phase[b] == "decode":
+                lo = int(self._lengths[b])
+                k = int(min(self.decode_chunk,
+                            int(self._rem[b]) + int(self._stall_rem[b])))
+            elif self._slot_phase[b] == "prefill":
+                lo = int(self._pref_pos[b])
+                k = int(min(self.prefill_chunk,
+                            len(self._slot_prompt[b]) - lo))
+            else:
+                continue
+            if k <= 0:
+                continue
+            blocks = self._slot_blocks[b]
+            hi = min((lo + k - 1) // bs + 1, len(blocks))
+            for col in range(lo // bs, hi):
+                old = blocks[col]
+                if self._pool.refcount(old) <= 1:
+                    continue
+                ids = self._pool.alloc(1)
+                if ids is None:
+                    self._prefix.evict(1)
+                    ids = self._pool.alloc(1)
+                if ids is None:
+                    # cannot fork and must not write the shared block:
+                    # requeue the row, it replays later (deterministic)
+                    self._preempt(b, pf)
+                    break
+                new = ids[0]
+                blocks[col] = new
+                self._tables[b, col] = new
+                srcs.append(old)
+                dsts.append(new)
+                rows.append(b)
+                cols.append(col)
+                # drop OUR reference on the original (co-holders keep it
+                # alive; refcount stays >= 1 so nothing is released here)
+                if self.async_decode:
+                    self._pool.free_deferred([old])
+                else:
+                    self._pool.free([old])
+                with self._state_lock:
+                    self.stats["cow_forks"] += 1
+                if self._tr is not None:
+                    self._tr.instant("cow_fork", f"slot{b}",
+                                     time.perf_counter(),
+                                     {"req": self._slot_req[b].id,
+                                      "src": int(old), "dst": int(new)})
+        # a row preempted mid-pass (fork allocation failure) zeroed its
+        # table and freed its blocks — drop its queued forks
+        live = [j for j in range(len(rows))
+                if self._slot_req[rows[j]] is not None]
+        if len(live) < len(rows):
+            srcs = [srcs[j] for j in live]
+            dsts = [dsts[j] for j in live]
+            rows = [rows[j] for j in live]
+            cols = [cols[j] for j in live]
+        if srcs:
+            self._copy_blocks_padded(srcs, dsts)
+            # device table repoint, padded with repeats (idempotent) to a
+            # power of two like the copy
+            m = 1 << max(0, len(rows) - 1).bit_length()
+            ids2 = list(dsts)
+            while len(rows) < m:
+                rows.append(rows[-1])
+                cols.append(cols[-1])
+                ids2.append(ids2[-1])
+            self._tables_dev = self._extend_tables(
+                self._tables_dev, jnp.asarray(rows, jnp.int32),
+                jnp.asarray(cols, jnp.int32), jnp.asarray(ids2, jnp.int32))
+
     def _preempt(self, slot: int, pf) -> None:
         req = self._slot_req[slot]
         with self._state_lock:
@@ -1114,6 +1365,7 @@ class ServeEngine:
                 self._merge_group_slots(payload)
         if self.paged:
             tg0 = time.perf_counter()
+            self._cow_guard(pf)
             self._window_prefill_step(pf)
             self._grow_or_preempt(pf)
             if self._tr is not None:
@@ -1215,6 +1467,7 @@ class ServeEngine:
                 self._merge_group_slots(payload)
         if self.paged:
             tg0 = time.perf_counter()
+            self._cow_guard(pf)
             self._window_pending = self._dispatch_window_prefill(pf)
             self._grow_or_preempt(pf)
             if self._tr is not None:

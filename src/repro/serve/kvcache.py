@@ -27,6 +27,17 @@ Two halves, deliberately separated:
   stage grows). Block id 0 is a reserved *sink*: it is never handed out,
   and jit-compiled decode redirects the KV writes of inactive batch rows
   into it, so masked rows can never corrupt a live sequence's blocks.
+
+  Blocks are REFCOUNTED (prefix caching): ``alloc``/``grow_table`` hand a
+  block out at refcount 1, ``incref`` pins it for another holder (a second
+  request sharing a cached prompt prefix, or the prefix index itself), and
+  ``free``/``free_deferred`` DECREMENT — a block only returns to the free
+  list (or enters the deferred fence) when its last reference drops.
+  ``defragment`` never relocates anything (tables keep pointing at the
+  same ids), and a block with live references is by construction not in
+  the free list, so shared (refcount > 1) and index-parked blocks are
+  neither free nor movable; ``alloc`` can never hand out a block with
+  live refs because only the zero-ref transition re-enters the free list.
 * pure jit-able helpers (``scatter_prefill_rows`` / ``scatter_token_window``
   / ``gather_pages`` / ``append_kv`` / ``extend_block_tables`` /
   ``set_table_rows`` / ``set_carry_rows``) — the device-side gather/scatter
@@ -52,7 +63,7 @@ from ..configs.base import ModelConfig
 __all__ = ["BlockPool", "init_kv_pool", "scatter_prefill_row",
            "scatter_prefill_rows", "scatter_token_window", "gather_pages",
            "gather_read_attention", "append_kv", "extend_block_tables",
-           "set_table_rows", "set_carry_rows", "SINK_BLOCK"]
+           "set_table_rows", "set_carry_rows", "copy_blocks", "SINK_BLOCK"]
 
 #: Block id 0 is reserved: never allocated, target of masked-row KV writes.
 SINK_BLOCK = 0
@@ -64,11 +75,15 @@ class BlockPool:
     """Free-list allocator over ``num_blocks`` KV blocks of ``block_size``
     token slots each.
 
-    Invariants (exercised by ``tests/test_kvcache.py``):
+    Invariants (exercised by ``tests/test_kvcache.py`` and
+    ``tests/test_prefix_cache.py``):
 
-    * ``num_free + allocated == num_blocks - 1`` (the sink is neither);
-    * a block id is never handed out twice without an intervening ``free``;
-    * ``free`` of an unallocated (or sink) id raises;
+    * ``num_free + allocated == num_blocks - 1`` (the sink is neither;
+      each allocated id counts ONCE however many references hold it);
+    * a block id is never handed out twice without its refcount dropping
+      to zero through ``free``/``free_deferred`` first;
+    * ``free`` of an unallocated (or sink) id raises — including a second
+      ``free`` after a shared block's LAST reference already dropped;
     * ``alloc`` is all-or-nothing: it returns ``None`` rather than a partial
       allocation when the pool cannot cover the request (the admission
       back-pressure signal).
@@ -85,6 +100,9 @@ class BlockPool:
         # LIFO free list: recently freed blocks are re-used first (warm)
         self._free: List[int] = list(range(num_blocks - 1, SINK_BLOCK, -1))
         self._allocated: set = set()
+        #: live reference count per allocated block (prefix sharing): the
+        #: free paths DECREMENT and only release at zero
+        self._refs: dict = {}
         # deferred-free fence (async decode lookahead): blocks whose owner
         # row may still be WRITTEN by an in-flight compiled chunk sit here —
         # still accounted as allocated, invisible to alloc — until the
@@ -93,6 +111,7 @@ class BlockPool:
         self._deferred_old: List[int] = []
         self._deferred_set: set = set()
         self._g_free = self._g_used = self._g_deferred = None
+        self._g_shared = None
 
     def set_metrics(self, metrics) -> None:
         """Bind (or unbind with None) a :class:`repro.obs.MetricsRegistry`:
@@ -102,10 +121,12 @@ class BlockPool:
         (a handful per engine cycle), so three gauge writes are noise."""
         if metrics is None:
             self._g_free = self._g_used = self._g_deferred = None
+            self._g_shared = None
             return
         self._g_free = metrics.gauge("pool.blocks_free")
         self._g_used = metrics.gauge("pool.blocks_used")
         self._g_deferred = metrics.gauge("pool.blocks_deferred")
+        self._g_shared = metrics.gauge("pool.blocks_shared")
         with self._lock:
             self._note_locked()
 
@@ -115,6 +136,7 @@ class BlockPool:
             self._g_used.set(len(self._allocated))
             self._g_deferred.set(len(self._deferred_young)
                                  + len(self._deferred_old))
+            self._g_shared.set(sum(1 for c in self._refs.values() if c > 1))
 
     # ------------------------------------------------------------- accounting
     @property
@@ -137,7 +159,10 @@ class BlockPool:
 
     # ------------------------------------------------------------- alloc/free
     def alloc(self, n: int) -> Optional[List[int]]:
-        """Take ``n`` blocks, or None (and take nothing) if fewer are free."""
+        """Take ``n`` blocks at refcount 1, or None (and take nothing) if
+        fewer are free. Only the zero-ref transition of ``free`` /
+        ``release_deferred`` re-enters the free list, so a block with live
+        references can never be handed out here."""
         if n < 0:
             raise ValueError("alloc of negative block count")
         with self._lock:
@@ -145,18 +170,53 @@ class BlockPool:
                 return None
             ids = [self._free.pop() for _ in range(n)]
             self._allocated.update(ids)
+            for b in ids:
+                self._refs[b] = 1
             self._note_locked()
             return ids
 
+    def incref(self, ids: Sequence[int]) -> None:
+        """Pin blocks for an additional holder (prefix sharing: a second
+        request's table pointing at cached prompt blocks, or the prefix
+        index parking a completed request's prefix). Deferred blocks are
+        un-pinnable — they are already fenced for release."""
+        with self._lock:
+            for b in ids:
+                if b not in self._allocated or b in self._deferred_set:
+                    raise ValueError(
+                        f"incref of block {b} that is not live "
+                        f"(unallocated, deferred, or the sink)")
+                self._refs[b] += 1
+            self._note_locked()
+
+    def refcount(self, b: int) -> int:
+        """Live references on ``b`` (0 when free/deferred) — the engine's
+        copy-on-write trigger: a write into a block with refcount > 1 must
+        fork it first."""
+        with self._lock:
+            return self._refs.get(b, 0)
+
+    @property
+    def num_shared(self) -> int:
+        """Blocks held by more than one reference."""
+        with self._lock:
+            return sum(1 for c in self._refs.values() if c > 1)
+
     def free(self, ids: Sequence[int]) -> None:
+        """Drop ONE reference per id; a block returns to the free list only
+        when its last reference drops (shared prefix blocks survive their
+        co-holders' retirements)."""
         with self._lock:
             for b in ids:
                 if b not in self._allocated or b in self._deferred_set:
                     raise ValueError(
                         f"free of block {b} that is not allocated "
                         f"(double free, a deferred block, or the sink)")
-                self._allocated.discard(b)
-                self._free.append(b)
+                self._refs[b] -= 1
+                if self._refs[b] == 0:
+                    del self._refs[b]
+                    self._allocated.discard(b)
+                    self._free.append(b)
             self._note_locked()
 
     # ------------------------------------------------- deferred-free fence
@@ -168,15 +228,27 @@ class BlockPool:
         that device work has provably retired. Deferred blocks stay
         accounted as allocated (the ``num_free + num_allocated`` invariant
         holds) but are invisible to :meth:`alloc` / :meth:`grow_table`
-        until TWO :meth:`release_deferred` calls later."""
+        until TWO :meth:`release_deferred` calls later.
+
+        Like :meth:`free` this drops ONE reference per id: a SHARED block
+        (live refs remain — e.g. a preempted row's prefix blocks still
+        held by the prefix index or a co-resident row) is merely
+        unpinned, never fenced — the surviving holders' tables still read
+        it, and nothing in flight can write a shared prefix block (the
+        engine forks before any such write)."""
         with self._lock:
+            fenced = []
             for b in ids:
                 if b not in self._allocated or b in self._deferred_set:
                     raise ValueError(
                         f"deferred free of block {b} that is not allocated "
                         f"(double free, or the reserved sink)")
-                self._deferred_set.add(b)
-            self._deferred_young.extend(ids)
+                self._refs[b] -= 1
+                if self._refs[b] == 0:
+                    del self._refs[b]
+                    self._deferred_set.add(b)
+                    fenced.append(b)
+            self._deferred_young.extend(fenced)
             self._note_locked()
 
     def release_deferred(self) -> int:
@@ -222,7 +294,9 @@ class BlockPool:
     def fragmentation(self) -> float:
         """1 - (longest contiguous free run / free blocks): 0.0 when the
         free ids form one contiguous range, approaching 1.0 as the free set
-        shatters. Paged attention reads through the table so this is a
+        shatters. Only genuinely FREE blocks count: deferred (fenced) and
+        referenced/parked blocks are excluded — they are neither free nor
+        movable. Paged attention reads through the table so this is a
         locality metric, not a correctness one."""
         with self._lock:
             free = sorted(self._free)
@@ -238,8 +312,19 @@ class BlockPool:
         """Order the free list so future allocations hand out ascending,
         contiguous-when-possible id runs; returns the fragmentation metric
         after the compaction. Safe while sequences run: allocated blocks are
-        never moved (tables keep pointing at the same ids)."""
+        never moved (tables keep pointing at the same ids), and blocks with
+        live references — shared prefixes, index-parked blocks — or sitting
+        behind the deferred-free fence are by invariant not in the free
+        list, so the sort cannot disturb them (guarded below: a violation
+        means a refcount bug upstream, better loud than silent)."""
         with self._lock:
+            bad = [b for b in self._free
+                   if b in self._refs or b in self._deferred_set
+                   or b == SINK_BLOCK]
+            if bad:
+                raise RuntimeError(
+                    f"free list holds live/deferred/sink blocks {bad}: "
+                    "refcount accounting is corrupt")
             self._free.sort(reverse=True)  # LIFO pop() yields ascending ids
         return self.fragmentation()
 
@@ -370,6 +455,21 @@ def set_carry_rows(lengths: jnp.ndarray, last: jnp.ndarray, rem: jnp.ndarray,
     return (lengths.at[rows].set(new_lengths),
             last.at[rows].set(new_last),
             rem.at[rows].set(new_rem))
+
+
+def copy_blocks(pool: jnp.ndarray, srcs: jnp.ndarray, dsts: jnp.ndarray
+                ) -> jnp.ndarray:
+    """Copy whole KV blocks ``srcs[i] -> dsts[i]`` across every layer in ONE
+    gather+scatter launch — the copy-on-write FORK primitive of prefix
+    caching: before a row's first divergent write into a shared block, the
+    engine clones the block and repoints the row's table at the clone, so
+    co-holders keep reading the original bits.
+
+    pool: (L, 2, N, KV, bs, hd); srcs/dsts: (M,) int32. Call sites pad with
+    ``SINK_BLOCK -> SINK_BLOCK`` repeats (the sink's contents are garbage by
+    contract, and a self-copy is idempotent) to keep compiled shapes fixed.
+    """
+    return pool.at[:, :, dsts].set(pool[:, :, srcs])
 
 
 def gather_pages(pool_l: jnp.ndarray, tables: jnp.ndarray):

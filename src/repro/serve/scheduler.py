@@ -204,15 +204,18 @@ class Scheduler:
     # ------------------------------------------------------------- admission
     def try_admit(self, free_slots: int,
                   blocks_free: Optional[int],
-                  blocks_for: Optional[Callable[[int], int]] = None
+                  need_for: Optional[Callable[[ServeRequest], int]] = None
                   ) -> Optional[List[ServeRequest]]:
         """Pop the next admission group, or None (taking nothing) when the
         oldest waiting request cannot be covered — the engine turns that
         into either a deferred-token park or a plain decode-pump cycle.
 
-        The block budget covers each member's PROMPT footprint only
-        (``blocks_for(prompt_len)``): decode-time blocks are granted lazily
-        by the engine as rows grow. ``blocks_free=None`` skips block
+        The block budget charges each member ``need_for(req)`` blocks — the
+        request's PROMPT footprint only, minus any prompt blocks the
+        engine's prefix cache already holds (a cache-hit admission budgets
+        just its uncached suffix, which is exactly why shared-prefix
+        traffic admits earlier under load). Decode-time blocks are granted
+        lazily by the engine as rows grow. ``blocks_free=None`` skips block
         budgeting entirely (the SSM/hybrid slot-pool path, whose recurrent
         state is pre-allocated per slot). The engine allocates the group's
         blocks AFTER this pop (one all-or-nothing ``BlockPool.alloc``); if
@@ -227,7 +230,7 @@ class Scheduler:
             cap = min(self.max_admit, free_slots)
             for req in itertools.islice(self._queue, cap):
                 if budget is not None:
-                    need = blocks_for(req.prompt_len)
+                    need = need_for(req)
                     if need > budget:
                         break
                     budget -= need

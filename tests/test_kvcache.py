@@ -235,3 +235,77 @@ def test_deferred_free_keeps_invariant_and_defragment():
     assert bp.num_deferred == 1
     assert bp.release_deferred() == 1
     assert bp.num_free == bp.num_blocks - 1
+
+
+# --------------------------------------------------- refcounts (prefix CoW)
+def test_refcount_lifecycle_and_shared_accounting():
+    """alloc -> rc 1, incref pins, each free drops ONE ref, release only at
+    zero; num_shared counts rc>1 blocks; the num_free+num_allocated
+    invariant never sees a shared block twice."""
+    bp = BlockPool(num_blocks=9, block_size=4)
+    ids = bp.alloc(3)
+    assert all(bp.refcount(b) == 1 for b in ids)
+    assert bp.num_shared == 0
+    bp.incref(ids[:2])
+    assert bp.refcount(ids[0]) == 2 and bp.num_shared == 2
+    assert bp.num_free + bp.num_allocated == bp.num_blocks - 1
+    bp.free(ids)                       # ids[2] released, ids[0:2] survive
+    assert bp.num_free == 6 and bp.num_allocated == 2
+    assert bp.refcount(ids[2]) == 0
+    got = bp.alloc(6)                  # never re-hands a live-ref block
+    assert ids[0] not in got and ids[1] not in got
+    bp.free(got)
+    bp.free(ids[:2])
+    assert bp.num_free == bp.num_blocks - 1
+
+
+def test_refcount_free_deferred_last_ref_only_fences():
+    """free_deferred on a shared block just unpins; the LAST reference is
+    what enters the fence — and a parked co-holder keeps the block out of
+    defragment's way the whole time."""
+    bp = BlockPool(num_blocks=6, block_size=4)
+    ids = bp.alloc(2)
+    bp.incref(ids)
+    bp.free_deferred(ids)              # co-holder remains: no fence
+    assert bp.num_deferred == 0
+    assert all(bp.refcount(b) == 1 for b in ids)
+    bp.defragment()                    # live-ref blocks not in free list
+    bp.free_deferred(ids)              # last refs: fenced now
+    assert bp.num_deferred == 2
+    with pytest.raises(ValueError, match="not live"):
+        bp.incref(ids[:1])             # deferred blocks are un-pinnable
+    bp.release_deferred()
+    assert bp.release_deferred() == 2
+    assert bp.num_free == bp.num_blocks - 1
+
+
+def test_defragment_raises_on_live_block_in_free_list():
+    """Regression for the refcount-era defragment: a live or fenced id in
+    the free list means the accounting is corrupt — sort must refuse
+    instead of silently blessing a block some table still reads."""
+    bp = BlockPool(num_blocks=6, block_size=4)
+    ids = bp.alloc(2)
+    bp._free.append(ids[1])            # simulate upstream corruption
+    with pytest.raises(RuntimeError, match="corrupt"):
+        bp.defragment()
+    bp._free.remove(ids[1])
+    bp.free(ids)
+    assert bp.defragment() == 0.0
+
+
+def test_copy_blocks_forks_without_touching_source():
+    """The CoW device primitive: dst pages become bit-copies of src pages,
+    src pages and every other page are untouched, and the SINK->SINK
+    padding convention is a harmless self-copy."""
+    from repro.serve.kvcache import copy_blocks
+    rng = np.random.default_rng(0)
+    pool = jnp.asarray(rng.normal(size=(2, 2, 6, 1, 4, 3)), jnp.float32)
+    before = np.asarray(pool)
+    out = np.asarray(copy_blocks(
+        pool, jnp.asarray([2, 4, SINK_BLOCK], jnp.int32),
+        jnp.asarray([5, 1, SINK_BLOCK], jnp.int32)))
+    np.testing.assert_array_equal(out[:, :, 5], before[:, :, 2])
+    np.testing.assert_array_equal(out[:, :, 1], before[:, :, 4])
+    for untouched in (0, 2, 3, 4):
+        np.testing.assert_array_equal(out[:, :, untouched],
+                                      before[:, :, untouched])

@@ -1,0 +1,457 @@
+"""Prefix caching: copy-on-write KV block sharing with reuse-aware eviction.
+
+Three layers, matching the feature's own:
+
+* :class:`BlockPool` refcount invariants — sharing must never let a block
+  reach the free list (or the deferred fence) while a reference survives,
+  and double frees past the LAST reference must stay loud;
+* :class:`PrefixCache` trie properties — longest chained match, the
+  ``prompt_len - 1`` cap, hash-collision disambiguation, leaf-first
+  reuse-scored eviction and the parent-before-child invariant;
+* engine-level copy-on-write parity — cache-hit admissions (full-chunk and
+  forked partial tail, sync AND async decode) must emit greedy tokens
+  bit-identical to the cache-off engine and the contiguous reference
+  (``paged_impl="gather"`` pins the oracle read path, so equality is
+  structural), including under preempt-while-shared pressure and an
+  artificially triggered ``_cow_guard`` fork.
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serve.engine import ServeEngine
+from repro.serve.kvcache import BlockPool
+from repro.serve.prefix import PrefixCache
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("stablelm-1.6b").smoke()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _invariant(pool) -> bool:
+    """Each allocated id counts once however many references hold it."""
+    return pool.num_free + pool.num_allocated == pool.num_blocks - 1
+
+
+def _reference(cfg, params, prompt, max_new):
+    """Greedy decode through the CONTIGUOUS cache — the pre-paged math."""
+    import jax.numpy as jnp
+    logits, cache = lm.prefill(cfg, params, jnp.asarray(prompt[None]),
+                               max_len=len(prompt) + max_new)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    out = [int(tok[0])]
+    for _ in range(max_new - 1):
+        logits, cache = lm.decode_step(cfg, params, cache, tok)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(int(tok[0]))
+    return out
+
+
+# ===================================================== pool refcount layer
+def test_shared_block_survives_coholder_free():
+    pool = BlockPool(8, 4)
+    ids = pool.alloc(2)
+    pool.incref(ids)                       # second holder
+    assert all(pool.refcount(b) == 2 for b in ids)
+    assert pool.num_shared == 2
+    pool.free(ids)                         # first holder retires
+    assert all(pool.refcount(b) == 1 for b in ids)
+    assert pool.num_free == 5              # NOT released
+    assert _invariant(pool)
+    pool.free(ids)                         # last reference drops
+    assert pool.num_free == 7
+    assert all(pool.refcount(b) == 0 for b in ids)
+    with pytest.raises(ValueError):        # free past the last ref: loud
+        pool.free(ids[:1])
+    assert _invariant(pool)
+
+
+def test_alloc_never_hands_out_live_ref_blocks():
+    pool = BlockPool(6, 4)
+    ids = pool.alloc(3)
+    pool.incref(ids[:1])
+    pool.free(ids)                         # ids[0] keeps one live ref
+    got = pool.alloc(5)
+    assert got is None                     # all-or-nothing: ids[0] held
+    got = pool.alloc(4)
+    assert got is not None and ids[0] not in got
+    assert _invariant(pool)
+    pool.free(got)
+    pool.free(ids[:1])
+    assert pool.num_free == pool.num_blocks - 1
+
+
+def test_free_deferred_shared_only_unpins():
+    """free_deferred of a SHARED block drops one ref without fencing it:
+    surviving holders' tables still read it. Only the LAST reference
+    enters the fence."""
+    pool = BlockPool(8, 4)
+    ids = pool.alloc(2)
+    pool.incref(ids)
+    pool.free_deferred(ids)                # shared: unpin, no fence
+    assert pool.num_deferred == 0
+    assert all(pool.refcount(b) == 1 for b in ids)
+    pool.free_deferred(ids)                # last ref: fenced now
+    assert pool.num_deferred == 2
+    assert all(pool.refcount(b) == 0 for b in ids)
+    with pytest.raises(ValueError):
+        pool.incref(ids[:1])               # deferred blocks un-pinnable
+    assert _invariant(pool)
+    pool.release_deferred()
+    assert pool.release_deferred() == 2
+    assert pool.num_free == pool.num_blocks - 1
+
+
+def test_incref_of_free_block_raises():
+    pool = BlockPool(4, 4)
+    ids = pool.alloc(1)
+    pool.free(ids)
+    with pytest.raises(ValueError):
+        pool.incref(ids)
+    with pytest.raises(ValueError):
+        pool.incref([0])                   # the sink is never live
+
+
+def test_defragment_guards_refcount_corruption():
+    """A live/deferred/sink id smuggled into the free list is a refcount
+    bug upstream — defragment detects it loudly instead of reordering a
+    block some table still points at."""
+    pool = BlockPool(8, 4)
+    ids = pool.alloc(2)
+    pool.defragment()                      # clean pool: fine
+    pool._free.append(ids[0])              # simulate the corruption
+    with pytest.raises(RuntimeError, match="corrupt"):
+        pool.defragment()
+    pool._free.remove(ids[0])
+    pool._free.append(0)
+    with pytest.raises(RuntimeError, match="corrupt"):
+        pool.defragment()
+    pool._free.remove(0)
+    pool.free(ids)
+    assert pool.defragment() == 0.0
+
+
+def test_fragmentation_excludes_parked_and_deferred():
+    """Only genuinely FREE blocks shape the fragmentation metric: parked
+    (referenced) and fenced blocks are neither free nor movable."""
+    pool = BlockPool(10, 4)
+    ids = pool.alloc(9)
+    pool.free([ids[0], ids[2], ids[4]])    # shattered free set
+    pool.incref([ids[6]])
+    pool.free([ids[6]])                    # parked: one live ref remains
+    pool.free_deferred([ids[8]])           # fenced
+    frag = pool.fragmentation()
+    assert 0.0 <= frag <= 1.0
+    free_before = pool.num_free
+    pool.defragment()                      # must not touch parked/fenced
+    assert pool.num_free == free_before
+    assert pool.refcount(ids[6]) == 1
+    assert pool.num_deferred == 1
+
+
+# ========================================================= prefix trie layer
+def _tok(*vals):
+    return np.asarray(vals, np.int32)
+
+
+def test_register_then_match_longest_prefix():
+    pool = BlockPool(16, 4)
+    prompt = np.arange(1, 13, dtype=np.int32)        # 12 tokens = 3 chunks
+    blocks = pool.alloc(3)
+    px = PrefixCache(pool)
+    assert px.register(prompt, blocks) == 3
+    assert px.num_nodes == 3
+    # register holds one index ref per block: owner's free PARKS them
+    pool.free(blocks)
+    assert px.num_parked == 3
+    assert _invariant(pool)
+    # a longer prompt sharing the prefix matches the whole chain
+    longer = np.concatenate([prompt, _tok(99, 98)])
+    assert px.peek(longer) == 12
+    hit = px.match_and_pin(longer)
+    assert hit.blocks == blocks and hit.tokens == 12
+    assert hit.partial_block is None
+    assert all(pool.refcount(b) == 2 for b in blocks)
+    px.unpin(hit.blocks)
+    # a diverging prompt only matches up to the divergence chunk
+    div = np.concatenate([prompt[:8], _tok(77, 77, 77, 77, 77)])
+    assert px.peek(div) == 8
+    assert px.stats["hits"] == 1
+
+
+def test_match_caps_at_prompt_len_minus_one():
+    """At least one prompt token must be COMPUTED (its logits seed the
+    first output token), so an exactly-covered prompt matches its last
+    chunk only PARTIALLY — as a copy-on-write fork source."""
+    pool = BlockPool(16, 4)
+    prompt = np.arange(1, 9, dtype=np.int32)         # 8 tokens = 2 chunks
+    blocks = pool.alloc(2)
+    px = PrefixCache(pool)
+    px.register(prompt, blocks)
+    pool.free(blocks)                                # owner retires: parked
+    hit = px.match_and_pin(prompt)                   # the same prompt again
+    assert hit.tokens == 7                           # capped at plen - 1
+    assert hit.blocks == blocks[:1]
+    assert hit.partial_block == blocks[1] and hit.partial_len == 3
+    assert pool.refcount(blocks[1]) == 2             # partial is pinned too
+    px.unpin(hit.blocks + [hit.partial_block])
+    assert px.num_parked == 2
+
+
+def test_partial_tail_best_divergence():
+    """The partial match is the child extending the match FURTHEST —
+    token-compared, not hash-compared."""
+    pool = BlockPool(16, 4)
+    px = PrefixCache(pool)
+    a = np.concatenate([_tok(1, 2, 3, 4), _tok(5, 6, 7, 8)])
+    b = np.concatenate([_tok(1, 2, 3, 4), _tok(5, 9, 9, 9)])
+    ba, bb = pool.alloc(2), pool.alloc(2)
+    px.register(a, ba)
+    px.register(b, bb)                     # shares node for chunk 0
+    assert px.num_nodes == 3               # chunk0 + two divergent tails
+    probe = np.concatenate([_tok(1, 2, 3, 4), _tok(5, 6, 7, 0), _tok(0)])
+    hit = px.match_and_pin(probe)
+    assert hit.tokens == 7                 # chunk0 + 3 tokens of a's tail
+    assert hit.partial_block == ba[1] and hit.partial_len == 3
+    px.unpin(hit.blocks + [hit.partial_block])
+    pool.free(ba)
+    pool.free(bb)
+
+
+def test_hash_collisions_disambiguated_by_tokens():
+    """Every chunk hashing to the same bucket still matches by token
+    comparison — collisions cost a chain scan, never a wrong block."""
+    pool = BlockPool(16, 4)
+    px = PrefixCache(pool, hash_fn=lambda parent, chunk: 7)
+    a = np.arange(1, 9, dtype=np.int32)
+    b = np.arange(51, 59, dtype=np.int32)
+    ba, bb = pool.alloc(2), pool.alloc(2)
+    px.register(a, ba)
+    px.register(b, bb)
+    assert px.num_nodes == 4
+    ha = px.match_and_pin(np.concatenate([a, _tok(99)]))
+    hb = px.match_and_pin(np.concatenate([b, _tok(99)]))
+    assert ha.blocks == ba and hb.blocks == bb
+    px.unpin(ha.blocks)
+    px.unpin(hb.blocks)
+    pool.free(ba)
+    pool.free(bb)
+
+
+def test_register_skips_existing_nodes():
+    """Re-registering a cached prefix creates nothing: the canonical block
+    stays, the new row's duplicate simply retires with the row."""
+    pool = BlockPool(16, 4)
+    px = PrefixCache(pool)
+    prompt = np.arange(1, 9, dtype=np.int32)
+    first, second = pool.alloc(2), pool.alloc(2)
+    assert px.register(prompt, first) == 2
+    assert px.register(prompt, second) == 0
+    assert px.num_nodes == 2
+    pool.free(first)                       # parked via the index refs
+    pool.free(second)                      # fully released: never indexed
+    assert px.num_parked == 2
+    assert pool.num_free == pool.num_blocks - 1 - 2
+
+
+def test_evict_leaf_first_keeps_parent_chains():
+    pool = BlockPool(16, 4)
+    px = PrefixCache(pool)
+    prompt = np.arange(1, 17, dtype=np.int32)        # 4-chunk chain
+    blocks = pool.alloc(4)
+    px.register(prompt, blocks)
+    pool.free(blocks)                      # all parked
+    assert px.evict(1) == 1                # only the leaf is a candidate
+    assert px.num_nodes == 3
+    assert px.check_parent_invariant()
+    assert px.peek(prompt) == 12           # surviving chain still matches
+    assert px.evict(10) == 3               # drains leaf-by-leaf
+    assert px.num_nodes == 0
+    assert pool.num_free == pool.num_blocks - 1
+
+
+def test_evict_reuse_score_takes_coldest():
+    """Two parked single-chunk entries: the one with hits (recently used)
+    outlives the never-hit one — reuse value, not age alone."""
+    pool = BlockPool(16, 4)
+    px = PrefixCache(pool)
+    hot = np.arange(1, 6, dtype=np.int32)
+    cold = np.arange(51, 56, dtype=np.int32)
+    bh, bc = pool.alloc(1), pool.alloc(1)
+    px.register(hot, bh)
+    px.register(cold, bc)
+    pool.free(bh)
+    pool.free(bc)
+    for _ in range(3):                     # bump hot's reuse stats
+        h = px.match_and_pin(hot)
+        px.unpin(h.blocks)
+    time.sleep(0.01)                       # recency separation
+    assert px.evict(1) == 1
+    assert px.peek(hot) == 4               # hot survived
+    assert px.peek(cold) == 0              # cold evicted
+    assert px.evict(1) == 1                # pressure keeps draining: hot too
+
+
+def test_pinned_chains_untouchable_by_eviction():
+    pool = BlockPool(16, 4)
+    px = PrefixCache(pool)
+    prompt = np.arange(1, 9, dtype=np.int32)
+    blocks = pool.alloc(2)
+    px.register(prompt, blocks)
+    pool.free(blocks)
+    hit = px.match_and_pin(np.concatenate([prompt, _tok(9)]))
+    assert px.evict(2) == 0                # both blocks pinned by the hit
+    assert px.num_nodes == 2
+    px.unpin(hit.blocks)
+    assert px.evict(2) == 2
+
+
+def test_preempt_while_shared_pool_emulation():
+    """The engine's preempt-while-shared flow at the pool+index level:
+    A registers and retires (prefix parked); B pins the chain and adds its
+    own suffix; B is preempted (free_deferred of its WHOLE table). The
+    suffix blocks enter the fence; the shared prefix merely drops B's pin
+    and stays parked — ready for B's re-admission to hit again."""
+    pool = BlockPool(16, 4)
+    px = PrefixCache(pool)
+    prompt = np.arange(1, 13, dtype=np.int32)        # 3 chunks
+    a_blocks = pool.alloc(3)
+    px.register(prompt, a_blocks)
+    pool.free(a_blocks)                    # A retires: parked
+    assert px.num_parked == 3
+
+    b_prompt = np.concatenate([prompt, _tok(91, 92, 93, 94, 95)])
+    hit = px.match_and_pin(b_prompt)
+    assert hit.blocks == a_blocks
+    suffix = pool.alloc(2)
+    table = list(hit.blocks) + suffix
+    # preemption under async decode: the whole table defers ONE ref each
+    pool.free_deferred(table)
+    assert pool.num_deferred == 2          # only B's own suffix fenced
+    assert all(pool.refcount(b) == 1 for b in a_blocks)
+    assert px.num_parked == 3              # shared prefix survived intact
+    assert _invariant(pool)
+    # re-admission hits the same chain again
+    assert px.peek(b_prompt) == 12
+    pool.release_deferred()
+    pool.release_deferred()
+    assert pool.num_free + px.num_parked == pool.num_blocks - 1
+
+
+# ======================================================== engine CoW layer
+@pytest.mark.parametrize("async_decode", [False, True])
+def test_engine_hit_parity_and_savings(setup, async_decode):
+    """Six prompts sharing a 40-token prefix: later admissions HIT the
+    chain the first group registered, admission budgets shrink, and greedy
+    tokens stay bit-identical to the cache-off engine on the oracle."""
+    cfg, params = setup
+    rng = np.random.default_rng(11)
+    common = rng.integers(1, cfg.vocab_size, size=40).astype(np.int32)
+    prompts = [np.concatenate([common, rng.integers(
+        1, cfg.vocab_size, size=6).astype(np.int32)]) for _ in range(6)]
+    # max_batch=4 splits the 6 prompts into >= 2 admission groups: group 1
+    # is cold and registers the chain, later groups must HIT it
+    kw = dict(decode_chunk=2, block_size=8, prefill_chunk=16, max_batch=4,
+              paged_impl="gather", async_decode=async_decode)
+    with ServeEngine(cfg, params, prefix_cache=False, **kw) as eng:
+        base = eng.generate(prompts, max_new=8)
+    with ServeEngine(cfg, params, prefix_cache=True, **kw) as eng:
+        outs = eng.generate(prompts, max_new=8)
+        stats = dict(eng.stats)
+        parked = eng._prefix.num_parked
+        assert eng._pool.num_free + parked == eng._pool.num_blocks - 1
+    for b, o in zip(base, outs):
+        np.testing.assert_array_equal(b, o)
+    assert stats["prefix_hits"] >= 1
+    assert stats["prefix_tokens_saved"] >= 40
+    assert parked >= 5                     # the common chain stays parked
+
+
+@pytest.mark.parametrize("async_decode", [False, True])
+def test_engine_partial_tail_cow_fork_parity(setup, async_decode):
+    """B's prompt shares A's prefix MID-BLOCK: admission forks A's cached
+    tail block (device copy) before B's own prefill writes land in it, so
+    A's bits survive and both streams match the cache-off engine."""
+    cfg, params = setup
+    rng = np.random.default_rng(12)
+    common = rng.integers(1, cfg.vocab_size, size=44).astype(np.int32)
+    a = np.concatenate([common, rng.integers(
+        1, cfg.vocab_size, size=12).astype(np.int32)])
+    b = np.concatenate([common, rng.integers(
+        1, cfg.vocab_size, size=12).astype(np.int32)])
+    kw = dict(decode_chunk=2, block_size=8, prefill_chunk=16,
+              paged_impl="gather", async_decode=async_decode)
+    with ServeEngine(cfg, params, prefix_cache=False, **kw) as eng:
+        base = [eng.generate([a], max_new=6)[0],
+                eng.generate([b], max_new=6)[0]]
+    with ServeEngine(cfg, params, prefix_cache=True, **kw) as eng:
+        outs = [eng.generate([a], max_new=6)[0],   # A registers the chain
+                eng.generate([b], max_new=6)[0]]   # B hits + forks
+        stats = dict(eng.stats)
+    for x, y in zip(base, outs):
+        np.testing.assert_array_equal(x, y)
+    assert stats["cow_forks"] >= 1
+    assert stats["prefix_hits"] >= 1
+    # 5 full chunks (40) + a partial tail (44..47 land mid-block)
+    assert stats["prefix_tokens_saved"] >= 41
+
+
+def test_engine_preempt_while_shared_parity(setup):
+    """Tight pool, shared prompts: growth pressure preempts a row whose
+    table points at SHARED prefix blocks. The preemption must only unpin
+    them (co-holders and the index keep reading them), the replay must
+    re-hit, and every stream must match the contiguous reference."""
+    cfg, params = setup
+    rng = np.random.default_rng(13)
+    common = rng.integers(1, cfg.vocab_size, size=8).astype(np.int32)
+    prompts = [np.concatenate([common, rng.integers(
+        1, cfg.vocab_size, size=4).astype(np.int32)]) for _ in range(2)]
+    with ServeEngine(cfg, params, decode_chunk=4, kv_blocks=10,
+                     block_size=4, paged_impl="gather",
+                     prefix_cache=True) as eng:
+        outs = eng.generate(prompts, max_new=16)
+        stats = dict(eng.stats)
+        parked = eng._prefix.num_parked
+        assert eng._pool.num_free + parked == eng._pool.num_blocks - 1
+    for p, o in zip(prompts, outs):
+        assert o.tolist() == _reference(cfg, params, p, 16)
+    assert stats["preempted"] >= 1
+
+
+def test_engine_cow_guard_forks_artificially_shared_block(setup):
+    """_cow_guard is defense-in-depth: the engine's own flows never write
+    a shared block, so trigger it by hand — pin a decoding row's current
+    write block from outside and verify the engine forks (device copy +
+    table repoint) instead of corrupting the co-holder's bits."""
+    cfg, params = setup
+    prompt = np.arange(1, 5, dtype=np.int32)
+    with ServeEngine(cfg, params, decode_chunk=1, block_size=16,
+                     paged_impl="gather", prefix_cache=True) as eng:
+        req = eng.submit(prompt, max_new=48)
+        # seat + first block: all 48 decode writes land in blocks[0]
+        deadline = time.time() + 60
+        shared = None
+        while time.time() < deadline and shared is None:
+            for blocks in eng._slot_blocks:
+                if blocks:
+                    eng._pool.incref([blocks[0]])
+                    shared = blocks[0]
+                    break
+            time.sleep(0.001)
+        assert shared is not None, "row never seated"
+        out = eng.result(req, timeout=240)
+        stats = dict(eng.stats)
+        # our pin still holds the ORIGINAL block; the row forked away
+        assert eng._pool.refcount(shared) == 1
+        eng._pool.free([shared])
+        assert eng._pool.num_free + eng._prefix.num_parked \
+            == eng._pool.num_blocks - 1
+    assert stats["cow_forks"] >= 1
+    assert out.tolist() == _reference(cfg, params, prompt, 48)

@@ -30,6 +30,15 @@ def setup():
     return cfg, params
 
 
+def _pool_restored(eng) -> bool:
+    """Every block found its way back to the pool — modulo blocks the
+    prefix cache keeps PARKED for reuse when the suite runs under the
+    ``REPRO_PREFIX_CACHE=1`` CI leg (parked blocks are index-held and
+    evictable on pressure, not leaked)."""
+    parked = eng._prefix.num_parked if eng._prefix is not None else 0
+    return eng._pool.num_free + parked == eng._pool.num_blocks - 1
+
+
 def _reference(cfg, params, prompt, max_new):
     """Greedy decode through the CONTIGUOUS cache — the pre-paged math."""
     logits, cache = lm.prefill(cfg, params, jnp.asarray(prompt[None]),
@@ -119,8 +128,8 @@ def test_kv_exhaustion_defers_admission_and_recovers(setup):
         assert eng.stats["admit_parks"] >= 1
         pl = eng._pipeline
         assert pl.num_token_deferrals == pl.num_resumes >= 1
-        # every block returned to the pool
-        assert eng._pool.num_free == eng._pool.num_blocks - 1
+        # every block returned to the pool (or parked by the prefix index)
+        assert _pool_restored(eng)
 
 
 def test_engine_goes_idle_and_rearms_without_rebuild(setup):
@@ -184,9 +193,14 @@ def test_chunked_prefill_overlaps_resident_decode(setup):
     rng = np.random.default_rng(3)
     pa = rng.integers(1, cfg.vocab_size, size=4).astype(np.int32)
     pb = rng.integers(1, cfg.vocab_size, size=20).astype(np.int32)
+    # prefix_cache pinned OFF: this test asserts the COLD stage-log shape
+    # (window 0 in the prefill stage, decode events on both sides of the
+    # streamed windows). With the cache on, the warm-up registers pa and
+    # the re-submitted ra becomes a hit whose tiny suffix streams as a
+    # prefill_chunk before any decode event — a different, valid schedule.
     with ServeEngine(cfg, params, decode_chunk=2, block_size=4,
                      prefill_chunk=8, paged_impl="gather",
-                     record_stages=True) as eng:
+                     record_stages=True, prefix_cache=False) as eng:
         assert len(pb) > eng.decode_chunk * eng._pool.block_size
         eng.generate([pa], max_new=3)   # warm-up: compile the programs
         base = len(eng.stage_log)
@@ -264,8 +278,8 @@ def test_prompt_only_admission_grows_and_preempts(setup):
         assert eng.stats["preempted"] >= 1
         for p, o in zip(prompts, outs):
             assert o.tolist() == _reference(cfg, params, p, 16)
-        # every block found its way back to the pool
-        assert eng._pool.num_free == eng._pool.num_blocks - 1
+        # every block found its way back to the pool (or parked for reuse)
+        assert _pool_restored(eng)
 
 
 @pytest.mark.parametrize("arch", ["falcon-mamba-7b", "zamba2-1.2b"])
