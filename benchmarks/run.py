@@ -19,6 +19,9 @@ serve   — continuous-batching engine under Poisson arrivals vs the
           --prefix-share swaps in the shared-prefix workload (cold vs
           warm prefix cache over one trace: hit-rate, tokens saved,
           admission/TTFT p50/p99 deltas)
+serve_slo — SLO-aware overload control: tier-0 tail TTFT uncontended vs
+          under a tier-1 best-effort flood (shedding, queue-deadline
+          expiry, cost-model preemption); honors --quick
 paged_decode — gather-free paged decode read path vs the gather oracle
           across pool occupancies; honors --quick
 decode_overlap — async decode lookahead vs the synchronous decode loop:
@@ -33,8 +36,9 @@ Each completed suite drops ``BENCH_<suite>.json`` into --bench-dir
 metrics (``tok_per_s`` / ``p50_ms`` / ``p99_ms`` where a suite reports
 them), and provenance (git sha + ISO-8601 UTC timestamp) — the
 machine-readable perf trajectory that used to exist only as stdout CSV.
-The serve and decode_overlap suites also write their run's Chrome
-trace-event JSON (``TRACE_<suite>.json``, Perfetto-loadable) alongside.
+The serve, serve_slo and decode_overlap suites also write their run's
+Chrome trace-event JSON (``TRACE_<suite>.json``, Perfetto-loadable)
+alongside.
 """
 from __future__ import annotations
 
@@ -111,7 +115,7 @@ def main() -> None:
                    fig17_conditional_memory, fig21_incremental_timing,
                    obs_overhead_gate, paged_decode_microbench,
                    pipeline_throughput, roofline_report, serve_continuous,
-                   table2_task_overhead)
+                   serve_slo, table2_task_overhead)
 
     # trace artifacts land next to the BENCH_*.json they belong to
     os.makedirs(args.bench_dir, exist_ok=True)
@@ -135,6 +139,8 @@ def main() -> None:
             serve_continuous.bench(
                 quick=args.quick, prompt_dist=args.prompt_dist,
                 trace_path=_trace("serve"))),
+        "serve_slo": lambda: serve_slo.bench(
+            quick=args.quick, trace_path=_trace("serve_slo")),
         "paged_decode":
             lambda: paged_decode_microbench.bench(quick=args.quick),
         "decode_overlap":

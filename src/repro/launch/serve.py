@@ -61,6 +61,32 @@ def main() -> None:
     ap.add_argument("--per-call", action="store_true",
                     help="use the generate() batch-call shim instead of "
                          "submit/result")
+    ap.add_argument("--priority", type=int, default=0,
+                    help="scheduling tier for the submitted requests "
+                         "(0 = highest/SLO tier; larger = best-effort)")
+    ap.add_argument("--deadline", type=float, default=None, metavar="S",
+                    help="per-request deadline in seconds (expired "
+                         "requests fail typed DeadlineExceeded)")
+    ap.add_argument("--tier-target", action="append", default=None,
+                    metavar="TIER=SHARE",
+                    help="guaranteed minimum admission share for a tier "
+                         "under sustained higher-tier load (repeatable, "
+                         "e.g. --tier-target 1=0.25)")
+    ap.add_argument("--shed-budget", type=float, default=None, metavar="S",
+                    help="load-shedding queue-wait budget (seconds, all "
+                         "tiers): submit() raises Overloaded when the "
+                         "estimated wait exceeds it. Unset defers to "
+                         "REPRO_SHED_BUDGET_S")
+    ap.add_argument("--watchdog", type=float, default=None, metavar="S",
+                    help="engine watchdog budget: fail all futures typed "
+                         "WatchdogTimeout when a busy engine makes no "
+                         "progress for S seconds. Unset defers to "
+                         "REPRO_WATCHDOG_S")
+    ap.add_argument("--fault-inject", default=None, metavar="SPEC",
+                    help="deterministic fault-injection spec (see "
+                         "repro.serve.faultinject), e.g. "
+                         "'grow_fail:p=0.05,seed=11'. Unset defers to "
+                         "REPRO_FAULT_INJECT")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--stats-interval", type=float, default=None,
                     help="print a one-line runtime stats summary every N "
@@ -89,11 +115,22 @@ def main() -> None:
     if args.stats_interval is not None:
         logger = StatsLogger(obs.metrics, interval=args.stats_interval)
 
+    tier_targets = None
+    if args.tier_target:
+        tier_targets = {}
+        for spec in args.tier_target:
+            tier, _, share = spec.partition("=")
+            tier_targets[int(tier)] = float(share)
+
     with ServeEngine(cfg, params, decode_chunk=args.decode_chunk,
                      prefill_chunk=args.prefill_chunk,
                      kv_blocks=args.kv_blocks,
                      block_size=args.block_size,
                      async_decode=args.async_decode,
+                     tier_targets=tier_targets,
+                     shed_budget_s=args.shed_budget,
+                     watchdog_s=args.watchdog,
+                     fault_inject=args.fault_inject,
                      obs=obs) as eng:
         if logger is not None:
             logger.start()
@@ -106,7 +143,9 @@ def main() -> None:
             # for attention models, the slot-state pool for SSM/hybrid
             reqs = []
             for p in prompts:
-                reqs.append(eng.submit(p, max_new=args.max_new))
+                reqs.append(eng.submit(p, max_new=args.max_new,
+                                       priority=args.priority,
+                                       deadline_s=args.deadline))
                 if args.stagger:
                     time.sleep(args.stagger)
             outs = [eng.result(r, timeout=600.0) for r in reqs]

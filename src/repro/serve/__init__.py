@@ -4,9 +4,19 @@
   (``submit()`` / ``result()``; ``generate()`` compatibility shim), serving
   EVERY architecture: attention models through the paged KV pool, SSM and
   hybrid models (mamba, zamba2) through a fixed-slot recurrent-state pool;
-* :mod:`.scheduler` — request queue + FIFO admission control (no length
-  buckets) budgeted on prompt-only footprints (minus any cached-prefix
-  blocks when prefix caching is on);
+* :mod:`.scheduler` — TIERED request queues + admission control (no
+  length buckets) budgeted on prompt-only footprints (minus any
+  cached-prefix blocks when prefix caching is on): strict priority
+  across tiers with per-tier FIFO, optional guaranteed best-effort
+  admission shares (``tier_targets``), queue-deadline expiry and lazy
+  cancellation sweeps;
+* :mod:`.errors`    — the typed failure vocabulary (``ServeError`` and
+  subclasses: ``Overloaded``, ``DeadlineExceeded``, ``RequestCancelled``,
+  ``RowFailed``, ``WatchdogTimeout``, ``EngineClosed``) that
+  ``result()`` re-raises directly;
+* :mod:`.faultinject` — the deterministic fault-injection harness
+  (``REPRO_FAULT_INJECT`` / ``ServeEngine(fault_inject=...)``; seeded
+  per-site schedules, see ``docs/robustness.md``);
 * :mod:`.kvcache`   — paged KV-cache pool (REFCOUNTED block allocator with
   mid-decode ``grow_table`` + jit-able fused K/V scatters through
   per-sequence block tables, including the chunked-prefill
@@ -37,10 +47,35 @@ token counts instead of worst-case reservations:
 * **Phase 2 — grow mid-decode.** Every ``block_size`` generated tokens a
   row crosses into a new block; the decode stage grants it lazily
   (``BlockPool.grow_table`` + an in-place device-side table-extension
-  scatter). If the pool is exhausted, the YOUNGEST resident row is
-  preempted: its blocks free immediately, its request re-queues at the
-  head of the line (greedy decode is deterministic, so the re-run emits
-  identical tokens) — back-pressure degrades to queueing, never deadlock.
+  scatter). If the pool is exhausted, the best COST-MODEL victim is
+  preempted — best-effort tier first, then least generated work lost
+  per block reclaimed, prior preemptions and age as tiebreaks (tier-0
+  residents survive mixed-tier overload; a grower never evicts a
+  strictly better-tier victim, it stalls instead). The victim's blocks free
+  immediately, its request re-queues at its tier's line position
+  (greedy decode is deterministic, so the re-run emits identical
+  tokens) — back-pressure degrades to queueing, never deadlock.
+
+SLO-aware overload control
+--------------------------
+``submit(prompt, max_new, priority=..., deadline_s=...)`` places a
+request on a scheduling TIER (0 = highest) with an optional latency
+bound; ``ServeRequest.cancel()`` withdraws it from any state. Engine
+knobs (see ``docs/robustness.md`` for the full policy): ``tier_targets``
+guarantees backlogged best-effort tiers a minimum admission share;
+``shed_budget_s`` (scalar or per-tier dict; ``REPRO_SHED_BUDGET_S``)
+makes ``submit()`` raise typed ``Overloaded`` when the live estimated
+queue wait exceeds the tier's budget; ``watchdog_s``
+(``REPRO_WATCHDOG_S``) arms a stuck-engine monitor that fails all
+outstanding futures typed ``WatchdogTimeout``; ``fault_inject``
+(``REPRO_FAULT_INJECT``) enables the deterministic fault-injection
+harness. Expiry/cancellation of SEATED rows reclaims blocks and seats
+through the normal fence-aware eviction path; a raising prefill/decode
+step fails only its blast radius typed ``RowFailed`` and the engine
+rebuilds device state and keeps serving (per-row failure isolation);
+``close()`` fails anything still outstanding typed ``EngineClosed``.
+``benchmarks/serve_slo.py`` measures the resulting tier-0 tail-TTFT
+protection under a best-effort flood.
 
 SSM/hybrid architectures have no per-token KV to page; their O(1)-per-
 sequence recurrent state (and zamba2's shared-block KV span) lives in a
@@ -135,10 +170,13 @@ environment — turns on the serve-layer observability stack
   (``Pipeline.stage_times`` promoted to a timeline).
 * **Metrics** (:class:`repro.obs.MetricsRegistry`): counters
   ``serve.tokens_out`` / ``serve.requests.{admitted,retired,preempted,
-  stalled}`` / ``pool.grown_blocks`` / ``prefix.{hits,misses,evicted}`` /
-  ``serve.prefill_tokens_saved``; gauges ``serve.queue_depth`` /
-  ``serve.resident_rows`` / ``pool.blocks_{free,used,deferred,shared,
-  parked}``; histograms ``serve.ttft_s`` / ``serve.queue_wait_s`` /
+  stalled}`` / ``serve.{shed,expired,cancelled,watchdog_fires,
+  row_failures}`` / ``pool.grown_blocks`` /
+  ``prefix.{hits,misses,evicted}`` / ``serve.prefill_tokens_saved``;
+  gauges ``serve.queue_depth`` / ``serve.resident_rows`` /
+  ``pool.blocks_{free,used,deferred,shared,parked,reserved}``;
+  histograms ``serve.ttft_s`` (plus lazy per-tier
+  ``serve.ttft_s.tierN``) / ``serve.queue_wait_s`` /
   ``engine.{cycle,dispatch,chunk_sync,book,gap,chunk}_s``; per-slot
   ``cow_fork`` trace instants mark copy-on-write block forks.
 * **Export**: ``obs.export(path)`` writes Chrome trace-event JSON that
@@ -155,8 +193,14 @@ attribute check; ``benchmarks/obs_overhead_gate.py`` enforces the
 enabled-path budget (2% local, 5% CI).
 """
 from .engine import ServeEngine
+from .errors import (DeadlineExceeded, EngineClosed, Overloaded,
+                     RequestCancelled, RowFailed, ServeError,
+                     WatchdogTimeout)
+from .faultinject import FaultInjected, FaultInjector
 from .kvcache import BlockPool, init_kv_pool
 from .scheduler import Scheduler, ServeRequest
 
 __all__ = ["ServeEngine", "ServeRequest", "Scheduler", "BlockPool",
-           "init_kv_pool"]
+           "init_kv_pool", "ServeError", "Overloaded", "DeadlineExceeded",
+           "RequestCancelled", "RowFailed", "WatchdogTimeout",
+           "EngineClosed", "FaultInjector", "FaultInjected"]

@@ -134,6 +134,9 @@ from ..models import lm
 from ..obs import TRACK_ENGINE
 from ..obs import from_env as _obs_from_env
 from ..pipeline import DataPipe, DataPipeline, PipeType
+from .errors import (DeadlineExceeded, EngineClosed, Overloaded,
+                     RequestCancelled, RowFailed, WatchdogTimeout)
+from .faultinject import FaultInjected, FaultInjector
 from .kvcache import (SINK_BLOCK, BlockPool, copy_blocks,
                       extend_block_tables, init_kv_pool,
                       scatter_prefill_rows, set_carry_rows, set_table_rows)
@@ -195,6 +198,36 @@ class ServeEngine:
         resolves via the ``REPRO_PREFIX_CACHE`` env var (default off —
         the uncached path is the bit-exact reference). Paged
         (attention) archs only; ignored for SSM/hybrid models.
+    tier_targets:
+        per-priority-tier guaranteed minimum share of each admission
+        cycle (``{tier: share}``, see :class:`repro.serve.scheduler
+        .Scheduler`) — the anti-starvation floor for best-effort tiers
+        under sustained SLO-tier load.
+    shed_budget_s:
+        load-shedding latency budget: a float applies one queue-wait
+        budget to every tier, a dict maps ``{tier: budget_s}`` (tiers
+        absent from the dict are never shed). ``submit()`` rejects with
+        a typed :class:`repro.serve.errors.Overloaded` when the
+        estimated queue wait — computed from the live
+        ``serve.queue_wait_s``/``serve.ttft_s`` histograms plus the
+        tier-visible backlog — exceeds the budget (or the request's own
+        ``deadline_s``, making it unreachable before it ever queues).
+        Requires ``obs``; without metrics the estimator has no signal
+        and shedding is disabled. None resolves via the
+        ``REPRO_SHED_BUDGET_S`` env var (a float; default off).
+    watchdog_s:
+        engine watchdog budget in seconds: a daemon thread fails every
+        in-flight/waiting future with a diagnostic
+        :class:`repro.serve.errors.WatchdogTimeout` when a busy engine
+        makes no cycle progress for this long (a wedged device sync, a
+        deadlocked stage). 0/None = off; None resolves via the
+        ``REPRO_WATCHDOG_S`` env var.
+    fault_inject:
+        a :class:`repro.serve.faultinject.FaultInjector` (or its spec
+        string) injecting deterministic seeded faults at named engine
+        sites — see :mod:`repro.serve.faultinject` for the grammar and
+        sites. None resolves via the ``REPRO_FAULT_INJECT`` env var
+        (default off).
     record_stages:
         keep an in-memory (stage, cycle-token, info, t) event log — the
         observer hook the overlap tests read.
@@ -222,6 +255,10 @@ class ServeEngine:
                  paged_impl: Optional[str] = None,
                  async_decode: Optional[bool] = None,
                  prefix_cache: Optional[bool] = None,
+                 tier_targets: Optional[Dict[int, float]] = None,
+                 shed_budget_s=None,
+                 watchdog_s: Optional[float] = None,
+                 fault_inject=None,
                  record_stages: bool = False,
                  obs=None):
         self.cfg = cfg
@@ -264,8 +301,26 @@ class ServeEngine:
         self._stage_log = [] if record_stages else None
         self._log_lock = threading.Lock()
 
+        # deterministic fault injection (param > env; see faultinject.py)
+        if fault_inject is None:
+            fault_inject = os.environ.get("REPRO_FAULT_INJECT") or None
+        if isinstance(fault_inject, str):
+            fault_inject = FaultInjector.parse(fault_inject)
+        self._fi: Optional[FaultInjector] = fault_inject
+        # load-shedding budget: float (all tiers) or {tier: budget_s}
+        if shed_budget_s is None:
+            env = os.environ.get("REPRO_SHED_BUDGET_S", "").strip()
+            shed_budget_s = float(env) if env else None
+        self._shed_budget = shed_budget_s
+        if watchdog_s is None:
+            env = os.environ.get("REPRO_WATCHDOG_S", "").strip()
+            watchdog_s = float(env) if env else 0.0
+        self._watchdog_s = float(watchdog_s or 0.0)
+
         B = max_batch
-        self._scheduler = Scheduler(max_admit=max_admit)
+        self._scheduler = Scheduler(max_admit=max_admit,
+                                    tier_targets=tier_targets)
+        self._scheduler.on_event = self._sched_event
         # slot state: written by the SERIAL decode stage (merge/window/grow/
         # step) and the complete stage (free) under _state_lock; admit only
         # reads counts
@@ -306,6 +361,14 @@ class ServeEngine:
         self._inflight: set = set()    # admitted, not yet retired (failure
         #                                cleanup: these must see set_error)
         self._cycle_tokens: set = set()  # cycles minted and not yet completed
+        # admitted groups not yet seated, keyed by cycle token: failure
+        # isolation clears this so a stale group (admitted against the
+        # pre-reset pool) is dropped at the merge instead of seating with
+        # dead block ids
+        self._premerge: Dict[int, List[ServeRequest]] = {}
+        # bumped by every failure-isolation reset: retire payloads from an
+        # older epoch must not free blocks / slots against the fresh state
+        self._reset_epoch = 0
         self._state_lock = threading.Lock()
         self._pump_lock = threading.Lock()
         self._topo = None
@@ -315,9 +378,12 @@ class ServeEngine:
                       "prefill_windows": 0, "tokens_out": 0, "retired": 0,
                       "grown_blocks": 0, "preempted": 0, "stalls": 0,
                       "prefix_hits": 0, "prefix_tokens_saved": 0,
-                      "cow_forks": 0}
+                      "cow_forks": 0, "shed": 0, "expired": 0,
+                      "cancelled": 0, "watchdog_fires": 0,
+                      "row_failures": 0}
 
         self._prefix: Optional[PrefixCache] = None
+        self._kv_geom = (kv_blocks, block_size)   # failure-isolation reinit
         if self.paged:
             self._pool = BlockPool(kv_blocks, block_size)
             self._pkv = init_kv_pool(cfg, kv_blocks, block_size)
@@ -384,6 +450,19 @@ class ServeEngine:
         self._slot_span: List[Optional[tuple]] = [None] * B
         self.set_obs(obs if obs is not None else _obs_from_env())
 
+        # watchdog: a daemon thread that fails every outstanding future
+        # when a BUSY engine makes no cycle progress within the budget
+        # (stuck device sync, wedged stage) — result() raises a diagnostic
+        # WatchdogTimeout instead of hanging
+        self._wd_beat = time.perf_counter()
+        self._wd_stop = threading.Event()
+        self._wd_thread: Optional[threading.Thread] = None
+        if self._watchdog_s > 0:
+            self._wd_thread = threading.Thread(
+                target=self._watchdog_loop, name="serve-watchdog",
+                daemon=True)
+            self._wd_thread.start()
+
     # ---------------------------------------------------------- observability
     def set_obs(self, obs) -> None:
         """Attach (or detach, with None) a :class:`repro.obs.Observability`.
@@ -405,6 +484,9 @@ class ServeEngine:
             self._prefix.set_metrics(metrics)
         if self._pipeline is not None:
             self._pipeline.tracer = self._tr
+        #: per-tier TTFT histograms, keyed by priority — populated lazily
+        #: at first token time (serve.ttft_s.tier<N>)
+        self._mh_tier: Dict[int, Any] = {}
         if metrics is None:
             self._mh = None
             return
@@ -425,6 +507,11 @@ class ServeEngine:
             "book": metrics.histogram("engine.book_s"),
             "gap": metrics.histogram("engine.gap_s"),
             "chunk": metrics.histogram("engine.chunk_s"),
+            "shed": metrics.counter("serve.shed"),
+            "expired": metrics.counter("serve.expired"),
+            "cancelled": metrics.counter("serve.cancelled"),
+            "watchdog": metrics.counter("serve.watchdog_fires"),
+            "row_failed": metrics.counter("serve.row_failures"),
         }
 
     def _phase_begin(self, slot: int, name: str, t: float) -> None:
@@ -457,7 +544,25 @@ class ServeEngine:
         if req.first_token_at is None:
             req.first_token_at = now
             if self._mh is not None and req.submitted_at is not None:
-                self._mh["ttft"].record(now - req.submitted_at)
+                ttft = now - req.submitted_at
+                self._mh["ttft"].record(ttft)
+                h = self._mh_tier.get(req.priority)
+                if h is None:
+                    h = self.obs.metrics.histogram(
+                        f"serve.ttft_s.tier{req.priority}")
+                    self._mh_tier[req.priority] = h
+                h.record(ttft)
+
+    def _sched_event(self, kind: str, req) -> None:
+        """Scheduler sweep callback (outside the scheduler lock): a waiting
+        request was dropped — ``kind`` in ``("expired", "cancelled")``."""
+        with self._state_lock:
+            self.stats[kind] += 1
+        if self._mh is not None:
+            self._mh[kind].inc()
+        if self._tr is not None:
+            self._tr.instant(kind, TRACK_ENGINE, time.perf_counter(),
+                             {"req": req.id, "state": "waiting"})
 
     def _note_resident(self) -> None:
         if self._mh is not None:
@@ -542,8 +647,51 @@ class ServeEngine:
             self._pipeline.tracer = self._tr
         return self._pipeline
 
+    # --------------------------------------------------------------- watchdog
+    def _watchdog_busy(self) -> bool:
+        """Lock-free busy probe (container truthiness is atomic enough for
+        a heuristic; the watchdog must never block on a lock a wedged stage
+        might hold)."""
+        return bool(self._inflight) or bool(self._cycle_tokens) \
+            or self._scheduler.num_waiting > 0
+
+    def _watchdog_loop(self) -> None:
+        """Daemon thread: fail every outstanding future with a diagnostic
+        :class:`WatchdogTimeout` when a BUSY engine makes no stage progress
+        (heartbeat ``_wd_beat``, touched by every admit/decode/complete
+        entry and by ``submit``) for ``watchdog_s`` seconds. The stuck
+        device call itself cannot be interrupted — the point is that
+        ``result()`` raises a diagnostic instead of hanging forever."""
+        period = max(0.01, self._watchdog_s / 4.0)
+        while not self._wd_stop.wait(period):
+            if self._broken is not None:
+                return
+            stale = time.perf_counter() - self._wd_beat
+            if stale <= self._watchdog_s or not self._watchdog_busy():
+                continue
+            err = WatchdogTimeout(
+                f"engine made no cycle progress for {stale:.3f}s "
+                f"(budget {self._watchdog_s:.3f}s; "
+                f"inflight={len(self._inflight)} "
+                f"waiting={self._scheduler.num_waiting} "
+                f"cycles={sorted(self._cycle_tokens)}; a stuck device "
+                f"sync or a deadlocked stage — failing all futures)")
+            self._broken = err
+            with self._state_lock:
+                self.stats["watchdog_fires"] += 1
+            if self._mh is not None:
+                self._mh["watchdog"].inc()
+            if self._tr is not None:
+                self._tr.instant("watchdog_fire", TRACK_ENGINE,
+                                 time.perf_counter(), {"stale_s": stale})
+            self._fail_outstanding(err)
+            return
+
     def close(self, timeout: float = 300.0) -> None:
-        """Drain outstanding requests, then release the executor. Idempotent."""
+        """Drain outstanding requests, then release the executor. Anything
+        still outstanding after the drain budget (or after a breakage)
+        fails typed :class:`EngineClosed` — ``result()`` never hangs on a
+        torn-down engine. Idempotent."""
         self._closing = True
         if self._pipeline is not None:
             deadline = time.perf_counter() + timeout
@@ -554,6 +702,17 @@ class ServeEngine:
                         self._scheduler.num_waiting == 0:
                     break
                 time.sleep(0.005)
+        self._wd_stop.set()
+        if self._wd_thread is not None:
+            self._wd_thread.join(timeout=1.0)
+            self._wd_thread = None
+        if self._watchdog_busy():
+            # drain gave up (or the pipeline broke): propagate a typed
+            # error into every pending future instead of letting result()
+            # time out slot by slot
+            self._fail_outstanding(EngineClosed(
+                "engine closed with requests outstanding "
+                "(drain timeout or prior failure)"))
         if self.paged and self._pending is None:
             # drained: no chunk in flight, every deferred block is past the
             # device work that fenced it — flush the fence
@@ -585,6 +744,8 @@ class ServeEngine:
 
     def _st_admit(self, pf):
         t_adm = time.perf_counter()
+        self._wd_beat = t_adm
+        epoch = self._reset_epoch
         with self._state_lock:
             occupied = any(r is not None for r in self._slot_req)
             reserved = self._slots_reserved
@@ -598,26 +759,23 @@ class ServeEngine:
             # resident grid (no rebuild)
             pf.stop()
             return None
-        # async back-pressure gate: a STALLED resident row is starving for
-        # blocks that are (or will be) released by the deferred-free fence.
-        # Admitting here would hand those blocks to a new request, which the
-        # grow pass then preempts to feed the older stalled row — an
-        # admit/preempt livelock. Stalled residents claim released blocks
-        # first; admission resumes once no row is stalled. (Benign race: a
-        # one-cycle-stale read costs at most one wasted admission, which the
-        # next cycle's gate stops.)
-        stalled = self.paged and self.async_decode \
-            and bool((self._stall_rem > 0).any())
         group = None
-        if stalled:
-            pass                        # fall through to park / decode pump
-        elif self.paged:
+        if self.paged:
             # phase 1 of two-phase admission: budget the PROMPT footprint
             # only — minus any prompt blocks the prefix cache already holds
             # (peek is conservative: registration can only grow a match
             # between the peek and the pin below) — and count PARKED cached
             # blocks toward the budget, since they are evictable on demand;
-            # decode-time blocks are granted lazily by the decode stage
+            # decode-time blocks are granted lazily by the decode stage.
+            # The budget sees free blocks MINUS the stalled-row reservation
+            # floor: a stalled resident row is starving for blocks that are
+            # (or will be) released by the deferred-free fence, and handing
+            # them to a new request would make the grow pass preempt that
+            # request right back — an admit/preempt livelock. The grow pass
+            # reserves each stalled row's unmet demand
+            # (:meth:`BlockPool.set_reserved`, drained oldest-stalled-first
+            # by the grow pass's age order), so admission proceeds on the
+            # surplus instead of halting outright while anything is stalled.
             px = self._prefix
             if px is not None:
                 bs = self._pool.block_size
@@ -625,11 +783,11 @@ class ServeEngine:
                 def need_for(r):
                     return self._pool.blocks_for(r.prompt_len) \
                         - px.peek(r.prompt) // bs
-                budget = self._pool.num_free + px.num_parked
+                budget = self._pool.num_free_unreserved + px.num_parked
             else:
                 def need_for(r):
                     return self._pool.blocks_for(r.prompt_len)
-                budget = self._pool.num_free
+                budget = self._pool.num_free_unreserved
             popped = self._scheduler.try_admit(free_slots, budget, need_for)
             if popped is not None:
                 # pin the longest cached prefix per member (ref++ on every
@@ -639,13 +797,16 @@ class ServeEngine:
                 needs = [self._pool.blocks_for(r.prompt_len)
                          - (len(h.blocks) if h is not None else 0)
                          for r, h in zip(popped, hits)]
-                ids = self._pool.alloc(sum(needs))  # atomic all-or-nothing
+                if self._fi is not None and self._fi.fire("alloc_fail"):
+                    ids = None          # injected admission-alloc failure
+                else:
+                    ids = self._pool.alloc(sum(needs))  # all-or-nothing
                 if ids is None and px is not None:
                     # reuse-aware back-pressure: release cold PARKED prefix
                     # blocks (leaf-first, coldest score first) before giving
                     # up on the group — and long before the grow pass would
                     # preempt any resident row
-                    short = sum(needs) - self._pool.num_free
+                    short = sum(needs) - self._pool.num_free_unreserved
                     if short > 0:
                         px.evict(short)
                     ids = self._pool.alloc(sum(needs))
@@ -692,10 +853,25 @@ class ServeEngine:
                     if self._mh is not None and r.submitted_at is not None:
                         self._mh["qwait"].record(now - r.submitted_at)
             with self._state_lock:
-                self._slots_reserved += len(group)
-                self._inflight.update(g[0] for g in group)
-                self._cycle_tokens.add(pf.token)
-                self.stats["admitted"] += len(group)
+                stale = epoch != self._reset_epoch
+                if not stale:
+                    self._slots_reserved += len(group)
+                    self._inflight.update(g[0] for g in group)
+                    self._cycle_tokens.add(pf.token)
+                    self._premerge[pf.token] = (epoch,
+                                                [g[0] for g in group])
+                    self.stats["admitted"] += len(group)
+            if stale:
+                # a failure-isolation reset raced this admission: the block
+                # ids above came from the pre-reset pool and are dead. Fail
+                # the group typed (re-submit is safe and deterministic)
+                # instead of seating it on a fresh pool it never allocated
+                # from.
+                err = RowFailed(
+                    "admission raced an engine failure-isolation reset")
+                for g in group:
+                    g[0].set_error(err)
+                return ("pump", None)
             if self._mh is not None:
                 self._mh["admitted"].inc(len(group))
             if self._tr is not None:
@@ -730,7 +906,53 @@ class ServeEngine:
         kind, payload = msg
         if kind != "admit":
             return msg
-        group = payload
+        try:
+            return self._prefill_group(pf, payload)
+        except Exception as exc:           # per-group failure isolation
+            return self._prefill_failed(pf, payload, exc)
+
+    def _prefill_failed(self, pf, group, exc):
+        """A raising prefill launch fails ONLY the admitted group (typed
+        :class:`RowFailed`), releases its untouched resources, and the
+        engine keeps serving — prefill never donates the KV pool, so no
+        device-state reset is needed (contrast :meth:`_isolate_failure`)."""
+        err = RowFailed(
+            f"prefill launch failed for group "
+            f"{[g[0].id for g in group]}: {exc!r}")
+        err.__cause__ = exc
+        with self._state_lock:
+            info = self._premerge.pop(pf.token, None)
+            live = info is not None and info[0] == self._reset_epoch
+            if live:
+                self._slots_reserved -= len(group)
+                for g in group:
+                    self._inflight.discard(g[0])
+            self.stats["row_failures"] += len(group)
+        if live and self.paged:
+            for g in group:
+                blocks, hit = g[1], g[2]
+                if blocks:
+                    # allocated at admit, never scattered: no device work
+                    # references them, a plain free is safe even in async
+                    self._pool.free(list(blocks))
+                if hit is not None:
+                    pins = list(hit.blocks)
+                    if hit.partial_block is not None:
+                        pins.append(hit.partial_block)
+                    if pins:
+                        self._prefix.unpin(pins)
+        for g in group:
+            g[0].set_error(err)
+        if self._mh is not None:
+            self._mh["row_failed"].inc(len(group))
+        if self._tr is not None:
+            self._tr.instant("prefill_failed", TRACK_ENGINE,
+                             time.perf_counter(),
+                             {"reqs": [g[0].id for g in group]})
+        self._log("prefill_failed", pf.token, [g[0].id for g in group])
+        return ("pump", None)
+
+    def _prefill_group(self, pf, group):
         reqs = [g[0] for g in group]
         if not self.paged:
             # SSM/hybrid: whole-prompt prefill per member (recurrent state
@@ -808,7 +1030,20 @@ class ServeEngine:
             jnp.asarray(lens, jnp.int32), jnp.asarray(lasts, jnp.int32),
             jnp.asarray(rems, jnp.int32))
 
-    def _merge_group(self, payload) -> None:
+    def _premerge_live(self, pf, n: int) -> bool:
+        """Epoch guard at the decode-stage merge: an admitted group that
+        predates a failure-isolation reset must NOT seat — its block ids
+        came from the torn-down pool, and its requests were already failed
+        by the reset. PEEKS (the record is popped at the END of a merge, so
+        a crash mid-merge still finds every group member in the pre-merge
+        table and fails it — double ``set_error`` is a no-op)."""
+        with self._state_lock:
+            info = self._premerge.get(pf.token)
+            if info is None or info[0] != self._reset_epoch:
+                return False
+        return True
+
+    def _merge_group(self, pf, payload) -> None:
         """Seat an admitted group: assign slots, install block tables, and
         scatter the window-0 KV into the pool (single-writer: we are inside
         the SERIAL decode stage). Rows whose whole prompt fits window 0
@@ -823,6 +1058,8 @@ class ServeEngine:
         first suffix block, which the table already points at) so the
         row's own writes never touch the shared original."""
         group, C0, ck, cv, first, n_miss = payload
+        if not self._premerge_live(pf, len(group)):
+            return
         first = np.asarray(first) if first is not None else None
         nb0 = self._pool.blocks_for(C0) if C0 else 0
         now = time.perf_counter()
@@ -923,6 +1160,8 @@ class ServeEngine:
                                       ck, cv)
         for slot in reg_slots:
             self._register_prefix(slot)
+        with self._state_lock:
+            self._premerge.pop(pf.token, None)   # fully seated
         self._note_resident()
 
     def _copy_blocks_padded(self, srcs: List[int], dsts: List[int]) -> None:
@@ -946,10 +1185,12 @@ class ServeEngine:
         if prompt is not None and blocks is not None:
             self._prefix.register(prompt, blocks)
 
-    def _merge_group_slots(self, payload) -> None:
+    def _merge_group_slots(self, pf, payload) -> None:
         """Seat an admitted SSM/hybrid group: scatter each member's
         prefilled recurrent state (and zamba2 shared-KV span) into its
         slot of the fixed-slot state pool."""
+        if not self._premerge_live(pf, len(payload)):
+            return
         now = time.perf_counter()
         rows_idx, c_len, c_last, c_rem = [], [], [], []
         for req, cache, first in payload:
@@ -975,6 +1216,8 @@ class ServeEngine:
         if self.async_decode:
             self._scatter_carry(rows_idx, c_len, c_last, c_rem,
                                 pad_to=self._scheduler.max_admit)
+        with self._state_lock:
+            self._premerge.pop(pf.token, None)   # fully seated
         self._note_resident()
 
     def _write_slot_state(self, slot: int, cache, plen: int) -> None:
@@ -1095,24 +1338,66 @@ class ServeEngine:
         self._log("prefill_chunk", pend["token"],
                   [(b, int(self._pref_pos[b])) for b in done])
 
+    def _victim_score(self, v: int):
+        """Cost-model preemption order (ascending = preempt FIRST). A
+        victim is scored ``(tier, work lost net of blocks reclaimed,
+        prior preemptions, age)``: best-effort tiers are always victimized
+        before SLO tiers (tier-0 residents survive mixed-tier overload),
+        then the row losing the least generated work per block reclaimed
+        goes first, prior preemptions and youngest id as deterministic
+        tiebreaks. Replaces the pure youngest-first rule, which happily
+        evicted a tier-0 resident to feed a best-effort grow.
+
+        Work-lost MUST outrank prior-preemption count: two same-tier
+        residents contending for the same blocks alternate preemptions,
+        so their counts leapfrog (c vs c+1) and a count-first order makes
+        the established row score itself cheapest every time it grows —
+        both rows self-evict forever (admit/replay livelock, zero
+        retirements). Work-lost-first protects whichever row is furthest
+        along, which is exactly the monotonic-progress guarantee the old
+        youngest-first rule provided within a tier."""
+        req = self._slot_req[v]
+        out = self._slot_out[v]
+        produced = len(out) if out is not None else 0
+        blocks = self._slot_blocks[v]
+        held = len(blocks) if blocks is not None else 0
+        return (-req.priority, produced - held, req.preempted_count,
+                -req.id)
+
     def _grow_or_preempt(self, pf) -> None:
         """Phase 2 of two-phase admission: grant each decoding row the
         blocks the NEXT decode chunk will write into, oldest row first
         (lazy growth — a row crosses into a new block every ``block_size``
-        tokens). Pool exhaustion preempts the YOUNGEST resident row back
-        onto the wait queue instead of deadlocking: its blocks free
-        immediately, the oldest rows keep decoding, and the preempted
-        request re-runs from scratch later (greedy decode is deterministic,
-        so its tokens are unchanged).
+        tokens). Pool exhaustion preempts the best COST-MODEL victim
+        (:meth:`_victim_score`: best-effort tier first, then least work
+        lost per block reclaimed) back onto the wait queue instead of
+        deadlocking: its blocks free immediately, the surviving rows keep
+        decoding, and the preempted request re-runs from scratch later
+        (greedy decode is deterministic, so its tokens are unchanged). A
+        row never preempts a victim of a STRICTLY better (lower) tier —
+        it stalls instead, so tier-0 residents are never evicted by
+        best-effort growth.
 
         Async refinements: a growth failure while blocks sit behind the
         deferred-free fence STALLS the row (``rem`` masked to 0 on device,
         the balance parked in ``_stall_rem``) instead of preempting —
         preempting on in-transit memory could cascade into the oldest row
         evicting itself and replaying forever. Stalled rows retry here
-        every cycle and resume the moment growth succeeds."""
+        every cycle and resume the moment growth succeeds; their unmet
+        block demand is RESERVED in the pool (oldest-stalled-first, since
+        this pass runs in age order) so concurrent admissions cannot
+        snatch the blocks the fence releases."""
         bs = self._pool.block_size
         n = self.decode_chunk
+        fi = self._fi
+        if fi is not None:
+            if fi.fire("evict") and self._prefix is not None:
+                self._prefix.evict(1)      # forced parked-prefix eviction
+            if fi.fire("preempt"):
+                live = [v for v in range(len(self._slot_req))
+                        if self._slot_req[v] is not None]
+                if live:
+                    self._preempt(min(live, key=self._victim_score), pf)
         grow_rows: List[int] = []
         grow_cols: List[int] = []
         grow_ids: List[int] = []
@@ -1122,23 +1407,30 @@ class ServeEngine:
                         if self._slot_phase[b] == "decode"
                         and (self._rem[b] > 0 or self._stall_rem[b] > 0)),
                        key=lambda b: self._slot_req[b].id)
-        # youngest-first victim order, computed ONCE per cycle (the old
-        # code re-ran a max() over all slots on every failed grow attempt);
-        # slots preempted along the way are skipped by the slot_req check
+        # cost-model victim order, computed ONCE per cycle; slots preempted
+        # along the way are skipped by the slot_req check
         victims = sorted((v for v in range(len(self._slot_req))
                           if self._slot_req[v] is not None),
-                         key=lambda v: self._slot_req[v].id, reverse=True)
+                         key=self._victim_score)
         vi = 0
         for b in order:
             if self._slot_req[b] is None:
-                continue                    # preempted as a younger victim
+                continue                    # preempted as a victim already
             rem_b = int(self._rem[b]) + int(self._stall_rem[b])
             k = int(min(n, rem_b))
             need = (int(self._lengths[b]) + k - 1) // bs + 1
             cur = len(self._slot_blocks[b])
             covered = need <= cur
             while need > cur:
-                ids = self._pool.grow_table(self._slot_blocks[b], need - cur)
+                if fi is not None and fi.fire("grow_fail"):
+                    ids = None             # injected growth failure
+                else:
+                    # stalled/starved rows drain the reservation floor here
+                    # (use_reserved): the pass runs oldest-first, so the
+                    # oldest stalled row gets first claim on fence releases
+                    ids = self._pool.grow_table(self._slot_blocks[b],
+                                                need - cur,
+                                                use_reserved=True)
                 if ids is not None:
                     self._tables[b, cur:need] = ids
                     grow_rows.extend([b] * len(ids))
@@ -1162,10 +1454,16 @@ class ServeEngine:
                 if vi == len(victims):
                     break                   # nothing left to preempt
                 victim = victims[vi]
+                if self._slot_req[victim].priority \
+                        < self._slot_req[b].priority:
+                    # every remaining victim is of a strictly better tier
+                    # than the grower (victims are ordered best-effort
+                    # first): stall b rather than evict an SLO resident
+                    break
                 vi += 1
                 self._preempt(victim, pf)
                 if victim == b:
-                    break                   # b itself was the youngest
+                    break                   # b itself was the best victim
             if self._slot_req[b] is None:
                 continue                    # b preempted itself
             if covered:
@@ -1194,6 +1492,17 @@ class ServeEngine:
                     self._phase_end(b, _t, self._slot_req[b])  # close decode
                     self._phase_begin(b, "stalled", _t)
                 self._log("stall", pf.token, b)
+        # stalled-row reservation floor: the total block demand the pass
+        # could not meet stays invisible to the admit stage until the
+        # stalled rows (served oldest-first above) have been fed — the
+        # structural fix for the admit-vs-stalled-row race
+        unmet = 0
+        for b in range(len(self._slot_req)):
+            if self._stall_rem[b] > 0 and self._slot_req[b] is not None:
+                k = int(min(n, self._stall_rem[b]))
+                need = (int(self._lengths[b]) + k - 1) // bs + 1
+                unmet += max(0, need - len(self._slot_blocks[b]))
+        self._pool.set_reserved(unmet)
         if stall_rows and self.async_decode:
             # fixed-shape rem-only carry scatter (lengths/last unchanged —
             # `last` is device-only in async mode; pad with repeats)
@@ -1310,6 +1619,23 @@ class ServeEngine:
                 self._tables_dev, jnp.asarray(rows, jnp.int32),
                 jnp.asarray(cols, jnp.int32), jnp.asarray(ids2, jnp.int32))
 
+    def _clear_row_dev(self, slot: int) -> None:
+        """Zero one vacated seat's device state: its block-table row
+        (paged) and its carry row (async). Both scatters are PADDED to
+        the admission cap with duplicate rows (idempotent writes) so
+        they reuse the merge's compiled shapes — a 1-row scatter here
+        would JIT-compile on the engine's FIRST preemption/eviction,
+        a ~100ms+ stall landing exactly in the overloaded decode cycle
+        the preemption was meant to relieve (it showed up as a 10x+
+        tier-0 TTFT outlier in ``benchmarks/serve_slo.py``)."""
+        A = self._scheduler.max_admit
+        if self.paged:
+            self._tables_dev = self._set_rows(
+                self._tables_dev, jnp.asarray([slot] * A, jnp.int32),
+                jnp.zeros((A, self._tables.shape[1]), jnp.int32))
+        if self.async_decode:
+            self._scatter_carry([slot], [0], [0], [0], pad_to=A)
+
     def _preempt(self, slot: int, pf) -> None:
         req = self._slot_req[slot]
         with self._state_lock:
@@ -1338,11 +1664,7 @@ class ServeEngine:
         self._rem[slot] = 0
         self._stall_rem[slot] = 0
         self._pref_pos[slot] = 0
-        self._tables_dev = self._set_rows(
-            self._tables_dev, jnp.asarray([slot], jnp.int32),
-            jnp.zeros((1, self._tables.shape[1]), jnp.int32))
-        if self.async_decode:
-            self._scatter_carry([slot], [0], [0], [0], pad_to=1)
+        self._clear_row_dev(slot)
         if self._mh is not None:
             self._mh["preempted"].inc()
             self._note_resident()
@@ -1353,16 +1675,213 @@ class ServeEngine:
         self._scheduler.requeue_front([req])
         self._log("preempt", pf.token, req.id)
 
-    def _st_decode(self, pf, msg):
+    def _evict_row(self, slot: int, pf, err: BaseException,
+                   kind: str) -> None:
+        """Cancel/expire a SEATED row mid-flight: release its blocks/slot
+        through the same paths preemption uses (deferred-free fence in
+        async mode, seat-generation bump so in-flight chunk tokens are
+        discarded) but fail the request typed instead of re-queueing it.
+        ``kind`` is the stats/counter key (``"cancelled"``/``"expired"``).
+        Works for both the paged and the SSM slot-state pools."""
+        req = self._slot_req[slot]
+        with self._state_lock:
+            self._slot_req[slot] = None
+            self._slot_out[slot] = None
+            self._slot_phase[slot] = None
+            if self.paged:
+                if self.async_decode:
+                    self._pool.free_deferred(self._slot_blocks[slot])
+                else:
+                    self._pool.free(self._slot_blocks[slot])
+                self._slot_blocks[slot] = None
+            self._free_slots.append(slot)
+            self._inflight.discard(req)
+            self.stats[kind] += 1
+        self._slot_gen[slot] += 1      # in-flight tokens become surplus
+        self._lengths[slot] = 0
+        self._last[slot] = 0
+        self._rem[slot] = 0
+        if self.paged:
+            self._slot_prompt[slot] = None
+            self._wp_valid[slot] = False
+            self._tables[slot] = 0
+            self._stall_rem[slot] = 0
+            self._pref_pos[slot] = 0
+        self._clear_row_dev(slot)
+        req.set_error(err)
+        if self._mh is not None:
+            self._mh[kind].inc()
+            self._note_resident()
+        if self._tr is not None:
+            _t = time.perf_counter()
+            self._phase_end(slot, _t, req)
+            self._tr.instant(kind, f"slot{slot}", _t, {"req": req.id})
+        self._log(kind, pf.token, req.id)
+
+    def _sweep_seated(self, pf) -> None:
+        """Per-cycle SLO sweep, run in the SERIAL decode stage BEFORE the
+        chunk dispatch (so the eviction scatters are sequenced ahead of
+        it): cancel-requested rows and rows whose deadline elapsed
+        mid-prefill/mid-decode are evicted — blocks and slot reclaimed
+        through the normal (fence-aware) path, future failed typed. Also
+        sweeps the WAITING queues so queued deadlines fire promptly even
+        while admission is parked, and runs the admission-BOOST pass: a
+        waiting head of a strictly better tier than the worst seated row
+        must not wait out that row's whole decode when the batch is full,
+        so the cost-model victim is preempted now and the next admit
+        cycle seats the head (the victim replays later, bit-identically
+        — greedy decode is deterministic)."""
+        now = time.perf_counter()
+        for b in range(len(self._slot_req)):
+            req = self._slot_req[b]
+            if req is None:
+                continue
+            if req._cancel_requested:
+                self._evict_row(b, pf, RequestCancelled(
+                    f"request {req.id} cancelled while {req.state}"),
+                    "cancelled")
+            elif req.expired(now):
+                self._evict_row(b, pf, DeadlineExceeded(
+                    f"request {req.id} deadline ({req.deadline_s:.3f}s) "
+                    f"expired while {req.state} "
+                    f"({now - (req.submitted_at or now):.3f}s after "
+                    f"submit)"), "expired")
+        self._scheduler.expire_waiting(now)
+        if not self.paged:
+            return     # preemption (block release + replay) is paged-only
+        head = self._scheduler.peek_head()
+        if head is None:
+            return
+        with self._state_lock:
+            full = len(self._free_slots) <= self._slots_reserved
+        if not full:
+            return
+        live = [v for v in range(len(self._slot_req))
+                if self._slot_req[v] is not None]
+        if not live:
+            return
+        victim = min(live, key=self._victim_score)
+        if self._slot_req[victim].priority > head.priority:
+            # one victim per cycle: enough to keep the SLO tier's TTFT
+            # bounded by a cycle, without churning the whole batch
+            self._preempt(victim, pf)
+
+    def _isolate_failure(self, pf, exc: BaseException):
+        """Per-row failure isolation: a raising decode/merge/sync step
+        fails ONLY the rows it could have corrupted — every SEATED row and
+        every admitted-but-unmerged group — with a typed
+        :class:`RowFailed` (``__cause__`` carries the original exception),
+        then rebuilds the device-resident state from scratch and keeps the
+        engine serving: the WAITING queues survive untouched and re-run
+        bit-identically (greedy decode is deterministic).
+
+        The full rebuild (fresh block pool + zeroed KV pool) is not
+        pessimism: the failed chunk call DONATED ``self._pkv``, so the old
+        pool buffer is invalid whether or not the failure touched it. The
+        reset epoch is bumped under the state lock — in-flight retire
+        payloads and admitted groups from the old epoch are dropped at
+        their epoch checks instead of freeing dead block ids into the
+        fresh pool."""
+        err = RowFailed(
+            f"model step failed ({exc!r}); this row's seat was torn down "
+            f"and the engine kept serving")
+        err.__cause__ = exc
+        B = len(self._slot_gen)
+        now = time.perf_counter()
+        # fresh device state FIRST, outside the lock (big allocations);
+        # swapped in atomically below
+        if self.paged:
+            kv_blocks, block_size = self._kv_geom
+            new_pool = BlockPool(kv_blocks, block_size)
+            new_pkv = init_kv_pool(self.cfg, kv_blocks, block_size)
+        else:
+            new_state = {k: v
+                         for k, v in lm.init_cache(self.cfg, B,
+                                                   self._max_seq).items()
+                         if k != "pos"}
+        with self._state_lock:
+            self._reset_epoch += 1
+            seated = [(b, r) for b, r in enumerate(self._slot_req)
+                      if r is not None]
+            pre = [r for _, reqs in self._premerge.values() for r in reqs]
+            self._premerge.clear()
+            victims = {r.id: r for _, r in seated}
+            victims.update((r.id, r) for r in pre)
+            for r in victims.values():
+                self._inflight.discard(r)
+            self._slot_req = [None] * B
+            self._slot_out = [None] * B
+            self._slot_phase = [None] * B
+            self._free_slots = list(range(B - 1, -1, -1))
+            self._slots_reserved = 0
+            if self.paged:
+                self._pool = new_pool
+                self._slot_blocks = [None] * B
+            self.stats["row_failures"] += len(victims)
+        # host mirrors + device arrays: decode-stage-owned, safe unlocked
+        self._slot_gen += 1            # all in-flight tokens are surplus
+        self._lengths[:] = 0
+        self._last[:] = 0
+        self._rem[:] = 0
+        self._pending = None
+        self._window_pending = None
+        metrics = self.obs.metrics if self.obs is not None else None
+        if self.paged:
+            self._pkv = new_pkv
+            self._stall_rem[:] = 0
+            self._pref_pos[:] = 0
+            self._wp_valid[:] = False
+            self._tables[:] = 0
+            self._tables_dev = jnp.zeros(self._tables.shape, jnp.int32)
+            self._slot_prompt = [None] * B
+            self._pool.set_metrics(metrics)
+            if self.prefix_cache:
+                self._prefix = PrefixCache(self._pool)
+                self._prefix.set_metrics(metrics)
+        else:
+            self._sstate = new_state
         if self.async_decode:
-            return self._st_decode_async(pf, msg)
+            self._carry = (jnp.zeros((B,), jnp.int32),
+                           jnp.zeros((B,), jnp.int32),
+                           jnp.zeros((B,), jnp.int32))
+        for b, r in seated:
+            if self._tr is not None:
+                self._phase_end(b, now, r)
+        for r in victims.values():
+            r.set_error(err)
+        if self._mh is not None and victims:
+            self._mh["row_failed"].inc(len(victims))
+            self._note_resident()
+        if self._tr is not None:
+            self._tr.instant("row_failure_reset", TRACK_ENGINE, now,
+                             {"failed": sorted(victims),
+                              "epoch": self._reset_epoch,
+                              "cause": repr(exc)})
+        self._log("row_failure", pf.token,
+                  {"failed": sorted(victims), "cause": repr(exc)})
+        return ("cycle", (self._reset_epoch, []))
+
+    def _st_decode(self, pf, msg):
+        self._wd_beat = time.perf_counter()
+        try:
+            if self.async_decode:
+                out = self._st_decode_async(pf, msg)
+            else:
+                out = self._st_decode_sync(pf, msg)
+        except Exception as exc:       # per-row failure isolation
+            out = self._isolate_failure(pf, exc)
+        self._wd_beat = time.perf_counter()
+        return out
+
+    def _st_decode_sync(self, pf, msg):
         t0 = time.perf_counter()
         kind, payload = msg
         if kind == "admit":
             if self.paged:
-                self._merge_group(payload)
+                self._merge_group(pf, payload)
             else:
-                self._merge_group_slots(payload)
+                self._merge_group_slots(pf, payload)
+        self._sweep_seated(pf)
         if self.paged:
             tg0 = time.perf_counter()
             self._cow_guard(pf)
@@ -1374,7 +1893,7 @@ class ServeEngine:
         rem_before = self._rem.copy()
         if not (rem_before > 0).any():
             self._log("decode", pf.token, 0)
-            return ("cycle", self._collect_finished())
+            return ("cycle", (self._reset_epoch, self._collect_finished()))
         n = self.decode_chunk
         t1 = time.perf_counter()
         if self.paged:
@@ -1389,6 +1908,11 @@ class ServeEngine:
                 jnp.asarray(self._lengths), jnp.asarray(self._rem), n=n)
             self._sstate = st
         t1b = time.perf_counter()      # carry uploads + launch: device idle
+        if self._fi is not None:       # chunk-sync fault sites
+            if self._fi.fire("chunk_latency"):
+                time.sleep(self._fi.latency_s("chunk_latency"))
+            if self._fi.fire("chunk_sync_exc"):
+                raise FaultInjected("chunk_sync_exc")
         toks = np.asarray(toks)        # (B, n): the chunk's device sync
         t2a = time.perf_counter()
         # np.array (not asarray): device views are read-only and these
@@ -1439,7 +1963,7 @@ class ServeEngine:
             tr.add("sync", TRACK_ENGINE, t1b, t2a)
             tr.add("bookkeeping", TRACK_ENGINE, t2a, t3)
         self._log("decode", pf.token, emitted)
-        return ("cycle", retire)
+        return ("cycle", (self._reset_epoch, retire))
 
     def _st_decode_async(self, pf, msg):
         """Async decode lookahead (pipeline depth 2): dispatch chunk N+1
@@ -1462,9 +1986,10 @@ class ServeEngine:
             self._finish_window(wpend)
         if kind == "admit":
             if self.paged:
-                self._merge_group(payload)
+                self._merge_group(pf, payload)
             else:
-                self._merge_group_slots(payload)
+                self._merge_group_slots(pf, payload)
+        self._sweep_seated(pf)
         if self.paged:
             tg0 = time.perf_counter()
             self._cow_guard(pf)
@@ -1509,6 +2034,11 @@ class ServeEngine:
         wait_s = 0.0
         if pend is not None:
             ts = time.perf_counter()
+            if self._fi is not None:   # chunk-sync fault sites
+                if self._fi.fire("chunk_latency"):
+                    time.sleep(self._fi.latency_s("chunk_latency"))
+                if self._fi.fire("chunk_sync_exc"):
+                    raise FaultInjected("chunk_sync_exc")
             toks = np.asarray(pend["toks"])
             wait_s = time.perf_counter() - ts
             for b in np.nonzero(pend["rem_before"] > 0)[0]:
@@ -1558,7 +2088,7 @@ class ServeEngine:
                 tr.add("sync", TRACK_ENGINE, ts, ts + wait_s)
             tr.add("bookkeeping", TRACK_ENGINE, t2, t3)
         self._log("decode", pf.token, emitted)
-        return ("cycle", retire)
+        return ("cycle", (self._reset_epoch, retire))
 
     def _collect_finished(self) -> List[tuple]:
         """Rows that hit rem==0: detach them from the batch (their slot
@@ -1581,8 +2111,8 @@ class ServeEngine:
             if self._slot_req[b] is None or self._slot_phase[b] != "decode" \
                     or self._rem[b] != 0:
                 continue
-            if self.paged and self.async_decode and self._stall_rem[b] > 0:
-                continue        # stalled behind the fence, not finished
+            if self.paged and self._stall_rem[b] > 0:
+                continue        # stalled (fence or tier guard), not finished
             if pend is not None and pend["rem_before"][b] > 0:
                 continue        # active in the in-flight chunk: next cycle
             req = self._slot_req[b]
@@ -1619,17 +2149,25 @@ class ServeEngine:
         return retire
 
     def _st_complete(self, pf, msg):
-        _, retire = msg
+        _, (epoch, retire) = msg
         now = time.perf_counter()
         for slot, req, out in retire:
+            # a retiree's TOKENS are always valid (it finished before any
+            # failure), so its future is fulfilled unconditionally; its
+            # blocks/slot are reclaimed only if no failure-isolation reset
+            # rebuilt the pool since the decode stage collected it (the
+            # epoch check and the frees are atomic against the reset, which
+            # swaps the pool under the same lock)
             self._scheduler.finish(req, out, now)
             with self._state_lock:
-                if self.paged:
-                    self._pool.free(self._slot_blocks[slot])
-                    self._slot_blocks[slot] = None
-                self._free_slots.append(slot)
                 self._inflight.discard(req)
                 self.stats["retired"] += 1
+                if epoch == self._reset_epoch:
+                    if self.paged:
+                        self._pool.free(self._slot_blocks[slot])
+                        self._slot_blocks[slot] = None
+                    self._free_slots.append(slot)
+        self._wd_beat = now
         with self._state_lock:
             self._cycle_tokens.discard(pf.token)
         if retire and self._mh is not None:
@@ -1669,23 +2207,88 @@ class ServeEngine:
             r.set_error(err)
 
     # ----------------------------------------------------------- client API
-    def submit(self, prompt, max_new: int = 16) -> ServeRequest:
+    def _shed_budget_for(self, tier: int) -> Optional[float]:
+        """Resolve the load-shed latency budget for a tier: a scalar
+        budget applies to every tier, a dict only to its listed tiers
+        (absent tiers are never shed)."""
+        b = self._shed_budget
+        if b is None:
+            return None
+        if isinstance(b, dict):
+            v = b.get(tier)
+            return float(v) if v is not None else None
+        return float(b)
+
+    def _estimated_wait_s(self, priority: int) -> Optional[float]:
+        """Admission-wait estimate for a NEW request at ``priority``, from
+        live signals: the p90 of observed queue waits (``serve
+        .queue_wait_s`` — it already embeds the engine's real drain rate)
+        scaled by how much deeper the tier-visible backlog is than one
+        admission wave. Returns None (no shedding) until the histogram has
+        enough samples to be meaningful — the estimator never sheds on a
+        cold start."""
+        if self._mh is None:
+            return None
+        h = self._mh["qwait"]
+        if h.count < 8:
+            return None
+        base = h.percentile(90.0)
+        backlog = self._scheduler.num_waiting_upto(priority)
+        waves = 1.0 + backlog / float(self._scheduler.max_admit)
+        return base * waves
+
+    def submit(self, prompt, max_new: int = 16, *,
+               priority: int = 0,
+               deadline_s: Optional[float] = None) -> ServeRequest:
         """Enqueue one generation request on the resident pipeline and
         return its future. Thread-safe; callable while earlier requests are
         mid-decode — that is the point. All architectures: paged attention
         KV for dense/MoE models, the fixed-slot recurrent-state pool for
-        SSM/hybrid ones."""
+        SSM/hybrid ones.
+
+        ``priority`` is the scheduling tier (0 = highest; admission scans
+        tiers in order, the preemption cost model victimizes the highest
+        tier first). ``deadline_s`` is an optional latency bound from now:
+        a request that has not completed within it fails typed
+        :class:`DeadlineExceeded` whether it is queued or mid-decode, and
+        its resources are reclaimed. When a shed budget is configured for
+        the tier (``shed_budget_s``), an over-budget estimated queue wait
+        raises :class:`Overloaded` HERE — synchronously, before the
+        request ever queues — so callers can back off or retry elsewhere."""
         if self._broken is not None:
             raise RuntimeError("serve pipeline is broken") from self._broken
         if self._closing:
             raise RuntimeError("engine is closed")
-        req = ServeRequest(prompt, max_new)
+        req = ServeRequest(prompt, max_new, priority=priority,
+                           deadline_s=deadline_s)
         total = req.prompt_len + req.max_new
         if total > self._max_seq:
             raise ValueError(
                 f"prompt+max_new = {total} exceeds max_seq_len "
                 f"{self._max_seq}")
-        req.submitted_at = time.perf_counter()
+        budget = self._shed_budget_for(req.priority)
+        if budget is not None:
+            est = self._estimated_wait_s(req.priority)
+            limit = budget if deadline_s is None \
+                else min(budget, deadline_s)
+            if est is not None and est > limit:
+                with self._state_lock:
+                    self.stats["shed"] += 1
+                if self._mh is not None:
+                    self._mh["shed"].inc()
+                depth = self._scheduler.num_waiting_upto(req.priority)
+                raise Overloaded(
+                    f"request shed at submit: estimated queue wait "
+                    f"{est:.3f}s exceeds the tier-{req.priority} budget "
+                    f"{limit:.3f}s (backlog {depth} at tiers <= "
+                    f"{req.priority})",
+                    tier=req.priority, est_wait_s=est, budget_s=limit,
+                    queue_depth=depth)
+        now = time.perf_counter()
+        req.submitted_at = now
+        if req.deadline_s is not None:
+            req.deadline_at = now + req.deadline_s
+        self._wd_beat = now
         self._scheduler.enqueue(req)
         self._pump()
         return req

@@ -110,8 +110,14 @@ class BlockPool:
         self._deferred_young: List[int] = []
         self._deferred_old: List[int] = []
         self._deferred_set: set = set()
+        # reservation floor (admit-vs-stalled-row fairness): the engine
+        # reserves the unmet block demand of fenced/stalled resident rows;
+        # plain alloc (admission) cannot dip below it, while grow calls
+        # pass use_reserved=True and drain it oldest-stalled-first
+        self._reserved = 0
         self._g_free = self._g_used = self._g_deferred = None
         self._g_shared = None
+        self._g_reserved = None
 
     def set_metrics(self, metrics) -> None:
         """Bind (or unbind with None) a :class:`repro.obs.MetricsRegistry`:
@@ -122,11 +128,13 @@ class BlockPool:
         if metrics is None:
             self._g_free = self._g_used = self._g_deferred = None
             self._g_shared = None
+            self._g_reserved = None
             return
         self._g_free = metrics.gauge("pool.blocks_free")
         self._g_used = metrics.gauge("pool.blocks_used")
         self._g_deferred = metrics.gauge("pool.blocks_deferred")
         self._g_shared = metrics.gauge("pool.blocks_shared")
+        self._g_reserved = metrics.gauge("pool.blocks_reserved")
         with self._lock:
             self._note_locked()
 
@@ -137,6 +145,8 @@ class BlockPool:
             self._g_deferred.set(len(self._deferred_young)
                                  + len(self._deferred_old))
             self._g_shared.set(sum(1 for c in self._refs.values() if c > 1))
+        if self._g_reserved is not None:
+            self._g_reserved.set(self._reserved)
 
     # ------------------------------------------------------------- accounting
     @property
@@ -153,20 +163,55 @@ class BlockPool:
         """Blocks needed to hold ``num_tokens`` KV entries."""
         return -(-num_tokens // self.block_size)
 
-    def can_alloc(self, n: int) -> bool:
+    def can_alloc(self, n: int, *, use_reserved: bool = False) -> bool:
         with self._lock:
-            return n <= len(self._free)
+            return n <= self._avail_locked(use_reserved)
+
+    # ------------------------------------------------- stalled-row reservation
+    def set_reserved(self, n: int) -> None:
+        """Set the reservation floor: ``n`` free blocks are held back from
+        plain :meth:`alloc`/:meth:`grow_table` and only reachable with
+        ``use_reserved=True``. The engine sets this to the unmet growth
+        demand of stalled resident rows (oldest-stalled-first), so fresh
+        admissions cannot indefinitely snipe the blocks a fenced-growth
+        row is waiting for. The floor is advisory against what is
+        CURRENTLY free — it never blocks frees or fence releases, it just
+        earmarks them as they arrive."""
+        if n < 0:
+            raise ValueError("reservation must be >= 0")
+        with self._lock:
+            self._reserved = n
+            self._note_locked()
+
+    @property
+    def reserved(self) -> int:
+        with self._lock:
+            return self._reserved
+
+    @property
+    def num_free_unreserved(self) -> int:
+        """Free blocks visible to plain (admission) allocation."""
+        with self._lock:
+            return self._avail_locked(False)
+
+    def _avail_locked(self, use_reserved: bool) -> int:
+        if use_reserved:
+            return len(self._free)
+        return max(0, len(self._free) - self._reserved)
 
     # ------------------------------------------------------------- alloc/free
-    def alloc(self, n: int) -> Optional[List[int]]:
+    def alloc(self, n: int, *, use_reserved: bool = False
+              ) -> Optional[List[int]]:
         """Take ``n`` blocks at refcount 1, or None (and take nothing) if
         fewer are free. Only the zero-ref transition of ``free`` /
         ``release_deferred`` re-enters the free list, so a block with live
-        references can never be handed out here."""
+        references can never be handed out here. Plain calls respect the
+        stalled-row reservation floor (:meth:`set_reserved`); resident-row
+        growth passes ``use_reserved=True`` to drain it."""
         if n < 0:
             raise ValueError("alloc of negative block count")
         with self._lock:
-            if n > len(self._free):
+            if n > self._avail_locked(use_reserved):
                 return None
             ids = [self._free.pop() for _ in range(n)]
             self._allocated.update(ids)
@@ -277,14 +322,17 @@ class BlockPool:
         with self._lock:
             return len(self._deferred_young) + len(self._deferred_old)
 
-    def grow_table(self, blocks: List[int], n: int) -> Optional[List[int]]:
+    def grow_table(self, blocks: List[int], n: int, *,
+                   use_reserved: bool = False) -> Optional[List[int]]:
         """Extend a sequence's existing allocation by ``n`` blocks — the
         mid-decode growth primitive of two-phase admission. All-or-nothing
         like :meth:`alloc`: returns the new ids (also appended to ``blocks``
         in place, keeping the caller's table mirror authoritative) or None
         (taking nothing) when the pool cannot cover the growth — the
-        engine's preemption signal."""
-        ids = self.alloc(n)
+        engine's preemption signal. Resident rows grow with
+        ``use_reserved=True`` so the stalled-row reservation floor is
+        theirs to drain."""
+        ids = self.alloc(n, use_reserved=use_reserved)
         if ids is None:
             return None
         blocks.extend(ids)

@@ -40,6 +40,7 @@ chained hash + token comparison pin exactly.
 """
 from __future__ import annotations
 
+import hashlib
 import threading
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -50,8 +51,16 @@ __all__ = ["PrefixCache", "PrefixHit"]
 
 
 def _default_hash(parent_key: int, chunk: bytes) -> int:
-    """Chunk-hash chained on the parent chain hash (in-process only)."""
-    return hash((parent_key, chunk))
+    """Chunk-hash chained on the parent chain hash. STABLE content hash
+    (blake2b over the parent key + token bytes), not Python's ``hash()``:
+    chunk identity must survive ``PYTHONHASHSEED`` changes and process
+    restarts so a persisted/cross-process prefix index keys the same
+    prompt to the same chain (the cross-tier pinning prerequisite).
+    Collisions are still disambiguated by token comparison downstream."""
+    h = hashlib.blake2b(digest_size=8)
+    h.update(parent_key.to_bytes(8, "little", signed=True))
+    h.update(chunk)
+    return int.from_bytes(h.digest(), "little", signed=True)
 
 
 class _Node:
@@ -320,6 +329,23 @@ class PrefixCache:
             if freed:
                 self._note_parked_locked()
         return freed
+
+    def clear(self) -> int:
+        """Drop the ENTIRE index: release every index-held reference and
+        reset the trie. The failure-isolation path uses this — after a
+        raising model step the pool's KV contents are reinitialized, so
+        every cached chunk is stale garbage and must not match future
+        admissions. Pinned blocks (rows still referencing them) merely
+        lose the index reference; parked blocks return to the pool.
+        Returns the number of nodes dropped."""
+        with self._lock:
+            nodes = list(self._iter_nodes_locked())
+            for n in nodes:
+                self._pool.free([n.block])
+            self._root.clear()
+            self._nodes = 0
+            self._note_parked_locked()
+        return len(nodes)
 
     def _remove_locked(self, node: _Node) -> None:
         siblings = (self._root if node.parent is None

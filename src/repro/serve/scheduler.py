@@ -1,26 +1,39 @@
 """Request queue + admission control for the continuous-batching engine.
 
 The scheduler is pure host-side bookkeeping (no jax): it owns the waiting
-queue and decides, at every chunk boundary, which requests join the running
-batch. The engine's SERIAL admit stage calls :meth:`Scheduler.try_admit`
-with the currently free resources; retirement calls :meth:`finish` /
-:meth:`fail` to fulfil the request futures.
+queues and decides, at every chunk boundary, which requests join the
+running batch. The engine's SERIAL admit stage calls
+:meth:`Scheduler.try_admit` with the currently free resources; retirement
+calls :meth:`finish` / :meth:`fail_all_waiting` to fulfil the request
+futures.
 
-Admission policy — *FIFO on prompt-only footprint* (two-phase admission):
+Admission policy — *tiered FIFO on prompt-only footprint*:
 
-* requests admit strictly oldest-first from ONE queue. There are no prompt
-  length buckets any more: chunked prefill processes every prompt in
-  fixed-size windows, so an admission group's compiled shapes no longer
-  depend on its members' prompt lengths and mixed-length groups ride one
-  prefill launch together;
+* requests carry a **priority tier** (``ServeRequest(priority=...)``,
+  0 = highest/SLO tier, larger = more best-effort). Each tier is one FIFO
+  ordered by request id; admission scans tiers in strict priority order,
+  oldest-first within a tier;
 * a group is admitted when the block pool covers every member's **prompt**
   KV footprint (not ``prompt + max_new``) and free decode slots exist.
   Decode-time KV is allocated lazily, block by block, as sequences grow
   (:meth:`repro.serve.kvcache.BlockPool.grow_table`); pool exhaustion
-  mid-decode preempts the youngest running row back onto this queue
+  mid-decode preempts a cost-model-selected victim back onto this queue
   (:meth:`requeue_front`) instead of deadlocking;
-* admission stops at the first request that does not fit — head-of-line
-  order is preserved (no starvation via younger requests skipping ahead).
+* the strict scan stops at the first request that does not fit —
+  head-of-line order is preserved within and across tiers (a lower tier
+  never leapfrogs a blocked higher-tier head). **Per-tier admission
+  targets** (``tier_targets={tier: share}``) are the anti-starvation
+  escape hatch: ``floor(share * cap)`` seats of every admission cycle are
+  reserved for a backlogged tier and filled even when a higher-tier head
+  is blocked, so best-effort traffic keeps a guaranteed minimum share
+  under sustained SLO load (choose ``share >= 1/max_admit`` for at least
+  one seat);
+* requests with a **deadline** (``deadline_s``) are swept on every
+  admission attempt (and by the engine's per-cycle
+  :meth:`expire_waiting`): an expired waiting request fails typed
+  (:class:`repro.serve.errors.DeadlineExceeded`) and leaves the queue
+  without ever seating. Cancelled requests
+  (:meth:`ServeRequest.cancel`) are dropped the same way.
 """
 from __future__ import annotations
 
@@ -28,9 +41,12 @@ import itertools
 import threading
 import time
 from collections import deque
-from typing import Any, Callable, Deque, Iterable, List, Optional
+from typing import Any, Callable, Deque, Dict, Iterable, List, Optional
 
 import numpy as np
+
+from .errors import (DeadlineExceeded, RequestCancelled, ServeError,
+                     WatchdogTimeout)
 
 __all__ = ["ServeRequest", "Scheduler"]
 
@@ -41,8 +57,17 @@ class ServeRequest:
     """One generation request: a prompt plus a future for its output.
 
     ``submit()`` hands these out; :meth:`result` blocks until the engine's
-    complete stage retires the sequence (or the resident pipeline fails, in
-    which case the failure re-raises here instead of deadlocking).
+    complete stage retires the sequence (or the request fails, in which
+    case the failure re-raises here instead of deadlocking — typed
+    :class:`repro.serve.errors.ServeError` subclasses re-raise directly,
+    anything else wraps in a ``RuntimeError``).
+
+    SLO fields: ``priority`` is the scheduling tier (0 = highest;
+    admission scans tiers in order, preemption victimizes the highest
+    tier number first), ``deadline_s`` an optional per-request latency
+    bound measured from submit — an expired request fails
+    :class:`DeadlineExceeded` whether it is still queued or mid-decode.
+    :meth:`cancel` withdraws the request from any state.
 
     :attr:`state` tracks the request through the engine — ``"created"`` →
     ``"waiting"`` (queued) → ``"prefilling"`` (admitted, prompt KV being
@@ -56,16 +81,28 @@ class ServeRequest:
     so torn reads can at worst be one step stale.
     """
 
-    def __init__(self, prompt: Any, max_new: int) -> None:
+    def __init__(self, prompt: Any, max_new: int, *,
+                 priority: int = 0,
+                 deadline_s: Optional[float] = None) -> None:
         self.id = next(_REQ_IDS)
         self.prompt = np.asarray(prompt, np.int32)
         if self.prompt.ndim != 1 or self.prompt.size == 0:
             raise ValueError("prompt must be a non-empty 1-D token array")
         if max_new < 1:
             raise ValueError("max_new must be >= 1")
+        if priority < 0:
+            raise ValueError("priority must be >= 0 (0 = highest tier)")
+        if deadline_s is not None and deadline_s <= 0:
+            raise ValueError("deadline_s must be positive (or None)")
         self.max_new = int(max_new)
+        self.priority = int(priority)
+        self.deadline_s = float(deadline_s) if deadline_s is not None \
+            else None
+        #: absolute perf_counter deadline, stamped by the engine at submit
+        self.deadline_at: Optional[float] = None
         self.state = "created"
         self.preempted_count = 0       # mid-decode evictions (see above)
+        self._cancel_requested = False
         # Lifecycle timestamps, all on the time.perf_counter clock (the
         # same clock the tracer uses, so spans and these agree):
         self.submitted_at: Optional[float] = None   # set by the engine
@@ -95,6 +132,22 @@ class ServeRequest:
             self.state = "failed"
             self._done.set()
 
+    def cancel(self) -> bool:
+        """Withdraw the request. Returns False if it already completed
+        (result or failure), True otherwise. A still-waiting request fails
+        :class:`RequestCancelled` immediately; a seated one is reclaimed
+        at the engine's next cycle boundary (blocks/slot released through
+        the normal eviction path) and then fails the same way."""
+        if self._done.is_set():
+            return False
+        self._cancel_requested = True
+        if self.state in ("created", "waiting"):
+            # unblock the caller now; the scheduler drops the queue entry
+            # lazily on its next sweep
+            self.set_error(RequestCancelled(
+                f"request {self.id} cancelled while {self.state}"))
+        return True
+
     def result(self, timeout: Optional[float] = 120.0) -> np.ndarray:
         if not self._done.wait(timeout):
             raise TimeoutError(
@@ -105,6 +158,8 @@ class ServeRequest:
                 f"first_token_at={self._fmt(self.first_token_at)} "
                 f"finished_at={self._fmt(self.finished_at)})")
         if self._error is not None:
+            if isinstance(self._error, ServeError):
+                raise self._error        # typed: callers branch on policy
             raise RuntimeError(
                 f"request {self.id} failed in the serve pipeline"
             ) from self._error
@@ -117,6 +172,13 @@ class ServeRequest:
     @property
     def prompt_len(self) -> int:
         return int(self.prompt.shape[0])
+
+    def expired(self, now: Optional[float] = None) -> bool:
+        """True once the absolute deadline (if any) has passed."""
+        if self.deadline_at is None:
+            return False
+        return (now if now is not None else time.perf_counter()) \
+            > self.deadline_at
 
     # -------------------------------------------------- derived lifecycle SLOs
     @property
@@ -136,17 +198,31 @@ class ServeRequest:
 
 
 class Scheduler:
-    """Waiting-queue + admission-control policy (host side, thread-safe)."""
+    """Tiered waiting queue + admission-control policy (host side,
+    thread-safe). ``tier_targets`` maps a priority tier to its guaranteed
+    minimum share of each admission cycle (see module docstring);
+    ``on_event(kind, req)`` — kind in ``("expired", "cancelled")`` — is
+    called (outside the scheduler lock) whenever a sweep drops a waiting
+    request, so the engine can keep its stats/counters current."""
 
-    def __init__(self, max_admit: int = 8) -> None:
+    def __init__(self, max_admit: int = 8,
+                 tier_targets: Optional[Dict[int, float]] = None) -> None:
         if max_admit < 1:
             raise ValueError("max_admit must be >= 1")
         self.max_admit = max_admit
+        self.tier_targets = {int(t): float(s)
+                             for t, s in (tier_targets or {}).items()}
+        for t, s in self.tier_targets.items():
+            if not 0.0 < s <= 1.0:
+                raise ValueError(
+                    f"tier_targets[{t}] = {s}: share must be in (0, 1]")
+        self.on_event: Optional[Callable[[str, ServeRequest], None]] = None
         self._lock = threading.Lock()
-        # ONE FIFO ordered by request id (enqueue appends, preemption
-        # re-inserts at the front — preempted requests are older than
-        # anything still waiting, so id order is preserved)
-        self._queue: Deque[ServeRequest] = deque()
+        # one FIFO per tier, each ordered by request id (enqueue appends,
+        # preemption re-inserts at the tier front — preempted requests are
+        # older than anything still waiting in their tier, so id order is
+        # preserved)
+        self._queues: Dict[int, Deque[ServeRequest]] = {}
         self._g_depth = None           # serve.queue_depth gauge when bound
 
     def set_metrics(self, metrics) -> None:
@@ -159,56 +235,127 @@ class Scheduler:
 
     def _note_depth_locked(self) -> None:
         if self._g_depth is not None:
-            self._g_depth.set(len(self._queue))
+            self._g_depth.set(sum(len(q) for q in self._queues.values()))
+
+    def _q_locked(self, tier: int) -> Deque[ServeRequest]:
+        q = self._queues.get(tier)
+        if q is None:
+            q = self._queues[tier] = deque()
+        return q
+
+    def _tiers_locked(self) -> List[int]:
+        return sorted(t for t, q in self._queues.items() if q)
 
     # -------------------------------------------------------------- enqueue
     def enqueue(self, req: ServeRequest) -> None:
         req.state = "waiting"
         req.queued_since = time.perf_counter()
         with self._lock:
-            self._queue.append(req)
+            self._q_locked(req.priority).append(req)
             self._note_depth_locked()
 
     def requeue_front(self, reqs: Iterable[ServeRequest]) -> None:
-        """Put preempted (or admission-race-unwound) requests back into the
-        line at their id positions. A plain extendleft would suffice from
-        ONE caller, but the decode stage (preemption) and the admit stage
-        (alloc-race unwind) can both re-queue concurrently — merging by id
-        keeps the queue's FIFO/no-starvation invariant under that race."""
+        """Put preempted (or admission-race-unwound) requests back into
+        their tier's line at their id positions. A plain extendleft would
+        suffice from ONE caller, but the decode stage (preemption) and the
+        admit stage (alloc-race unwind) can both re-queue concurrently —
+        merging by id keeps each tier's FIFO/no-starvation invariant under
+        that race."""
         reqs = sorted(reqs, key=lambda r: r.id)
         now = time.perf_counter()
         for r in reqs:
             r.state = "waiting"
             r.queued_since = now
         with self._lock:
-            merged = sorted(list(self._queue) + list(reqs),
-                            key=lambda r: r.id)
-            self._queue = deque(merged)
+            for r in reqs:
+                q = self._q_locked(r.priority)
+                merged = sorted(list(q) + [r], key=lambda x: x.id)
+                self._queues[r.priority] = deque(merged)
             self._note_depth_locked()
 
     @property
     def num_waiting(self) -> int:
         with self._lock:
-            return len(self._queue)
+            return sum(len(q) for q in self._queues.values())
 
-    def _head_locked(self) -> Optional[ServeRequest]:
-        """The single head-of-line rule: the oldest waiting request leads.
-        Shared by :meth:`oldest` and :meth:`try_admit` so the two can never
-        disagree about who goes first. Caller holds ``_lock``."""
-        return self._queue[0] if self._queue else None
+    def num_waiting_upto(self, priority: int) -> int:
+        """Waiting requests at tiers <= ``priority`` — everything that
+        would be admitted ahead of (or alongside) a new request at that
+        tier; the load-shed estimator's backlog term."""
+        with self._lock:
+            return sum(len(q) for t, q in self._queues.items()
+                       if t <= priority)
+
+    def peek_head(self) -> Optional[ServeRequest]:
+        """The request the strict-priority scan would admit next (no pop,
+        no sweep): the oldest waiting request of the best backlogged tier.
+        The engine's admission-boost pass compares seated rows against
+        this head."""
+        with self._lock:
+            for t in self._tiers_locked():
+                for r in self._queues[t]:
+                    if not r.done() and not r._cancel_requested:
+                        return r
+            return None
 
     def oldest(self) -> Optional[ServeRequest]:
+        return self.peek_head()
+
+    # ----------------------------------------------------------------- sweep
+    def _sweep_locked(self, now: float) -> List[tuple]:
+        """Drop cancelled requests and fail+drop expired ones from every
+        tier queue. Returns ``(kind, req)`` events for the caller to emit
+        OUTSIDE the lock."""
+        events: List[tuple] = []
+        for t, q in self._queues.items():
+            if not q:
+                continue
+            kept: Deque[ServeRequest] = deque()
+            for r in q:
+                if r._cancel_requested or r.done():
+                    # cancel() already failed the future (or a racing
+                    # cancel landed between state flips) — just drop
+                    r.set_error(RequestCancelled(
+                        f"request {r.id} cancelled while waiting"))
+                    events.append(("cancelled", r))
+                elif r.expired(now):
+                    r.set_error(DeadlineExceeded(
+                        f"request {r.id} deadline "
+                        f"({r.deadline_s:.3f}s) expired after "
+                        f"{now - (r.submitted_at or now):.3f}s in queue"))
+                    events.append(("expired", r))
+                else:
+                    kept.append(r)
+            self._queues[t] = kept
+        if events:
+            self._note_depth_locked()
+        return events
+
+    def _emit(self, events: List[tuple]) -> None:
+        cb = self.on_event
+        if cb is None:
+            return
+        for kind, req in events:
+            cb(kind, req)
+
+    def expire_waiting(self, now: Optional[float] = None) -> int:
+        """Sweep the queues for expired/cancelled waiting requests (the
+        engine calls this every decode cycle so deadlines fire promptly
+        even while admission is parked). Returns the number dropped."""
         with self._lock:
-            return self._head_locked()
+            events = self._sweep_locked(
+                now if now is not None else time.perf_counter())
+        self._emit(events)
+        return len(events)
 
     # ------------------------------------------------------------- admission
     def try_admit(self, free_slots: int,
                   blocks_free: Optional[int],
                   need_for: Optional[Callable[[ServeRequest], int]] = None
                   ) -> Optional[List[ServeRequest]]:
-        """Pop the next admission group, or None (taking nothing) when the
-        oldest waiting request cannot be covered — the engine turns that
-        into either a deferred-token park or a plain decode-pump cycle.
+        """Pop the next admission group, or None (taking nothing) when no
+        waiting request can be covered — the engine turns that into either
+        a deferred-token park or a plain decode-pump cycle.
 
         The block budget charges each member ``need_for(req)`` blocks — the
         request's PROMPT footprint only, minus any prompt blocks the
@@ -221,29 +368,73 @@ class Scheduler:
         blocks AFTER this pop (one all-or-nothing ``BlockPool.alloc``); if
         that races with a concurrent grow it re-queues via
         :meth:`requeue_front`.
+
+        Selection: a strict-priority pass (tiers in order, FIFO within,
+        the whole pass stops at the first member that does not fit), then
+        the per-tier reserved seats (``tier_targets``) fill for backlogged
+        tiers even when the strict pass was blocked. Expired/cancelled
+        entries are swept first.
         """
         with self._lock:
-            if self._head_locked() is None or free_slots < 1:
-                return None
+            events = self._sweep_locked(time.perf_counter())
             group: List[ServeRequest] = []
-            budget = blocks_free
-            cap = min(self.max_admit, free_slots)
-            for req in itertools.islice(self._queue, cap):
-                if budget is not None:
-                    need = need_for(req)
-                    if need > budget:
+            taken: Dict[int, int] = {}
+            tiers = self._tiers_locked()
+            if tiers and free_slots >= 1:
+                cap = min(self.max_admit, free_slots)
+                reserve = {t: min(len(self._queues[t]),
+                                  int(self.tier_targets[t] * cap))
+                           for t in tiers if t in self.tier_targets}
+                # always leave >=1 strict-priority seat: reserved shares
+                # that floor-round up to the whole cap must not lock the
+                # top tier out of its own admission cycle
+                strict_cap = max(1, cap - sum(reserve.values()))
+                budget = blocks_free
+                # pass 1 — strict priority, global head-of-line
+                blocked = False
+                for t in tiers:
+                    for r in self._queues[t]:
+                        if len(group) >= strict_cap:
+                            break
+                        if budget is not None:
+                            need = need_for(r)
+                            if need > budget:
+                                blocked = True
+                                break
+                            budget -= need
+                        group.append(r)
+                        taken[t] = taken.get(t, 0) + 1
+                    if blocked or len(group) >= strict_cap:
                         break
-                    budget -= need
-                group.append(req)
-            if not group:
-                return None  # head of line does not fit: back-pressure
-            for _ in group:
-                self._queue.popleft()
-            self._note_depth_locked()
-            now = time.perf_counter()
-            for req in group:
-                req.last_admitted_at = now
-            return group
+                # pass 2 — reserved seats: a backlogged target tier admits
+                # its guaranteed share even when a higher-tier head blocked
+                # the strict pass
+                for t in sorted(reserve):
+                    want = reserve[t]
+                    q = self._queues[t]
+                    while want > 0 and taken.get(t, 0) < len(q) \
+                            and len(group) < cap:
+                        r = q[taken.get(t, 0)]
+                        if budget is not None:
+                            need = need_for(r)
+                            if need > budget:
+                                break
+                            budget -= need
+                        group.append(r)
+                        taken[t] = taken.get(t, 0) + 1
+                        want -= 1
+            for t, k in taken.items():
+                q = self._queues[t]
+                for _ in range(k):
+                    q.popleft()
+            if taken:
+                self._note_depth_locked()
+            if group:
+                now = time.perf_counter()
+                for req in group:
+                    req.last_admitted_at = now
+        self._emit(events)
+        return group or None
 
     # ------------------------------------------------------------ retirement
     def finish(self, req: ServeRequest, tokens: np.ndarray, now: float
@@ -255,8 +446,8 @@ class Scheduler:
         """Resident pipeline died: fail queued requests so result() raises
         instead of timing out."""
         with self._lock:
-            waiting = list(self._queue)
-            self._queue.clear()
+            waiting = [r for q in self._queues.values() for r in q]
+            self._queues.clear()
             self._note_depth_locked()
         for r in waiting:
             r.set_error(err)

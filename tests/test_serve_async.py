@@ -233,8 +233,8 @@ def test_engine_fence_blocks_not_reallocated_while_chunk_in_flight(setup):
         orig_alloc, orig_fd = pool.alloc, pool.free_deferred
         orig_rel = pool.release_deferred
 
-        def alloc(n):
-            ids = orig_alloc(n)
+        def alloc(n, **kw):      # use_reserved= passes through untouched
+            ids = orig_alloc(n, **kw)
             with lock:
                 if ids and (young | old) & set(ids):
                     violations.append(("alloc", ids))

@@ -146,24 +146,36 @@ def test_engine_goes_idle_and_rearms_without_rebuild(setup):
         np.testing.assert_array_equal(r1, r2)
 
 
-def test_stage_exception_fails_topology_without_deadlock(setup):
+def test_stage_exception_fails_only_its_group_and_engine_serves_on(setup):
+    """Per-group failure isolation (PR 8): a raising prefill launch fails
+    ONLY the admitted group — typed :class:`RowFailed`, original exception
+    as ``__cause__`` — releases its untouched blocks, and the engine keeps
+    serving: a subsequent request completes bit-identically."""
+    from repro.serve.errors import RowFailed
     cfg, params = setup
     eng = ServeEngine(cfg, params, decode_chunk=4)
     boom = RuntimeError("injected prefill failure")
+    real_prefill = eng._prefill
 
     def bad_prefill(params, tokens, last_positions, max_len):
         raise boom
 
     eng._prefill = bad_prefill
     req = eng.submit(np.arange(1, 5, dtype=np.int32), 4)
-    with pytest.raises(RuntimeError, match="failed in the serve pipeline"):
-        req.result(timeout=60)               # surfaces, no deadlock
+    with pytest.raises(RowFailed) as exc:
+        req.result(timeout=60)               # surfaces typed, no deadlock
+    assert exc.value.__cause__ is boom
+    assert eng._broken is None               # the engine was NOT torn down
+    assert eng.stats["row_failures"] >= 1
     deadline = time.time() + 30
-    while eng._broken is None and time.time() < deadline:
+    while not eng._pipeline.idle() and time.time() < deadline:
         time.sleep(0.002)
-    assert eng._broken is not None
-    with pytest.raises(RuntimeError, match="broken"):
-        eng.submit(np.arange(1, 5, dtype=np.int32), 4)
+    assert _pool_restored(eng)               # the group's blocks came back
+    eng._prefill = real_prefill
+    out = eng.result(eng.submit(np.arange(1, 5, dtype=np.int32), 4),
+                     timeout=240)
+    assert out.tolist() == _reference(cfg, params,
+                                      np.arange(1, 5, dtype=np.int32), 4)
     eng.close()                              # still clean to close
 
 
