@@ -22,6 +22,13 @@ serve   — continuous-batching engine under Poisson arrivals vs the
 serve_slo — SLO-aware overload control: tier-0 tail TTFT uncontended vs
           under a tier-1 best-effort flood (shedding, queue-deadline
           expiry, cost-model preemption); honors --quick
+serve_mesh — tensor-parallel sharded serving: --mesh-model N KV-head-
+          sharded engine vs single-device over one trace (bit-exact
+          parity asserted; per-device pool bytes ~1/N; admission
+          capacity at fixed device memory); honors --quick. Needs N
+          devices — when only serve_mesh is selected the harness forces
+          CPU host devices itself, otherwise set XLA_FLAGS=
+          --xla_force_host_platform_device_count=N up front
 paged_decode — gather-free paged decode read path vs the gather oracle
           across pool occupancies; honors --quick
 decode_overlap — async decode lookahead vs the synchronous decode loop:
@@ -108,7 +115,21 @@ def main() -> None:
     ap.add_argument("--prefix-share", action="store_true",
                     help="serve suite: shared-prefix workload, cold vs "
                          "warm prefix cache over one trace")
+    ap.add_argument("--mesh-model", type=int, default=2, metavar="N",
+                    help="serve_mesh suite: width of the mesh 'model' "
+                         "axis (default 2)")
     args = ap.parse_args()
+
+    only_pre = [s for s in args.only.split(",") if s]
+    if only_pre == ["serve_mesh"]:
+        # the mesh suite needs N devices and jax reads XLA_FLAGS exactly
+        # once at backend init — safe to force here only when no other
+        # suite shares the process
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count="
+                f"{args.mesh_model}").strip()
 
     from . import (decode_overlap_microbench, fig9_micro_random_dag,
                    fig11_corun_throughput, fig13_lsdnn,
@@ -119,6 +140,19 @@ def main() -> None:
 
     # trace artifacts land next to the BENCH_*.json they belong to
     os.makedirs(args.bench_dir, exist_ok=True)
+
+    def _serve_mesh_rows():
+        import jax
+        if jax.device_count() < args.mesh_model:
+            # a 1-device default run stays green; the CI mesh leg sets
+            # XLA_FLAGS at the job level so the suite actually runs there
+            print(f"# serve_mesh: skipped — {jax.device_count()} "
+                  f"device(s) < mesh_model={args.mesh_model} (set "
+                  "XLA_FLAGS=--xla_force_host_platform_device_count="
+                  f"{args.mesh_model})", flush=True)
+            return iter(())
+        return serve_continuous.bench_mesh(quick=args.quick,
+                                           mesh_model=args.mesh_model)
 
     def _trace(suite: str) -> str:
         return os.path.join(args.bench_dir, f"TRACE_{suite}.json")
@@ -141,6 +175,7 @@ def main() -> None:
                 trace_path=_trace("serve"))),
         "serve_slo": lambda: serve_slo.bench(
             quick=args.quick, trace_path=_trace("serve_slo")),
+        "serve_mesh": lambda: _serve_mesh_rows(),
         "paged_decode":
             lambda: paged_decode_microbench.bench(quick=args.quick),
         "decode_overlap":
@@ -151,6 +186,8 @@ def main() -> None:
     config = {"quick": args.quick, "only": args.only,
               "prompt_dist": args.prompt_dist,
               "prefix_share": args.prefix_share,
+              "mesh_model": args.mesh_model,
+              "mesh_model_env": os.environ.get("REPRO_MESH_MODEL", ""),
               "paged_impl_env": os.environ.get("REPRO_PAGED_IMPL", ""),
               "async_decode_env": os.environ.get("REPRO_ASYNC_DECODE", ""),
               "obs_gate_budget_env":

@@ -336,8 +336,137 @@ def bench_prefix_share(quick: bool = False,
     yield ("serve_cold_ttft_p50_ms", f"{cold['ttft']['p50']*1e3:.0f}", "")
 
 
+def bench_mesh(quick: bool = False,
+               mesh_model: int = 2) -> Iterator[Tuple[str, str, str]]:
+    """Tensor-parallel sharded serving vs the single-device engine over one
+    seeded Poisson trace (see docs/sharded_serving.md).
+
+    Both engines serve the IDENTICAL trace; greedy decode must be
+    bit-exact across them (asserted — the bench doubles as a parity
+    gate). Reported: mesh vs single tok/s and request latency, the
+    per-device KV pool footprint (the whole point: ~1/N per device), and
+    admission capacity — how many pool blocks fit a FIXED per-device byte
+    budget (the single-device pool size) once each block's per-device
+    slice shrinks by the mesh factor.
+
+    Needs >= mesh_model JAX devices; on CPU set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before any jax
+    import (the ``__main__`` CLI and ``benchmarks.run`` do this for you).
+    """
+    import dataclasses
+    import os
+
+    import jax
+    import numpy as np
+    from repro.configs import get_config
+    from repro.launch.mesh import make_ctx, small_mesh
+    from repro.models import lm
+    from repro.serve.engine import ServeEngine
+
+    if jax.device_count() < mesh_model:
+        raise RuntimeError(
+            f"mesh_model={mesh_model} needs that many devices, have "
+            f"{jax.device_count()}; on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={mesh_model} before "
+            "any jax import")
+
+    # widened smoke config: the stock smoke model has only 2 KV heads, so
+    # KV=4/H=8 lets both 2- and 4-way model axes divide the pool by head
+    cfg = dataclasses.replace(get_config("stablelm-1.6b").smoke(),
+                              num_heads=8, num_kv_heads=4)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    n_req = 8 if quick else 16
+    max_new = 8 if quick else 24
+    chunk = 4 if quick else 8
+    rate = 200.0 if quick else 40.0
+    bs = 8
+    kv_blocks = 64 if quick else 128
+    rng = np.random.default_rng(0)
+    sizes = _sample_lens(rng, n_req, "choice", quick)
+    trace = _trace(rng, sizes, rate, max_new)
+    total_tokens = n_req * max_new
+    max_seq = -(-(int(sizes.max()) + max_new) // bs) * bs
+
+    # the env knob must not leak into the ctx=None baseline (the CI mesh
+    # leg exports REPRO_MESH_MODEL for the test matrix)
+    env_mesh = os.environ.pop("REPRO_MESH_MODEL", None)
+    try:
+        def _run(ctx):
+            with ServeEngine(cfg, params, ctx=ctx, decode_chunk=chunk,
+                             block_size=bs, max_seq_len=max_seq,
+                             kv_blocks=kv_blocks,
+                             prefill_chunk=2 * bs) as eng:
+                # one saturating burst compiles every shape the trace hits
+                eng.generate([p for _, p, _ in trace], max_new=chunk + 1)
+                for k in eng.stats:
+                    eng.stats[k] = 0
+                pool_full = int(eng._pkv.nbytes)
+                pool_dev = int(
+                    eng._pkv.addressable_shards[0].data.nbytes)
+                t0 = time.perf_counter()
+                reqs = []
+                for at, prompt, mn in trace:
+                    now = time.perf_counter() - t0
+                    if now < at:
+                        time.sleep(at - now)
+                    reqs.append(eng.submit(prompt, mn))
+                outs = [eng.result(r, timeout=600.0) for r in reqs]
+                lat = [r.finished_at - t0 - at
+                       for (at, _, _), r in zip(trace, reqs)]
+                dt = time.perf_counter() - t0
+                stats = dict(eng.stats)
+            return dict(dt=dt, outs=outs, lat=lat, pool_full=pool_full,
+                        pool_dev=pool_dev, stats=stats)
+
+        single = _run(None)
+        mesh = _run(make_ctx(small_mesh(data=1, model=mesh_model)))
+    finally:
+        if env_mesh is not None:
+            os.environ["REPRO_MESH_MODEL"] = env_mesh
+
+    mismatch = [i for i, (a, b) in
+                enumerate(zip(single["outs"], mesh["outs"]))
+                if not np.array_equal(a, b)]
+    if mismatch:
+        raise RuntimeError(
+            f"mesh decode diverged from single-device on requests "
+            f"{mismatch}: the no-accidental-gather TP path must be "
+            "bit-exact (greedy)")
+    p50s, p99s = _percentiles(single["lat"])
+    p50m, p99m = _percentiles(mesh["lat"])
+    ratio = single["pool_dev"] / max(1, mesh["pool_dev"])
+    # admission capacity at a fixed per-device byte budget: with each
+    # block's per-device slice 1/N the size, N-fold the blocks fit in the
+    # bytes one device used to spend on the whole pool
+    blk_dev = mesh["pool_dev"] / kv_blocks
+    capacity = int(single["pool_dev"] // blk_dev)
+
+    yield ("serve_mesh_model_axis", str(mesh_model),
+           f"devices_{jax.device_count()}")
+    yield ("serve_mesh_parity", "exact",
+           f"{n_req}_requests_vs_single_device")
+    yield ("serve_mesh_tok_per_s", f"{total_tokens/mesh['dt']:.1f}",
+           f"{single['dt']/mesh['dt']:.2f}x_single")
+    yield ("serve_mesh_single_tok_per_s",
+           f"{total_tokens/single['dt']:.1f}", "")
+    yield ("serve_mesh_p50_ms", f"{p50m*1e3:.0f}",
+           f"single_{p50s*1e3:.0f}ms")
+    yield ("serve_mesh_p99_ms", f"{p99m*1e3:.0f}",
+           f"single_{p99s*1e3:.0f}ms")
+    yield ("serve_mesh_pool_device_bytes", str(mesh["pool_dev"]),
+           f"{ratio:.1f}x_smaller_than_single")
+    yield ("serve_mesh_pool_full_bytes", str(mesh["pool_full"]),
+           f"{kv_blocks}_blocks")
+    yield ("serve_mesh_capacity_blocks", str(capacity),
+           f"vs_{kv_blocks}_at_fixed_device_bytes")
+    yield ("serve_mesh_growth", str(mesh["stats"]["grown_blocks"]),
+           f"{mesh['stats']['prefill_windows']}_windows_"
+           f"{mesh['stats']['preempted']}_preemptions")
+
+
 if __name__ == "__main__":
     import argparse
+    import os
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--impl", default=None,
@@ -350,11 +479,24 @@ if __name__ == "__main__":
     ap.add_argument("--prefix-share", action="store_true",
                     help="run the shared-prefix workload (cold vs warm "
                          "prefix cache over one trace) instead")
+    ap.add_argument("--mesh-model", type=int, default=None, metavar="N",
+                    help="run the tensor-parallel mesh workload instead: "
+                         "N-way KV-head-sharded engine vs single-device "
+                         "over one trace (bit-exact parity asserted)")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="write the continuous run's Chrome trace-event "
                          "JSON here")
     args = ap.parse_args()
-    rows = (bench_prefix_share(quick=args.quick, impl=args.impl,
+    if args.mesh_model:
+        # must happen before the first jax import inside bench_mesh
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count="
+                f"{args.mesh_model}").strip()
+    rows = (bench_mesh(quick=args.quick, mesh_model=args.mesh_model)
+            if args.mesh_model else
+            bench_prefix_share(quick=args.quick, impl=args.impl,
                                trace_path=args.trace)
             if args.prefix_share else
             bench(quick=args.quick, impl=args.impl,

@@ -63,6 +63,21 @@ def _bytes_of(type_str: str) -> int:
     return total
 
 
+def _max_shape_bytes(type_str: str) -> int:
+    """Largest SINGLE shape in a (possibly tuple) type string. Collectives
+    are classified by this rather than by :func:`_bytes_of`: an async
+    ``all-gather-start`` result is the tuple ``(operand_alias, gathered)``
+    and summing it would double-count the aliased input on top of the real
+    transfer."""
+    best = 0
+    for dt, dims in _shapes_in(type_str):
+        n = _DTYPE_BYTES.get(dt, 4)
+        for d in dims:
+            n *= d
+        best = max(best, n)
+    return best
+
+
 def _numel(type_str: str) -> int:
     total = 0
     for _, dims in _shapes_in(type_str):
@@ -90,6 +105,13 @@ class HloCost:
         default_factory=lambda: {c: 0.0 for c in _COLLECTIVES})
     collective_counts: Dict[str, float] = field(
         default_factory=lambda: {c: 0.0 for c in _COLLECTIVES})
+    #: largest SINGLE collective of each type (max over operand/result
+    #: bytes of one instruction — never multiplied by trip counts). The
+    #: sharded-serving CI invariant keys on this: an accidental gather of
+    #: the paged KV pool shows up as one pool-shard-sized all-gather no
+    #: matter how many tiny activation gathers the program also contains.
+    collective_max_bytes: Dict[str, float] = field(
+        default_factory=lambda: {c: 0.0 for c in _COLLECTIVES})
     unknown_trip_loops: int = 0
 
     @property
@@ -103,6 +125,10 @@ class HloCost:
         for c in _COLLECTIVES:
             self.collective_bytes[c] += other.collective_bytes[c] * mult
             self.collective_counts[c] += other.collective_counts[c] * mult
+            # a loop repeats the SAME transfer: the largest single
+            # collective is unchanged by the trip count
+            self.collective_max_bytes[c] = max(
+                self.collective_max_bytes[c], other.collective_max_bytes[c])
         self.unknown_trip_loops += other.unknown_trip_loops
 
 
@@ -320,12 +346,14 @@ def _comp_cost(name: str, comps: Dict[str, List[_Instr]],
             base = op[:-len("-start")] if op.endswith("-start") else op
             if base in _COLLECTIVES:
                 ops = _operand_names(ins.rest)
-                b = _bytes_of(ins.type_str)
+                b = _max_shape_bytes(ins.type_str)
                 for o in ops:
                     if o in types:
-                        b = max(b, _bytes_of(types[o]))
+                        b = max(b, _max_shape_bytes(types[o]))
                 cost.collective_bytes[base] += b
                 cost.collective_counts[base] += 1
+                cost.collective_max_bytes[base] = max(
+                    cost.collective_max_bytes[base], b)
         if op == "while":
             m = _WHILE_RE.search(ins.rest)
             if m:
@@ -366,6 +394,9 @@ def _comp_cost(name: str, comps: Dict[str, List[_Instr]],
                 for cc in _COLLECTIVES:
                     cost.collective_bytes[cc] += sub.collective_bytes[cc]
                     cost.collective_counts[cc] += sub.collective_counts[cc]
+                    cost.collective_max_bytes[cc] = max(
+                        cost.collective_max_bytes[cc],
+                        sub.collective_max_bytes[cc])
                 cost.unknown_trip_loops += sub.unknown_trip_loops
     memo[name] = cost
     return cost

@@ -16,17 +16,22 @@ the same model code runs single-device smoke tests unchanged.
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import re
 import threading
 from dataclasses import dataclass, field
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["ShardCtx", "use_shard_ctx", "current_ctx", "constrain",
-           "param_specs", "named_sharding", "logical_to_spec"]
+           "param_specs", "named_sharding", "logical_to_spec",
+           "gather_tp", "manual_serve_map", "serve_tp_size",
+           "serve_attn_sharded", "serve_mlp_sharded", "serve_param_specs",
+           "serve_param_shardings", "serve_pool_spec", "serve_kv_cache_spec",
+           "MeshDivisibilityError", "validate_serve_mesh"]
 
 
 @dataclass
@@ -38,6 +43,9 @@ class ShardCtx:
     fsdp: Optional[Any] = "data"
     tp: Optional[str] = "model"
     sp: Optional[str] = "model"
+    #: True while tracing inside a shard_map body: shapes are per-shard,
+    #: with_sharding_constraint is illegal, and gather_tp becomes live
+    manual: bool = False
 
     def axis_size(self, logical: str) -> int:
         if self.mesh is None:
@@ -91,9 +99,14 @@ def logical_to_spec(ctx: ShardCtx, logical: Sequence[Any]) -> P:
 
 
 def constrain(x: Any, *logical: Any) -> Any:
-    """with_sharding_constraint under the active ShardCtx (no-op without)."""
+    """with_sharding_constraint under the active ShardCtx (no-op without).
+
+    Inside a shard_map body (``ctx.manual``) constraints are illegal —
+    shardings there are determined by the in/out specs — so this degrades
+    to identity and :func:`gather_tp` takes over at the hand-off points.
+    """
     ctx = current_ctx()
-    if ctx is None or ctx.mesh is None:
+    if ctx is None or ctx.mesh is None or ctx.manual:
         return x
     spec = logical_to_spec(ctx, logical)
     return jax.lax.with_sharding_constraint(
@@ -173,3 +186,150 @@ def param_specs(params: Any, ctx: ShardCtx, stacked_prefixes=("blocks",)) -> Any
         return _rule(path, shape, ctx)
 
     return jax.tree_util.tree_map_with_path(visit, params)
+
+
+# --------------------------------------------------------------------------- #
+# serve-time tensor parallelism (exact-bit, shard_map manual mode)
+# --------------------------------------------------------------------------- #
+# The serve data plane shards the paged KV pool by KV head over the
+# ``model`` mesh axis and runs decode/prefill steps under shard_map. To
+# keep greedy streams BIT-IDENTICAL to the single-device oracle, the
+# parallelism is "exact-bit": every projection weight is sharded on its
+# OUTPUT-column dim (wq/wk/wv/bq/bk/bv on heads; wo/wd on d_model columns;
+# wi/wg on d_ff columns), so every contraction runs over an UNSHARDED dim
+# and each shard's output is a bitwise column-slice of the single-device
+# result. Shards are reassembled with tiled all-gathers — pure bit
+# concatenation, no arithmetic — so no floating-point reassociation can
+# perturb the stream (a psum-of-partials in bf16 flips ~37% of output
+# elements; see docs/sharded_serving.md). The collectives are tiny
+# activation-sized all-gathers; the pool itself is never gathered, which
+# hlo_analysis-based CI tests enforce.
+
+class MeshDivisibilityError(ValueError):
+    """Model-axis size does not divide the head/feature counts it shards."""
+
+
+#: leaves sharded on their last (output-column) dim under serve TP
+_SERVE_ATTN_LEAVES = frozenset({"wq", "wk", "wv", "bq", "bk", "bv", "wo"})
+_SERVE_MLP_LEAVES = frozenset({"wi", "wg", "wd"})
+
+
+def serve_tp_size(ctx: Optional[ShardCtx]) -> int:
+    """Size of the tensor-parallel mesh axis (1 when no mesh is active)."""
+    if ctx is None or ctx.mesh is None or ctx.tp is None:
+        return 1
+    return ctx.axis_size("tp")
+
+
+def serve_attn_sharded(cfg: Any, mp: int) -> bool:
+    """True when the attention cluster (and thus the KV pool) shards mp-way."""
+    if mp <= 1 or cfg.ssm or cfg.hybrid_attn_every:
+        return False
+    return (cfg.num_kv_heads % mp == 0 and cfg.num_heads % mp == 0
+            and cfg.d_model % mp == 0)
+
+
+def serve_mlp_sharded(cfg: Any, mp: int) -> bool:
+    """True when the dense-MLP cluster shards mp-way (MoE experts never do)."""
+    if mp <= 1 or cfg.ssm or cfg.hybrid_attn_every:
+        return False
+    return cfg.d_ff % mp == 0 and cfg.d_model % mp == 0
+
+
+def validate_serve_mesh(cfg: Any, mp: int) -> None:
+    """Raise :class:`MeshDivisibilityError` for head counts mp can't shard.
+
+    SSM/hybrid architectures serve fully replicated on any mesh size, so
+    only attention architectures are constrained.
+    """
+    if mp <= 1 or cfg.ssm or cfg.hybrid_attn_every:
+        return
+    if not serve_attn_sharded(cfg, mp):
+        raise MeshDivisibilityError(
+            f"{cfg.name}: mesh model axis {mp} must divide num_kv_heads="
+            f"{cfg.num_kv_heads}, num_heads={cfg.num_heads} and d_model="
+            f"{cfg.d_model} to shard the KV pool by head; pick a divisor "
+            "or run single-device")
+
+
+def serve_param_specs(cfg: Any, params: Any, ctx: ShardCtx) -> Any:
+    """PartitionSpec tree for serve TP: output-column sharding only.
+
+    Every sharded leaf gets ``P(..., tp)`` on its LAST dim (rank-derived,
+    so stacked ``blocks`` leaves need no special casing); everything else
+    — embed, lm_head, norms, routers, MoE experts, SSM state — stays
+    replicated so per-shard compute is bitwise identical.
+    """
+    mp = serve_tp_size(ctx)
+    attn_ok = serve_attn_sharded(cfg, mp)
+    mlp_ok = serve_mlp_sharded(cfg, mp)
+
+    def visit(path_keys, leaf):
+        keys = [str(getattr(k, "key", k)) for k in path_keys]
+        ndim = np.ndim(leaf)
+        name = keys[-1] if keys else ""
+        in_blocks = bool(keys) and keys[0] == "blocks"
+        sharded = in_blocks and (
+            (attn_ok and name in _SERVE_ATTN_LEAVES)
+            or (mlp_ok and name in _SERVE_MLP_LEAVES))
+        if sharded:
+            return P(*([None] * (ndim - 1) + [ctx.tp]))
+        return P(*([None] * ndim))
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def serve_param_shardings(cfg: Any, params: Any, ctx: ShardCtx) -> Any:
+    """NamedSharding tree matching :func:`serve_param_specs`."""
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(ctx.mesh, spec),
+        serve_param_specs(cfg, params, ctx),
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def serve_pool_spec(cfg: Any, ctx: ShardCtx) -> P:
+    """Spec for the stacked paged pool (L, 2, N, KV, bs, hd): KV sharded."""
+    if serve_attn_sharded(cfg, serve_tp_size(ctx)):
+        return P(None, None, None, ctx.tp, None, None)
+    return P(None, None, None, None, None, None)
+
+
+def serve_kv_cache_spec(cfg: Any, ctx: ShardCtx) -> P:
+    """Spec for contiguous prefill caches k/v (L, B, KV, S, hd): KV sharded."""
+    if serve_attn_sharded(cfg, serve_tp_size(ctx)):
+        return P(None, None, ctx.tp, None, None)
+    return P(None, None, None, None, None)
+
+
+def gather_tp(x: Any, axis: int = -1) -> Any:
+    """Reassemble per-shard output columns: tiled all-gather along ``axis``.
+
+    Live only inside a shard_map body under serve TP (``ctx.manual``);
+    identity otherwise. Tiled all-gather concatenates the shards' bits in
+    mesh order — no arithmetic — which is what makes the sharded decode
+    bit-exact vs the single-device oracle.
+    """
+    ctx = current_ctx()
+    if (ctx is None or ctx.mesh is None or not ctx.manual
+            or ctx.tp is None or ctx.mesh.shape[ctx.tp] == 1):
+        return x
+    return jax.lax.all_gather(x, ctx.tp, axis=axis % x.ndim, tiled=True)
+
+
+def manual_serve_map(fn, ctx: ShardCtx, in_specs, out_specs):
+    """shard_map ``fn`` over ``ctx.mesh`` with the manual ShardCtx active.
+
+    ``check_rep=False`` because replicated outputs (sampled tokens, carry)
+    are produced by identical per-shard compute on gathered — bitwise
+    identical — operands, which the replication checker cannot see.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    mctx = dataclasses.replace(ctx, manual=True)
+
+    def body(*args):
+        with use_shard_ctx(mctx):
+            return fn(*args)
+
+    return shard_map(body, mesh=ctx.mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)

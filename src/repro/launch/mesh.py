@@ -20,12 +20,20 @@ from ..distributed.sharding import ShardCtx
 __all__ = ["make_production_mesh", "make_ctx", "small_mesh"]
 
 
+def _make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    """jax.make_mesh across jax versions (axis_types landed after 0.4.x)."""
+    try:
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    except (AttributeError, TypeError):
+        return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_ctx(mesh: Optional[Mesh]) -> ShardCtx:
@@ -48,6 +56,4 @@ def make_ctx(mesh: Optional[Mesh]) -> ShardCtx:
 
 def small_mesh(data: int = 2, model: int = 2) -> Mesh:
     """Reduced mesh for tests (requires enough local/virtual devices)."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((data, model), ("data", "model"))

@@ -30,9 +30,11 @@ import jax
 import numpy as np
 
 from ..configs import get_config
+from ..distributed.sharding import validate_serve_mesh
 from ..models import lm
 from ..obs import Observability, StatsLogger
 from ..serve.engine import ServeEngine
+from .mesh import make_ctx, small_mesh
 
 
 def main() -> None:
@@ -87,6 +89,13 @@ def main() -> None:
                          "repro.serve.faultinject), e.g. "
                          "'grow_fail:p=0.05,seed=11'. Unset defers to "
                          "REPRO_FAULT_INJECT")
+    ap.add_argument("--mesh-model", type=int, default=None, metavar="N",
+                    help="shard the serve data plane N-way over the mesh "
+                         "'model' axis (KV-head-partitioned pool + "
+                         "tensor-parallel decode). N must divide the "
+                         "model's KV heads, heads and d_model; on CPU set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count"
+                         "=N first. Unset defers to REPRO_MESH_MODEL")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--stats-interval", type=float, default=None,
                     help="print a one-line runtime stats summary every N "
@@ -103,6 +112,15 @@ def main() -> None:
     if cfg.frontend != "none":
         print(f"note: {cfg.name} uses a stub frontend; serving the text "
               "backbone only")
+    ctx = None
+    if args.mesh_model is not None and args.mesh_model > 1:
+        # typed MeshDivisibilityError on KV-head counts the axis can't
+        # divide — refuse up front rather than shard a lopsided pool
+        validate_serve_mesh(cfg, args.mesh_model)
+        ctx = make_ctx(small_mesh(data=1, model=args.mesh_model))
+        print(f"mesh: model axis = {args.mesh_model} "
+              f"({jax.device_count()} devices)")
+
     params = lm.init_params(cfg, jax.random.PRNGKey(args.seed))
     rng = np.random.default_rng(args.seed)
     prompts = [rng.integers(0, cfg.vocab_size, size=args.prompt_len)
@@ -122,7 +140,7 @@ def main() -> None:
             tier, _, share = spec.partition("=")
             tier_targets[int(tier)] = float(share)
 
-    with ServeEngine(cfg, params, decode_chunk=args.decode_chunk,
+    with ServeEngine(cfg, params, ctx=ctx, decode_chunk=args.decode_chunk,
                      prefill_chunk=args.prefill_chunk,
                      kv_blocks=args.kv_blocks,
                      block_size=args.block_size,

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
-from ..distributed.sharding import constrain
+from ..distributed.sharding import constrain, gather_tp
 from .layers import dense_init, dtype_of, rms_norm, rope
 
 __all__ = ["init_attention", "attention", "decode_attention",
@@ -54,7 +54,11 @@ def init_attention(key, cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
 
 def _project_qkv(p, x, cfg: ModelConfig, positions):
     B, S, D = x.shape
-    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    # head counts come from the WEIGHTS, not cfg: under shard_map serve TP
+    # each shard sees its local KV/mp and H/mp head slices
+    hd = cfg.hd
+    H = p["wq"].shape[-1] // hd
+    KV = p["wk"].shape[-1] // hd
     cdt = dtype_of(cfg.compute_dtype)
     q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(cdt))
     k = jnp.einsum("bsd,dh->bsh", x, p["wk"].astype(cdt))
@@ -162,8 +166,12 @@ def attention(p, x, cfg: ModelConfig, positions,
         out = _chunked_attention(q, k, v, positions, positions,
                                  cfg.attn_chunk_q,
                                  bwd_remat=cfg.attn_bwd_remat)
-    y = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, -1),
-                   p["wo"].astype(cdt))
+    out2 = out.reshape(B, S, -1)
+    if out2.shape[-1] != p["wo"].shape[0]:   # serve TP: concat local heads
+        out2 = gather_tp(out2, -1)
+    y = jnp.einsum("bsh,hd->bsd", out2, p["wo"].astype(cdt))
+    if y.shape[-1] != cfg.d_model:           # serve TP: concat wo columns
+        y = gather_tp(y, -1)
     y = constrain(y, "dp", None, None)
     if return_kv:
         return y, (k, v)
@@ -204,7 +212,8 @@ def paged_decode_attention(p, x, cfg: ModelConfig, pool_kv, tables,
     if impl is None:
         impl = default_paged_impl()
     B, _, D = x.shape
-    H, hd = cfg.num_heads, cfg.hd
+    hd = cfg.hd
+    H = p["wq"].shape[-1] // hd        # local head count under serve TP
     cdt = dtype_of(cfg.compute_dtype)
     q, k, v = _project_qkv(p, x, cfg, pos[:, None])
     pool_kv = append_kv(pool_kv, k[:, 0], v[:, 0], tables, pos, active)
@@ -214,8 +223,12 @@ def paged_decode_attention(p, x, cfg: ModelConfig, pool_kv, tables,
     else:
         out = paged_attention(q.reshape(B, H, hd), pool_kv, tables, pos,
                               impl=impl)
-    y = jnp.einsum("bh,hd->bd", out.reshape(B, H * hd).astype(cdt),
-                   p["wo"].astype(cdt))
+    out2 = out.reshape(B, H * hd).astype(cdt)
+    if out2.shape[-1] != p["wo"].shape[0]:   # serve TP: concat local heads
+        out2 = gather_tp(out2, -1)
+    y = jnp.einsum("bh,hd->bd", out2, p["wo"].astype(cdt))
+    if y.shape[-1] != cfg.d_model:           # serve TP: concat wo columns
+        y = gather_tp(y, -1)
     return y[:, None, :], pool_kv
 
 
@@ -244,7 +257,9 @@ def paged_prefill_window_attention(p, x, cfg: ModelConfig, pool_kv, tables,
     from ..serve.kvcache import gather_pages, scatter_token_window
 
     B, C, D = x.shape
-    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    hd = cfg.hd
+    H = p["wq"].shape[-1] // hd        # local head counts under serve TP
+    KV = p["wk"].shape[-1] // hd
     G = H // KV
     cdt = dtype_of(cfg.compute_dtype)
     q, k, v = _project_qkv(p, x, cfg, positions)
@@ -262,8 +277,12 @@ def paged_prefill_window_attention(p, x, cfg: ModelConfig, pool_kv, tables,
     e = jnp.exp(s - pmax)
     probs = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(vs.dtype)
     out = jnp.einsum("bkgcs,bksh->bckgh", probs, vs)
-    y = jnp.einsum("bch,hd->bcd", out.reshape(B, C, H * hd).astype(cdt),
-                   p["wo"].astype(cdt))
+    out2 = out.reshape(B, C, H * hd).astype(cdt)
+    if out2.shape[-1] != p["wo"].shape[0]:   # serve TP: concat local heads
+        out2 = gather_tp(out2, -1)
+    y = jnp.einsum("bch,hd->bcd", out2, p["wo"].astype(cdt))
+    if y.shape[-1] != cfg.d_model:           # serve TP: concat wo columns
+        y = gather_tp(y, -1)
     return y, pool_kv
 
 
@@ -281,7 +300,9 @@ def decode_attention_rows(p, x, cfg: ModelConfig, cache_k, cache_v, pos):
     row, so resident rows are bit-identical to the grouped per-call path.
     """
     B, _, D = x.shape
-    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    hd = cfg.hd
+    H = p["wq"].shape[-1] // hd        # local head counts under serve TP
+    KV = p["wk"].shape[-1] // hd
     G = H // KV
     S_max = cache_k.shape[2]
     q, k, v = _project_qkv(p, x, cfg, pos[:, None])
@@ -299,8 +320,12 @@ def decode_attention_rows(p, x, cfg: ModelConfig, cache_k, cache_v, pos):
     e = jnp.exp(s - pmax)
     probs = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(cache_v.dtype)
     out = jnp.einsum("bkgs,bksh->bkgh", probs, cache_v)
-    y = jnp.einsum("bh,hd->bd", out.reshape(B, H * hd).astype(cdt),
-                   p["wo"].astype(cdt))
+    out2 = out.reshape(B, H * hd).astype(cdt)
+    if out2.shape[-1] != p["wo"].shape[0]:   # serve TP: concat local heads
+        out2 = gather_tp(out2, -1)
+    y = jnp.einsum("bh,hd->bd", out2, p["wo"].astype(cdt))
+    if y.shape[-1] != cfg.d_model:           # serve TP: concat wo columns
+        y = gather_tp(y, -1)
     return y[:, None, :], cache_k, cache_v
 
 
@@ -314,7 +339,9 @@ def decode_attention(p, x, cfg: ModelConfig, cache_k, cache_v, pos):
     Returns (y, cache_k, cache_v) with the new token written at ``pos``.
     """
     B, _, D = x.shape
-    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    hd = cfg.hd
+    H = p["wq"].shape[-1] // hd        # local head counts under serve TP
+    KV = p["wk"].shape[-1] // hd
     G = H // KV
     S_max = cache_k.shape[2]
     positions = jnp.full((B, 1), pos, dtype=jnp.int32)
@@ -334,6 +361,10 @@ def decode_attention(p, x, cfg: ModelConfig, cache_k, cache_v, pos):
     e = jnp.exp(s - pmax)
     probs = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(cache_v.dtype)
     out = jnp.einsum("bkgs,bksh->bkgh", probs, cache_v)
-    y = jnp.einsum("bh,hd->bd", out.reshape(B, H * hd).astype(cdt),
-                   p["wo"].astype(cdt))
+    out2 = out.reshape(B, H * hd).astype(cdt)
+    if out2.shape[-1] != p["wo"].shape[0]:   # serve TP: concat local heads
+        out2 = gather_tp(out2, -1)
+    y = jnp.einsum("bh,hd->bd", out2, p["wo"].astype(cdt))
+    if y.shape[-1] != cfg.d_model:           # serve TP: concat wo columns
+        y = gather_tp(y, -1)
     return y[:, None, :], cache_k, cache_v

@@ -29,8 +29,13 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from jax.sharding import PartitionSpec as P
+
 from ..configs.base import ModelConfig
-from ..distributed.sharding import constrain
+from ..distributed.sharding import (constrain, manual_serve_map,
+                                    serve_attn_sharded, serve_kv_cache_spec,
+                                    serve_param_specs, serve_pool_spec,
+                                    serve_tp_size)
 from .attention import (attention, decode_attention, decode_attention_rows,
                         init_attention)
 from .layers import dtype_of, normal_init, rms_norm, sinusoidal_positions
@@ -536,8 +541,13 @@ def _decode_chunk_scan(step, state, carry, n: int):
     return state, (ln, tok, rm), toks.swapaxes(0, 1)
 
 
+def _serve_tp_active(cfg: ModelConfig, ctx) -> bool:
+    """True when lm entry points should run under shard_map serve TP."""
+    return ctx is not None and serve_tp_size(ctx) > 1
+
+
 def decode_chunk_paged(cfg: ModelConfig, params, pool_kv, tables, carry,
-                       n: int, impl: Optional[str] = None):
+                       n: int, impl: Optional[str] = None, ctx=None):
     """``n`` greedy paged decode steps over the resident batch in one traced
     loop — the chunk program of the continuous-batching engine.
 
@@ -552,7 +562,26 @@ def decode_chunk_paged(cfg: ModelConfig, params, pool_kv, tables, carry,
     Returns ``(pool_kv, (lengths, last, rem), toks)`` with ``toks`` the
     ``(B, n)`` greedy tokens (rows active for ``k < n`` steps repeat their
     final token in the tail — the host takes ``toks[b, :k]``).
+
+    ``ctx``: optional ShardCtx — with a multi-device ``model`` axis the
+    chunk runs under shard_map (KV-head-sharded pool and weights, exact-bit
+    TP; tables/carry/tokens replicated). The Pallas/XLA paged read kernels
+    are untouched: every shape they see is just the per-shard KV slice.
     """
+    if _serve_tp_active(cfg, ctx):
+        pspec = serve_param_specs(cfg, params, ctx)
+        pool = serve_pool_spec(cfg, ctx)
+        R = P()
+
+        def run(prm, pkv, tbl, ln, last, rem):
+            return decode_chunk_paged(cfg, prm, pkv, tbl, (ln, last, rem),
+                                      n, impl=impl)
+
+        f = manual_serve_map(run, ctx,
+                             in_specs=(pspec, pool, R, R, R, R),
+                             out_specs=(pool, (R, R, R), R))
+        return f(params, pool_kv, tables, *carry)
+
     def step(pkv, tok, ln, active):
         return decode_step_paged(cfg, params, pkv, tables, ln, tok, active,
                                  impl=impl)
@@ -560,7 +589,8 @@ def decode_chunk_paged(cfg: ModelConfig, params, pool_kv, tables, carry,
     return _decode_chunk_scan(step, pool_kv, carry, n)
 
 
-def decode_chunk_slots(cfg: ModelConfig, params, state, carry, n: int):
+def decode_chunk_slots(cfg: ModelConfig, params, state, carry, n: int,
+                       ctx=None):
     """``n`` greedy decode steps over the SSM/hybrid slot-state pool — the
     recurrent-state counterpart of :func:`decode_chunk_paged`, with the same
     device-resident ``(lengths, last, rem)`` carry contract (chunk N+1 can
@@ -568,7 +598,22 @@ def decode_chunk_slots(cfg: ModelConfig, params, state, carry, n: int):
     stale state harmlessly (row-wise math; tokens discarded host-side).
 
     Returns ``(state, (lengths, last, rem), toks)``.
+
+    ``ctx``: optional ShardCtx — SSM/hybrid slot state and weights stay
+    fully replicated on a mesh (per-shard compute is identical, hence
+    trivially bit-exact); the shard_map wrap keeps the engine's data flow
+    uniform with the paged path.
     """
+    if _serve_tp_active(cfg, ctx):
+        R = P()
+
+        def run(prm, st, ln, last, rem):
+            return decode_chunk_slots(cfg, prm, st, (ln, last, rem), n)
+
+        f = manual_serve_map(run, ctx, in_specs=(R, R, R, R, R),
+                             out_specs=(R, (R, R, R), R))
+        return f(params, state, *carry)
+
     def step(st, tok, ln, active):
         return decode_step_slots(cfg, params, st, tok, ln)
 
@@ -593,7 +638,7 @@ def _block_window(p, x, cfg: ModelConfig, attn_fn, pkv_l):
 
 
 def prefill_window_paged(cfg: ModelConfig, params, pool_kv, tables, tokens,
-                         start, valid, last_idx
+                         start, valid, last_idx, ctx=None
                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Process one chunked-prefill WINDOW for every mid-prefill row of the
     resident batch, writing the window's KV straight into the paged pool.
@@ -618,6 +663,18 @@ def prefill_window_paged(cfg: ModelConfig, params, pool_kv, tables, tokens,
     if cfg.ssm or cfg.hybrid_attn_every:
         raise ValueError(f"{cfg.name}: paged chunked prefill requires a "
                          "pure attention architecture")
+    if _serve_tp_active(cfg, ctx):
+        pspec = serve_param_specs(cfg, params, ctx)
+        pool = serve_pool_spec(cfg, ctx)
+        R = P()
+
+        def run(prm, pkv, tbl, tk, st, vd, li):
+            return prefill_window_paged(cfg, prm, pkv, tbl, tk, st, vd, li)
+
+        f = manual_serve_map(run, ctx,
+                             in_specs=(pspec, pool, R, R, R, R, R),
+                             out_specs=(R, pool))
+        return f(params, pool_kv, tables, tokens, start, valid, last_idx)
     from .attention import paged_prefill_window_attention
 
     cdt = dtype_of(cfg.compute_dtype)
@@ -646,7 +703,7 @@ def prefill_window_paged(cfg: ModelConfig, params, pool_kv, tables, tokens,
 
 
 def prefill(cfg: ModelConfig, params, tokens, max_len: int = 0,
-            frontend_embeds=None, last_positions=None):
+            frontend_embeds=None, last_positions=None, ctx=None):
     """Process a prompt, producing last-position logits + a primed cache.
 
     For attention archs the KV cache is computed per layer; for SSM archs
@@ -657,6 +714,27 @@ def prefill(cfg: ModelConfig, params, tokens, max_len: int = 0,
     groups are right-padded to one window shape, so each row's first-token
     logits sit at its own prompt end.
     """
+    if (_serve_tp_active(cfg, ctx) and frontend_embeds is None
+            and serve_attn_sharded(cfg, serve_tp_size(ctx))):
+        # serve TP: run the whole prefill under shard_map; the primed cache
+        # k/v come back KV-head-sharded, ready for the engine's pool scatter
+        pspec = serve_param_specs(cfg, params, ctx)
+        kv = serve_kv_cache_spec(cfg, ctx)
+        R = P()
+        cache_spec = {"pos": R, "k": kv, "v": kv}
+        args = [params, tokens]
+        specs = [pspec, R]
+        if last_positions is not None:
+            args.append(last_positions)
+            specs.append(R)
+
+        def run(prm, tk, *rest):
+            return prefill(cfg, prm, tk, max_len=max_len,
+                           last_positions=rest[0] if rest else None)
+
+        f = manual_serve_map(run, ctx, in_specs=tuple(specs),
+                             out_specs=(R, cache_spec))
+        return f(*args)
     B, S = tokens.shape[:2]
     F = cfg.frontend_tokens if cfg.frontend != "none" else 0
     if F and last_positions is not None:

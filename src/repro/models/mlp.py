@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
-from ..distributed.sharding import constrain
+from ..distributed.sharding import constrain, gather_tp
 from .layers import dense_init, dtype_of
 
 __all__ = ["init_mlp", "mlp"]
@@ -39,5 +39,9 @@ def mlp(p, x, cfg: ModelConfig, prefix: str = "") -> jnp.ndarray:
     else:
         h = jax.nn.gelu(x @ wi)
     h = constrain(h, "dp", None, "tp")
+    if h.shape[-1] != wd.shape[0]:     # serve TP: concat local d_ff columns
+        h = gather_tp(h, -1)
     y = h @ wd
+    if y.shape[-1] != cfg.d_model:     # serve TP: concat wd columns
+        y = gather_tp(y, -1)
     return constrain(y, "dp", None, None)

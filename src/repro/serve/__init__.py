@@ -7,9 +7,10 @@
 * :mod:`.scheduler` — TIERED request queues + admission control (no
   length buckets) budgeted on prompt-only footprints (minus any
   cached-prefix blocks when prefix caching is on): strict priority
-  across tiers with per-tier FIFO, optional guaranteed best-effort
-  admission shares (``tier_targets``), queue-deadline expiry and lazy
-  cancellation sweeps;
+  across tiers, earliest-deadline-first within a tier (deadline-less
+  requests keep FIFO order behind any deadlines), optional guaranteed
+  best-effort admission shares (``tier_targets``), queue-deadline expiry
+  and lazy cancellation sweeps;
 * :mod:`.errors`    — the typed failure vocabulary (``ServeError`` and
   subclasses: ``Overloaded``, ``DeadlineExceeded``, ``RequestCancelled``,
   ``RowFailed``, ``WatchdogTimeout``, ``EngineClosed``) that
@@ -65,7 +66,11 @@ knobs (see ``docs/robustness.md`` for the full policy): ``tier_targets``
 guarantees backlogged best-effort tiers a minimum admission share;
 ``shed_budget_s`` (scalar or per-tier dict; ``REPRO_SHED_BUDGET_S``)
 makes ``submit()`` raise typed ``Overloaded`` when the live estimated
-queue wait exceeds the tier's budget; ``watchdog_s``
+queue wait exceeds the tier's budget — estimated from a service-rate
+model (observed decode tokens/s vs resident remaining work plus the
+waiting backlog at or above the request's tier), falling back to the
+p90-queue-wait heuristic only before any rate sample exists;
+``watchdog_s``
 (``REPRO_WATCHDOG_S``) arms a stuck-engine monitor that fails all
 outstanding futures typed ``WatchdogTimeout``; ``fault_inject``
 (``REPRO_FAULT_INJECT``) enables the deterministic fault-injection
@@ -131,6 +136,25 @@ are bit-identical to the synchronous engine, which remains the reference
 path (default off). ``ServeEngine.overlap_stats`` exposes the per-cycle
 dispatch/wait/bookkeeping/host-gap breakdown; see
 ``benchmarks/decode_overlap_microbench.py``.
+
+Tensor-parallel sharded serving
+-------------------------------
+``ServeEngine(cfg, params, ctx=make_ctx(small_mesh(data=1, model=N)))``
+— or ``REPRO_MESH_MODEL=N`` — shards the serve data plane over the mesh
+``model`` axis (see ``docs/sharded_serving.md``): the paged KV pool is
+partitioned by KV HEAD (per-device footprint ~1/N), attention/MLP
+weights are column-sharded on their output dim, and the compiled decode
+chunk runs under ``shard_map`` with only activation-sized tiled
+all-gathers — never a psum, so greedy decode stays BIT-IDENTICAL to the
+single-device engine (sync and async, chunked prefill, growth/
+preemption, prefix caching). Block tables, the decode carry and SSM slot
+state stay replicated. An explicit mesh whose axis cannot divide the
+model's head/feature counts is refused with typed
+``MeshDivisibilityError``; the env knob clamps to the largest usable
+divisor instead. ``tests/test_serve_mesh.py`` asserts both the parity
+matrix and — via :mod:`repro.distributed.hlo_analysis` — that the
+lowered decode HLO contains no all-reduce and no all-gather anywhere
+near the pool-shard size (the no-accidental-gather invariant).
 
 Paged read-path selection
 -------------------------

@@ -126,10 +126,16 @@ from typing import Any, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from ..configs.base import ModelConfig
 from ..core import ACCEL, HOST, Executor
-from ..distributed.sharding import ShardCtx, use_shard_ctx
+from ..distributed.sharding import (ShardCtx, manual_serve_map,
+                                    serve_attn_sharded, serve_kv_cache_spec,
+                                    serve_param_shardings, serve_pool_spec,
+                                    serve_tp_size, use_shard_ctx,
+                                    validate_serve_mesh)
 from ..models import lm
 from ..obs import TRACK_ENGINE
 from ..obs import from_env as _obs_from_env
@@ -146,11 +152,51 @@ from .scheduler import Scheduler, ServeRequest
 __all__ = ["ServeEngine", "ServeRequest"]
 
 
+def _env_mesh_ctx(cfg: ModelConfig) -> Optional[ShardCtx]:
+    """Resolve ``REPRO_MESH_MODEL=N`` into a serve :class:`ShardCtx` (or
+    None for single-device). The requested model-axis size is CLAMPED —
+    first to the local device count, then down to the largest size that
+    divides the config's KV-head/head/feature counts — so the env knob is
+    safe to export across a whole test matrix of configs. An explicit
+    ``ctx=`` argument to :class:`ServeEngine` is never clamped: an
+    indivisible mesh there raises
+    :class:`repro.distributed.sharding.MeshDivisibilityError`.
+
+    SSM/hybrid configs have no KV heads to partition, so the env path
+    leaves them on a single device (their slot state is replicated by
+    construction anyway)."""
+    env = os.environ.get("REPRO_MESH_MODEL", "").strip()
+    if not env:
+        return None
+    mp = min(int(env), jax.device_count())
+    if cfg.ssm or cfg.hybrid_attn_every:
+        return None
+    while mp > 1 and not serve_attn_sharded(cfg, mp):
+        mp -= 1
+    if mp <= 1:
+        return None
+    from ..launch.mesh import make_ctx, small_mesh
+    return make_ctx(small_mesh(data=1, model=mp))
+
+
 class ServeEngine:
     """Resident continuous-batching engine (see module docstring).
 
     Parameters
     ----------
+    ctx:
+        a :class:`repro.distributed.sharding.ShardCtx` over a device mesh
+        with a ``model`` axis: the paged KV pool and the attention/MLP
+        projection weights are partitioned by KV head / output column
+        across it and every compiled step runs under ``shard_map``
+        (greedy tokens stay BIT-IDENTICAL to the single-device engine —
+        the tensor-parallel decomposition only ever concatenates
+        column slices, see ``docs/sharded_serving.md``). A model-axis
+        size that does not divide the config's KV-head/head/feature
+        counts raises a typed :class:`repro.distributed.sharding
+        .MeshDivisibilityError`. None resolves via the
+        ``REPRO_MESH_MODEL`` env var (clamped to the device count and
+        the largest divisible size; default single-device).
     decode_chunk:
         decode steps per compiled chunk launch — also the admission
         granularity (sequences join/leave at chunk boundaries).
@@ -208,13 +254,18 @@ class ServeEngine:
         budget to every tier, a dict maps ``{tier: budget_s}`` (tiers
         absent from the dict are never shed). ``submit()`` rejects with
         a typed :class:`repro.serve.errors.Overloaded` when the
-        estimated queue wait — computed from the live
-        ``serve.queue_wait_s``/``serve.ttft_s`` histograms plus the
-        tier-visible backlog — exceeds the budget (or the request's own
+        estimated queue wait exceeds the budget (or the request's own
         ``deadline_s``, making it unreachable before it ever queues).
-        Requires ``obs``; without metrics the estimator has no signal
-        and shedding is disabled. None resolves via the
-        ``REPRO_SHED_BUDGET_S`` env var (a float; default off).
+        The estimate is a SERVICE-RATE model: observed decode
+        throughput (EWMA tokens/s over engine cycles) divides the
+        resident rows' remaining decode work plus the tier-visible
+        waiting ``max_new`` backlog. Until the engine has emitted its
+        first tokens it falls back to the p90 of the live
+        ``serve.queue_wait_s`` histogram scaled by the backlog (armed
+        after 8 recorded admissions — a cold-start engine never
+        sheds); the fallback needs ``obs``, the rate model does not.
+        None resolves via the ``REPRO_SHED_BUDGET_S`` env var (a
+        float; default off).
     watchdog_s:
         engine watchdog budget in seconds: a daemon thread fails every
         in-flight/waiting future with a diagnostic
@@ -262,8 +313,28 @@ class ServeEngine:
                  record_stages: bool = False,
                  obs=None):
         self.cfg = cfg
-        self.params = params
+        if ctx is None:
+            ctx = _env_mesh_ctx(cfg)       # REPRO_MESH_MODEL, clamped
         self.ctx = ctx or ShardCtx(mesh=None)
+        #: model-axis (tensor-parallel) size of the serve mesh; 1 = the
+        #: single-device reference engine
+        self._tp = serve_tp_size(self.ctx)
+        if self._tp > 1:
+            # an explicit indivisible mesh is a typed error, not a clamp
+            validate_serve_mesh(cfg, self._tp)
+        #: True when the paged KV pool is partitioned over the model axis
+        #: (attention archs on a >1 mesh); SSM/hybrid state is replicated
+        self._pool_sharded = self.ctx.mesh is not None \
+            and serve_attn_sharded(cfg, self._tp)
+        if self.ctx.mesh is not None:
+            self._repl_ns = NamedSharding(self.ctx.mesh, P())
+            # KV-head-partitioned attention + column-sharded MLP weights;
+            # every other leaf (embeddings, norms, router, ...) replicated
+            self.params = jax.device_put(
+                params, serve_param_shardings(cfg, params, self.ctx))
+        else:
+            self._repl_ns = None
+            self.params = params
         self.decode_chunk = decode_chunk
         self.pipeline_lines = pipeline_lines
         self._executor = executor
@@ -316,6 +387,12 @@ class ServeEngine:
             env = os.environ.get("REPRO_WATCHDOG_S", "").strip()
             watchdog_s = float(env) if env else 0.0
         self._watchdog_s = float(watchdog_s or 0.0)
+        # service-rate load-shed model: EWMA of observed decode throughput
+        # (emitted tokens per engine-cycle wall second), updated at every
+        # chunk sync. 0.0 until the first tokens are emitted — the shed
+        # estimator falls back to the p90-queue-wait heuristic until then.
+        self._decode_rate = 0.0
+        self._rate_alpha = 0.3
 
         B = max_batch
         self._scheduler = Scheduler(max_admit=max_admit,
@@ -333,9 +410,9 @@ class ServeEngine:
         # mirrors above are maintained deterministically — lengths/rem
         # arithmetic is token-independent, `last` is refreshed lazily from
         # synced chunk outputs. The sync path uploads the mirrors instead.
-        self._carry = (jnp.zeros((B,), jnp.int32),
-                       jnp.zeros((B,), jnp.int32),
-                       jnp.zeros((B,), jnp.int32))
+        self._carry = (self._dev(np.zeros((B,), np.int32)),
+                       self._dev(np.zeros((B,), np.int32)),
+                       self._dev(np.zeros((B,), np.int32)))
         self._set_carry = jax.jit(set_carry_rows)
         # seat generation per slot, bumped on every seat/retire/preempt:
         # guards late token emission in async mode (a synced chunk's tokens
@@ -386,10 +463,30 @@ class ServeEngine:
         self._kv_geom = (kv_blocks, block_size)   # failure-isolation reinit
         if self.paged:
             self._pool = BlockPool(kv_blocks, block_size)
-            self._pkv = init_kv_pool(cfg, kv_blocks, block_size)
+            self._pkv = self._place_pool(
+                init_kv_pool(cfg, kv_blocks, block_size))
             if self.prefix_cache:
                 self._prefix = PrefixCache(self._pool)
-            self._cow_copy = jax.jit(copy_blocks, donate_argnums=(0,))
+            if self._pool_sharded:
+                # pool-touching mutators run per-shard under shard_map so
+                # their donated in/out pool buffers keep the KV-head
+                # sharding — a plain jit would let GSPMD re-lay them out
+                pool_s = serve_pool_spec(cfg, self.ctx)
+                kv_s = serve_kv_cache_spec(cfg, self.ctx)
+                self._cow_copy = jax.jit(
+                    manual_serve_map(copy_blocks, self.ctx,
+                                     in_specs=(pool_s, P(), P()),
+                                     out_specs=pool_s),
+                    donate_argnums=(0,))
+                self._scatter = jax.jit(
+                    manual_serve_map(scatter_prefill_rows, self.ctx,
+                                     in_specs=(pool_s, P(), kv_s, kv_s),
+                                     out_specs=pool_s),
+                    donate_argnums=(0,))
+            else:
+                self._cow_copy = jax.jit(copy_blocks, donate_argnums=(0,))
+                self._scatter = jax.jit(self._scatter_impl,
+                                        donate_argnums=(0,))
             self._max_seq = min(max_seq_len or 32 * block_size,
                                 (kv_blocks - 1) * block_size)
             self.prefill_chunk = prefill_chunk or decode_chunk * block_size
@@ -400,7 +497,7 @@ class ServeEngine:
             # resident array the compiled programs read; growth/merge/retire
             # update the device copy with in-place scatters
             self._tables = np.zeros((B, mb), np.int32)
-            self._tables_dev = jnp.zeros((B, mb), jnp.int32)
+            self._tables_dev = self._dev(np.zeros((B, mb), np.int32))
             self._pref_pos = np.zeros((B,), np.int32)  # prompt tokens done
             self._slot_blocks: List[Optional[List[int]]] = [None] * B
             self._slot_prompt: List[Optional[np.ndarray]] = [None] * B
@@ -427,7 +524,6 @@ class ServeEngine:
             self._decode_paged = jax.jit(self._decode_paged_impl,
                                          static_argnames=("n",),
                                          donate_argnums=(1,))
-            self._scatter = jax.jit(self._scatter_impl, donate_argnums=(0,))
             self._prefill_window = jax.jit(self._prefill_window_impl,
                                            donate_argnums=(1,))
             self._extend_tables = jax.jit(extend_block_tables)
@@ -441,6 +537,9 @@ class ServeEngine:
                             for k, v in lm.init_cache(cfg, B,
                                                       self._max_seq).items()
                             if k != "pos"}
+            if self._repl_ns is not None:
+                # SSM/hybrid slot state is replicated over the serve mesh
+                self._sstate = jax.device_put(self._sstate, self._repl_ns)
             self._decode_slots = jax.jit(self._decode_slots_impl,
                                          static_argnames=("n",),
                                          donate_argnums=(1,))
@@ -569,11 +668,37 @@ class ServeEngine:
             self._mh["resident"].set(
                 sum(r is not None for r in self._slot_req))
 
+    # ------------------------------------------------------- mesh placement
+    def _dev(self, x):
+        """Upload a host array REPLICATED over the serve mesh (plain
+        ``jnp.asarray`` off-mesh). Used for every device-resident array the
+        compiled programs treat as replicated — block tables, the decode
+        carry, slot state — so no launch ever sees an unexpectedly
+        device-0-committed operand."""
+        a = jnp.asarray(x)
+        if self._repl_ns is not None:
+            a = jax.device_put(a, self._repl_ns)
+        return a
+
+    def _place_pool(self, pkv):
+        """Commit a freshly built KV pool to its mesh sharding: partitioned
+        on the KV-head axis when the model axis shards attention, else
+        replicated-equivalent single-device placement. Keeping the pool
+        committed is what makes the per-device footprint 1/N and lets the
+        donated chunk in/out buffers alias without a relayout."""
+        if self._pool_sharded:
+            pkv = jax.device_put(
+                pkv, NamedSharding(self.ctx.mesh,
+                                   serve_pool_spec(self.cfg, self.ctx)))
+        elif self._repl_ns is not None:
+            pkv = jax.device_put(pkv, self._repl_ns)
+        return pkv
+
     # ---------------------------------------------------------- compiled fns
     def _prefill_impl(self, params, tokens, last_positions, max_len: int):
         with use_shard_ctx(self.ctx):
             return lm.prefill(self.cfg, params, tokens, max_len=max_len,
-                              last_positions=last_positions)
+                              last_positions=last_positions, ctx=self.ctx)
 
     def _decode_n_impl(self, params, cache, token, n: int):
         """n contiguous decode steps in one XLA launch (per-call baseline)."""
@@ -601,7 +726,7 @@ class ServeEngine:
         with use_shard_ctx(self.ctx):
             pkv, (ln, tok, rm), toks = lm.decode_chunk_paged(
                 self.cfg, params, pkv, tables, (lengths, last, rem), n,
-                impl=self.paged_impl)
+                impl=self.paged_impl, ctx=self.ctx)
             return pkv, tok, ln, rm, toks
 
     def _decode_slots_impl(self, params, state, last, lengths, rem, n: int):
@@ -612,14 +737,16 @@ class ServeEngine:
         next admission)."""
         with use_shard_ctx(self.ctx):
             st, (ln, tok, rm), toks = lm.decode_chunk_slots(
-                self.cfg, params, state, (lengths, last, rem), n)
+                self.cfg, params, state, (lengths, last, rem), n,
+                ctx=self.ctx)
             return st, tok, ln, rm, toks
 
     def _prefill_window_impl(self, params, pkv, tables, tokens, start,
                              valid, last_idx):
         with use_shard_ctx(self.ctx):
             return lm.prefill_window_paged(self.cfg, params, pkv, tables,
-                                           tokens, start, valid, last_idx)
+                                           tokens, start, valid, last_idx,
+                                           ctx=self.ctx)
 
     def _scatter_impl(self, pkv, blocks, krows, vrows):
         return scatter_prefill_rows(pkv, blocks, krows, vrows)
@@ -1827,23 +1954,25 @@ class ServeEngine:
         self._window_pending = None
         metrics = self.obs.metrics if self.obs is not None else None
         if self.paged:
-            self._pkv = new_pkv
+            self._pkv = self._place_pool(new_pkv)
             self._stall_rem[:] = 0
             self._pref_pos[:] = 0
             self._wp_valid[:] = False
             self._tables[:] = 0
-            self._tables_dev = jnp.zeros(self._tables.shape, jnp.int32)
+            self._tables_dev = self._dev(
+                np.zeros(self._tables.shape, np.int32))
             self._slot_prompt = [None] * B
             self._pool.set_metrics(metrics)
             if self.prefix_cache:
                 self._prefix = PrefixCache(self._pool)
                 self._prefix.set_metrics(metrics)
         else:
-            self._sstate = new_state
+            self._sstate = new_state if self._repl_ns is None \
+                else jax.device_put(new_state, self._repl_ns)
         if self.async_decode:
-            self._carry = (jnp.zeros((B,), jnp.int32),
-                           jnp.zeros((B,), jnp.int32),
-                           jnp.zeros((B,), jnp.int32))
+            self._carry = (self._dev(np.zeros((B,), np.int32)),
+                           self._dev(np.zeros((B,), np.int32)),
+                           self._dev(np.zeros((B,), np.int32)))
         for b, r in seated:
             if self._tr is not None:
                 self._phase_end(b, now, r)
@@ -1931,6 +2060,7 @@ class ServeEngine:
             self.stats["tokens_out"] += emitted
         retire = self._collect_finished()
         t3 = time.perf_counter()
+        self._note_rate(emitted, t3 - t0)
         o = self.overlap_stats
         o["cycles"] += 1
         # dispatch_s here = mirror uploads + launch; under CPU contention
@@ -2059,6 +2189,7 @@ class ServeEngine:
             # past every device write that could touch them
             self._pool.release_deferred()
         t3 = time.perf_counter()
+        self._note_rate(emitted, t3 - t0)
         o = self.overlap_stats
         o["cycles"] += 1
         o["dispatch_s"] += t2 - t1
@@ -2219,14 +2350,51 @@ class ServeEngine:
             return float(v) if v is not None else None
         return float(b)
 
+    def _note_rate(self, emitted: int, dt: float) -> None:
+        """Fold one decode cycle into the observed service rate: emitted
+        tokens over the cycle's WALL time (device chunk + host
+        bookkeeping — the rate the backlog actually drains at). Cycles
+        that emitted nothing (pure prefill/admission cycles) are skipped
+        rather than averaged in as zero: they stall emission but their
+        cost is already inside the neighbouring cycles' wall time."""
+        if emitted <= 0 or dt <= 0.0:
+            return
+        r = emitted / dt
+        a = self._rate_alpha
+        self._decode_rate = r if self._decode_rate == 0.0 \
+            else (1.0 - a) * self._decode_rate + a * r
+
     def _estimated_wait_s(self, priority: int) -> Optional[float]:
-        """Admission-wait estimate for a NEW request at ``priority``, from
-        live signals: the p90 of observed queue waits (``serve
-        .queue_wait_s`` — it already embeds the engine's real drain rate)
-        scaled by how much deeper the tier-visible backlog is than one
-        admission wave. Returns None (no shedding) until the histogram has
-        enough samples to be meaningful — the estimator never sheds on a
-        cold start."""
+        """Admission-wait estimate for a NEW request at ``priority``.
+
+        Primary model — SERVICE RATE: the engine's observed decode
+        throughput (EWMA tokens/s over whole cycles, :meth:`_note_rate`)
+        divides the work queued ahead of the request: every resident
+        row's remaining decode steps (including fence-stalled balances)
+        plus the ``max_new`` of everything waiting at tiers <= the
+        request's. This tracks load directly — it rises the moment the
+        backlog grows, rather than waiting for slow admissions to feed
+        the queue-wait histogram.
+
+        Fallback — the pre-existing p90-queue-wait heuristic (the p90 of
+        ``serve.queue_wait_s`` scaled by the tier-visible backlog in
+        admission waves), used only until the engine has emitted its
+        first tokens. It still arms only after 8 recorded admissions, so
+        a cold-start engine never sheds. Returns None when neither model
+        has a signal."""
+        rate = self._decode_rate
+        if rate > 0.0:
+            resident = 0
+            # lock-free mirror reads (heuristic: same policy as the
+            # watchdog's busy probe — at worst one cycle stale)
+            for b in range(len(self._rem)):
+                if self._slot_req[b] is None:
+                    continue
+                resident += int(self._rem[b])
+                if self.paged:
+                    resident += int(self._stall_rem[b])
+            backlog = self._scheduler.waiting_tokens_upto(priority)
+            return (resident + backlog) / rate
         if self._mh is None:
             return None
         h = self._mh["qwait"]

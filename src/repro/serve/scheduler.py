@@ -10,9 +10,12 @@ futures.
 Admission policy — *tiered FIFO on prompt-only footprint*:
 
 * requests carry a **priority tier** (``ServeRequest(priority=...)``,
-  0 = highest/SLO tier, larger = more best-effort). Each tier is one FIFO
-  ordered by request id; admission scans tiers in strict priority order,
-  oldest-first within a tier;
+  0 = highest/SLO tier, larger = more best-effort). Each tier is one queue
+  ordered **earliest-deadline-first**: requests with a ``deadline_s`` sort
+  by their absolute deadline ahead of deadline-less ones, which keep plain
+  FIFO (request-id) order among themselves — a pure-FIFO workload is
+  byte-identical to the pre-EDF scheduler. Admission scans tiers in strict
+  priority order, EDF-then-FIFO within a tier;
 * a group is admitted when the block pool covers every member's **prompt**
   KV footprint (not ``prompt + max_new``) and free decode slots exist.
   Decode-time KV is allocated lazily, block by block, as sequences grow
@@ -218,12 +221,22 @@ class Scheduler:
                     f"tier_targets[{t}] = {s}: share must be in (0, 1]")
         self.on_event: Optional[Callable[[str, ServeRequest], None]] = None
         self._lock = threading.Lock()
-        # one FIFO per tier, each ordered by request id (enqueue appends,
-        # preemption re-inserts at the tier front — preempted requests are
-        # older than anything still waiting in their tier, so id order is
-        # preserved)
+        # one queue per tier, each kept sorted by the EDF key (deadline-or-
+        # infinity, then request id): deadline requests admit earliest-
+        # deadline-first, deadline-less ones keep FIFO order after them.
+        # Enqueue of a deadline-less request is still an O(1) append —
+        # its key (inf, monotone id) always sorts last.
         self._queues: Dict[int, Deque[ServeRequest]] = {}
         self._g_depth = None           # serve.queue_depth gauge when bound
+
+    @staticmethod
+    def _edf_key(r: ServeRequest) -> tuple:
+        """Within-tier admission order: earliest absolute deadline first,
+        deadline-less requests after every deadline one in FIFO (id)
+        order. Ids are monotone, so the id tiebreak preserves submission
+        order among equal deadlines too."""
+        d = r.deadline_at
+        return (d if d is not None else float("inf"), r.id)
 
     def set_metrics(self, metrics) -> None:
         """Bind (or unbind with None) a :class:`repro.obs.MetricsRegistry`:
@@ -250,18 +263,25 @@ class Scheduler:
     def enqueue(self, req: ServeRequest) -> None:
         req.state = "waiting"
         req.queued_since = time.perf_counter()
+        key = self._edf_key(req)
         with self._lock:
-            self._q_locked(req.priority).append(req)
+            q = self._q_locked(req.priority)
+            if not q or key >= self._edf_key(q[-1]):
+                q.append(req)    # deadline-less fast path: always lands here
+            else:
+                self._queues[req.priority] = deque(
+                    sorted(list(q) + [req], key=self._edf_key))
             self._note_depth_locked()
 
     def requeue_front(self, reqs: Iterable[ServeRequest]) -> None:
         """Put preempted (or admission-race-unwound) requests back into
-        their tier's line at their id positions. A plain extendleft would
-        suffice from ONE caller, but the decode stage (preemption) and the
-        admit stage (alloc-race unwind) can both re-queue concurrently —
-        merging by id keeps each tier's FIFO/no-starvation invariant under
-        that race."""
-        reqs = sorted(reqs, key=lambda r: r.id)
+        their tier's line at their EDF-key positions. A plain extendleft
+        would suffice from ONE caller, but the decode stage (preemption)
+        and the admit stage (alloc-race unwind) can both re-queue
+        concurrently — merging by key keeps each tier's EDF/no-starvation
+        invariant under that race (for deadline-less requests the key is
+        their id, so this is the old FIFO merge)."""
+        reqs = sorted(reqs, key=self._edf_key)
         now = time.perf_counter()
         for r in reqs:
             r.state = "waiting"
@@ -269,7 +289,7 @@ class Scheduler:
         with self._lock:
             for r in reqs:
                 q = self._q_locked(r.priority)
-                merged = sorted(list(q) + [r], key=lambda x: x.id)
+                merged = sorted(list(q) + [r], key=self._edf_key)
                 self._queues[r.priority] = deque(merged)
             self._note_depth_locked()
 
@@ -285,6 +305,15 @@ class Scheduler:
         with self._lock:
             return sum(len(q) for t, q in self._queues.items()
                        if t <= priority)
+
+    def waiting_tokens_upto(self, priority: int) -> int:
+        """Total decode work (``max_new`` tokens) waiting at tiers <=
+        ``priority`` — the backlog term of the service-rate load-shed
+        estimator (everything that drains ahead of, or alongside, a new
+        request at that tier)."""
+        with self._lock:
+            return sum(r.max_new for t, q in self._queues.items()
+                       if t <= priority for r in q)
 
     def peek_head(self) -> Optional[ServeRequest]:
         """The request the strict-priority scan would admit next (no pop,
@@ -369,7 +398,8 @@ class Scheduler:
         that races with a concurrent grow it re-queues via
         :meth:`requeue_front`.
 
-        Selection: a strict-priority pass (tiers in order, FIFO within,
+        Selection: a strict-priority pass (tiers in order, EDF-then-FIFO
+        within — see :meth:`_edf_key`,
         the whole pass stops at the first member that does not fit), then
         the per-tier reserved seats (``tier_targets``) fill for backlogged
         tiers even when the strict pass was blocked. Expired/cancelled

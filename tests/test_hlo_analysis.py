@@ -3,7 +3,7 @@ it against programs with known exact costs."""
 import jax
 import jax.numpy as jnp
 
-from repro.distributed.hlo_analysis import analyze_hlo
+from repro.distributed.hlo_analysis import HloCost, analyze_hlo
 
 
 def _compile(fn, *args):
@@ -90,3 +90,71 @@ def test_dus_bytes_are_slice_sized():
     # itself must still be slice-sized
     cost2 = analyze_hlo(_compile(fn, big, upd).as_text())
     assert 4e6 < cost2.bytes_accessed < 1.2e7
+
+
+# ------------------------------------------------- collective classification
+# Post-SPMD HLO with one instance of each collective type and known shapes;
+# the analyzer must classify each by its LARGEST of (result, operand) bytes.
+# f32[64,128] = 32 KiB, f32[256,128] = 128 KiB.
+_COLLECTIVE_HLO = """\
+HloModule spmd_test
+
+ENTRY %main.1 (p0: f32[64,128]) -> f32[64,128] {
+  %p0 = f32[64,128]{1,0} parameter(0)
+  %ag = f32[256,128]{1,0} all-gather(f32[64,128]{1,0} %p0), dimensions={0}, replica_groups={{0,1,2,3}}
+  %ar = f32[256,128]{1,0} all-reduce(f32[256,128]{1,0} %ag), replica_groups={{0,1,2,3}}, to_apply=%add.1
+  %rs = f32[64,128]{1,0} reduce-scatter(f32[256,128]{1,0} %ar), dimensions={0}, replica_groups={{0,1,2,3}}, to_apply=%add.1
+  ROOT %cp = f32[64,128]{1,0} collective-permute(f32[64,128]{1,0} %rs), source_target_pairs={{0,1},{1,2},{2,3},{3,0}}
+}
+"""
+
+_ASYNC_HLO = """\
+HloModule spmd_async_test
+
+ENTRY %main.1 (p0: f32[64,128]) -> f32[256,128] {
+  %p0 = f32[64,128]{1,0} parameter(0)
+  %ags = (f32[64,128]{1,0}, f32[256,128]{1,0}) all-gather-start(f32[64,128]{1,0} %p0), dimensions={0}, replica_groups={{0,1,2,3}}
+  ROOT %agd = f32[256,128]{1,0} all-gather-done((f32[64,128]{1,0}, f32[256,128]{1,0}) %ags)
+}
+"""
+
+_KIB = 1024.0
+
+
+def test_collective_sizes_classified_per_type():
+    cost = analyze_hlo(_COLLECTIVE_HLO)
+    # each type keyed on max(result, operand) bytes
+    assert cost.collective_bytes["all-gather"] == 128 * _KIB
+    assert cost.collective_bytes["all-reduce"] == 128 * _KIB
+    assert cost.collective_bytes["reduce-scatter"] == 128 * _KIB
+    assert cost.collective_bytes["collective-permute"] == 32 * _KIB
+    assert cost.collective_bytes["all-to-all"] == 0.0
+    for c in ("all-gather", "all-reduce", "reduce-scatter",
+              "collective-permute"):
+        assert cost.collective_counts[c] == 1
+        assert cost.collective_max_bytes[c] == cost.collective_bytes[c]
+    # collective_total is the sum over every type
+    assert cost.collective_total == (128 + 128 + 128 + 32) * _KIB
+
+
+def test_async_collective_counted_once():
+    # the -start carries the cost; the -done must not double-count
+    cost = analyze_hlo(_ASYNC_HLO)
+    assert cost.collective_counts["all-gather"] == 1
+    assert cost.collective_bytes["all-gather"] == 128 * _KIB
+    assert cost.collective_max_bytes["all-gather"] == 128 * _KIB
+
+
+def test_collective_max_bytes_ignores_trip_counts():
+    # a loop repeats the SAME transfer: totals scale with the trip count,
+    # the largest single collective does not
+    body = HloCost()
+    body.collective_bytes["all-gather"] = 128 * _KIB
+    body.collective_counts["all-gather"] = 1
+    body.collective_max_bytes["all-gather"] = 128 * _KIB
+    total = HloCost()
+    total.add(body, 24)
+    assert total.collective_bytes["all-gather"] == 24 * 128 * _KIB
+    assert total.collective_counts["all-gather"] == 24
+    assert total.collective_max_bytes["all-gather"] == 128 * _KIB
+    assert total.collective_total == 24 * 128 * _KIB

@@ -84,6 +84,51 @@ def test_scheduler_strict_priority_order():
     assert group[3] is lo[0]
 
 
+def _stamp(r):
+    """Stamp the absolute deadline the engine's submit() would."""
+    r.submitted_at = time.perf_counter()
+    if r.deadline_s is not None:
+        r.deadline_at = r.submitted_at + r.deadline_s
+    return r
+
+
+def test_scheduler_edf_within_tier():
+    # within one tier, deadline requests admit earliest-deadline-first,
+    # AHEAD of deadline-less ones, which keep FIFO order among themselves
+    s = Scheduler(max_admit=8)
+    plain_a = _stamp(_req())
+    far = _stamp(_req(deadline_s=60.0))
+    near = _stamp(_req(deadline_s=5.0))
+    plain_b = _stamp(_req())
+    for r in (plain_a, far, near, plain_b):
+        s.enqueue(r)
+    group = s.try_admit(free_slots=8, blocks_free=None)
+    assert group == [near, far, plain_a, plain_b]
+
+
+def test_scheduler_edf_is_fifo_without_deadlines():
+    # a pure-FIFO workload is untouched by EDF (ids are the tiebreak)
+    s = Scheduler(max_admit=8)
+    reqs = [_stamp(_req()) for _ in range(5)]
+    for r in reqs:
+        s.enqueue(r)
+    assert s.try_admit(free_slots=8, blocks_free=None) == reqs
+
+
+def test_scheduler_edf_requeue_merges_by_deadline():
+    # a preempted deadline request re-enters at its deadline position,
+    # not merely at its id position
+    s = Scheduler(max_admit=8)
+    urgent = _stamp(_req(deadline_s=1.0))     # oldest id, tightest deadline
+    later = _stamp(_req(deadline_s=120.0))
+    plain = _stamp(_req())
+    for r in (later, plain):
+        s.enqueue(r)
+    s.requeue_front([urgent])                 # e.g. preempted mid-decode
+    group = s.try_admit(free_slots=8, blocks_free=None)
+    assert group == [urgent, later, plain]
+
+
 def test_scheduler_reserved_seats_beat_head_of_line_blocking():
     s = Scheduler(max_admit=4, tier_targets={1: 0.25})
     for _ in range(8):
@@ -174,8 +219,10 @@ def test_submit_sheds_typed_overloaded(setup):
     obs = Observability()
     with ServeEngine(cfg, params, decode_chunk=2, shed_budget_s=0.05,
                      obs=obs) as eng:
-        # the estimator keys on OBSERVED queue waits and never sheds on a
-        # cold start; prime its histogram past the arming threshold
+        # cold start: no service-rate estimate yet, so the p90-queue-wait
+        # FALLBACK decides; it never sheds before 8 recorded admissions —
+        # prime its histogram past the arming threshold
+        assert eng._decode_rate == 0.0
         for _ in range(10):
             eng._mh["qwait"].record(1.0)
         with pytest.raises(Overloaded) as ei:
@@ -188,9 +235,45 @@ def test_submit_sheds_typed_overloaded(setup):
         eng._shed_budget = {1: 0.05}
         r = eng.submit(np.arange(1, 5, dtype=np.int32), max_new=4)
         assert eng.result(r, timeout=120.0).shape == (4,)
-        with pytest.raises(Overloaded):
+        # the completed request primed the SERVICE-RATE model, which now
+        # outranks the stale histogram: an IDLE engine has ~zero queued
+        # work, so a tier-1 submit must NOT shed despite the p90 saying 1s
+        assert eng._decode_rate > 0.0
+        r = eng.submit(np.arange(1, 5, dtype=np.int32), max_new=4,
+                       priority=1)
+        assert eng.result(r, timeout=120.0).shape == (4,)
+        # under real queued work the rate model sheds: pin the rate so the
+        # estimate is deterministic, then load the engine with a long
+        # tier-0 resident before probing tier 1
+        long = eng.submit(np.arange(1, 5, dtype=np.int32), max_new=400)
+        eng._decode_rate = 100.0      # 400 queued tokens -> ~4s >> 0.05s
+        with pytest.raises(Overloaded) as ei:
             eng.submit(np.arange(1, 5, dtype=np.int32), max_new=4,
                        priority=1)
+        assert ei.value.est_wait_s > ei.value.budget_s
+        # tier 0 is absent from the dict budget: never shed
+        r0 = eng.submit(np.arange(1, 5, dtype=np.int32), max_new=4)
+        assert eng.result(r0, timeout=120.0).shape == (4,)
+        long.cancel()
+
+
+def test_service_rate_estimator(setup):
+    """The rate model's arithmetic: (resident remaining + waiting work at
+    tiers <= priority) / observed tokens-per-second."""
+    cfg, params = setup
+    with ServeEngine(cfg, params, decode_chunk=2) as eng:
+        assert eng._estimated_wait_s(0) is None      # no rate, no metrics
+        eng._note_rate(20, 0.5)                      # 40 tok/s
+        assert eng._decode_rate == pytest.approx(40.0)
+        eng._note_rate(0, 1.0)                       # empty cycles skipped
+        assert eng._decode_rate == pytest.approx(40.0)
+        from repro.serve.scheduler import ServeRequest
+        eng._scheduler.enqueue(ServeRequest([1, 2], 30, priority=0))
+        eng._scheduler.enqueue(ServeRequest([1, 2], 50, priority=2))
+        # tier 0 sees only its own backlog; tier 2 sees both
+        assert eng._estimated_wait_s(0) == pytest.approx(30 / 40.0)
+        assert eng._estimated_wait_s(2) == pytest.approx(80 / 40.0)
+        eng._scheduler.fail_all_waiting(RuntimeError("drain"))
 
 
 # ------------------------------------------------ deadlines + cancel (engine)
