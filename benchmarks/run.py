@@ -37,6 +37,9 @@ decode_overlap — async decode lookahead vs the synchronous decode loop:
 obs_gate — observability overhead gate: serve tok/s with the obs stack
           enabled must stay within REPRO_OBS_GATE_BUDGET (default 2%)
           of disabled; honors --quick
+journal_gate — durability overhead gate: serve tok/s with the request
+          WAL attached must stay within REPRO_JOURNAL_GATE_BUDGET
+          (default 5%) of detached; honors --quick
 
 Each completed suite drops ``BENCH_<suite>.json`` into --bench-dir
 (default: CWD): the run config, every emitted row, the well-known
@@ -134,9 +137,10 @@ def main() -> None:
     from . import (decode_overlap_microbench, fig9_micro_random_dag,
                    fig11_corun_throughput, fig13_lsdnn,
                    fig17_conditional_memory, fig21_incremental_timing,
-                   obs_overhead_gate, paged_decode_microbench,
-                   pipeline_throughput, roofline_report, serve_continuous,
-                   serve_slo, table2_task_overhead)
+                   journal_overhead_gate, obs_overhead_gate,
+                   paged_decode_microbench, pipeline_throughput,
+                   roofline_report, serve_continuous, serve_slo,
+                   table2_task_overhead)
 
     # trace artifacts land next to the BENCH_*.json they belong to
     os.makedirs(args.bench_dir, exist_ok=True)
@@ -182,6 +186,8 @@ def main() -> None:
             lambda: decode_overlap_microbench.bench(
                 quick=args.quick, trace_path=_trace("decode_overlap")),
         "obs_gate": lambda: obs_overhead_gate.bench(quick=args.quick),
+        "journal_gate":
+            lambda: journal_overhead_gate.bench(quick=args.quick),
     }
     config = {"quick": args.quick, "only": args.only,
               "prompt_dist": args.prompt_dist,
@@ -191,7 +197,9 @@ def main() -> None:
               "paged_impl_env": os.environ.get("REPRO_PAGED_IMPL", ""),
               "async_decode_env": os.environ.get("REPRO_ASYNC_DECODE", ""),
               "obs_gate_budget_env":
-                  os.environ.get("REPRO_OBS_GATE_BUDGET", "")}
+                  os.environ.get("REPRO_OBS_GATE_BUDGET", ""),
+              "journal_gate_budget_env":
+                  os.environ.get("REPRO_JOURNAL_GATE_BUDGET", "")}
     only = [s for s in args.only.split(",") if s]
     failures = 0
     for name, fn in suites.items():

@@ -20,10 +20,23 @@ track next to the engine-cycle and pipeline-line tracks:
 
     PYTHONPATH=src python -m repro.launch.serve \
         --stats-interval 1 --trace out.json
+
+Durability (``docs/robustness.md``): ``--state-dir DIR`` journals every
+request transition to ``DIR/journal.wal`` and recovers on startup —
+incomplete requests from a previous crash replay bit-identically, and a
+prior ``engine.snap`` warm-starts the prefix cache (a corrupt snapshot
+falls back cold, typed). SIGTERM triggers a graceful drain
+(``--drain-deadline`` bounds it: past the deadline residents are
+checkpoint-preempted), then a snapshot + journal flush, then close:
+
+    PYTHONPATH=src python -m repro.launch.serve --state-dir /var/lib/repro
 """
 from __future__ import annotations
 
 import argparse
+import os
+import signal
+import threading
 import time
 
 import jax
@@ -33,7 +46,7 @@ from ..configs import get_config
 from ..distributed.sharding import validate_serve_mesh
 from ..models import lm
 from ..obs import Observability, StatsLogger
-from ..serve.engine import ServeEngine
+from ..serve.engine import SNAPSHOT_FILE, ServeEngine
 from .mesh import make_ctx, small_mesh
 
 
@@ -96,6 +109,20 @@ def main() -> None:
                          "model's KV heads, heads and d_model; on CPU set "
                          "XLA_FLAGS=--xla_force_host_platform_device_count"
                          "=N first. Unset defers to REPRO_MESH_MODEL")
+    ap.add_argument("--state-dir", default=None, metavar="DIR",
+                    help="durability state directory: journal every "
+                         "request transition to DIR/journal.wal, recover "
+                         "(replay incomplete requests + warm-start the "
+                         "prefix cache from DIR/engine.snap) on startup, "
+                         "and snapshot on graceful shutdown/SIGTERM")
+    ap.add_argument("--drain-deadline", type=float, default=10.0,
+                    metavar="S",
+                    help="graceful-drain budget on SIGTERM: residents get "
+                         "S seconds to finish before being "
+                         "checkpoint-preempted (default 10)")
+    ap.add_argument("--fsync-every", type=int, default=1, metavar="N",
+                    help="journal fsync cadence: every N records (1 = "
+                         "maximal durability, 0 = only at flush/close)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--stats-interval", type=float, default=None,
                     help="print a one-line runtime stats summary every N "
@@ -150,6 +177,37 @@ def main() -> None:
                      watchdog_s=args.watchdog,
                      fault_inject=args.fault_inject,
                      obs=obs) as eng:
+        replayed = {}
+        if args.state_dir:
+            # crash/restart recovery: warm-start from a prior snapshot
+            # (typed cold fallback on corruption) and re-submit every
+            # journal-incomplete request — greedy decode replays them
+            # bit-identically — then journal this run at the same path
+            replayed = eng.recover(args.state_dir,
+                                   fsync_every=args.fsync_every)
+            if replayed or eng.stats["warm_started"]:
+                print(f"recovered: {len(replayed)} incomplete request(s) "
+                      f"replaying ({eng.stats['replayed_tokens']} prompt "
+                      f"tokens), {eng.stats['warm_started']} warm prefix "
+                      f"node(s)")
+
+        def _graceful(signum, frame):
+            # runs the drain off the signal frame: the main thread may be
+            # blocked in result(), and drain/snapshot must not run there
+            def run():
+                print(f"SIGTERM: draining "
+                      f"(deadline {args.drain_deadline:.1f}s)")
+                eng.drain(deadline_s=args.drain_deadline)
+                if args.state_dir:
+                    path = os.path.join(args.state_dir, SNAPSHOT_FILE)
+                    n = eng.snapshot(path)
+                    print(f"snapshot: {n} bytes -> {path}")
+                eng.close()
+                os._exit(0)
+            threading.Thread(target=run, name="serve-drain",
+                             daemon=True).start()
+        signal.signal(signal.SIGTERM, _graceful)
+
         if logger is not None:
             logger.start()
         t0 = time.time()
@@ -167,12 +225,20 @@ def main() -> None:
                 if args.stagger:
                     time.sleep(args.stagger)
             outs = [eng.result(r, timeout=600.0) for r in reqs]
+        for r in replayed.values():
+            eng.result(r, timeout=600.0)
         dt = time.time() - t0
         print(f"{cfg.name}: generated {total_new} tokens in {dt:.2f}s "
               f"({total_new/dt:.1f} tok/s, batch={args.batch}, "
               f"mode={'per-call' if args.per_call else 'continuous'})")
         print("engine stats:", eng.stats)
         print("sample:", outs[0][:16].tolist())
+        if args.state_dir:
+            # clean exit: settle and leave a warm snapshot for the next run
+            eng.drain(deadline_s=args.drain_deadline)
+            n = eng.snapshot(os.path.join(args.state_dir, SNAPSHOT_FILE))
+            print(f"snapshot: {n} bytes -> "
+                  f"{os.path.join(args.state_dir, SNAPSHOT_FILE)}")
         if logger is not None:
             logger.stop()
     if args.trace:

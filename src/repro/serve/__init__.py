@@ -18,6 +18,14 @@
 * :mod:`.faultinject` — the deterministic fault-injection harness
   (``REPRO_FAULT_INJECT`` / ``ServeEngine(fault_inject=...)``; seeded
   per-site schedules, see ``docs/robustness.md``);
+* :mod:`.journal`   — the durability WAL: checksummed request-transition
+  records, torn-tail truncating :func:`~repro.serve.journal.replay`
+  (crashed requests re-submit and replay bit-identically under greedy
+  decode);
+* :mod:`.snapshot`  — the checksummed, versioned, pickle-free engine
+  snapshot container (prefix trie + parked KV pages + waiting-queue
+  descriptors; ANY integrity failure is typed ``SnapshotCorrupt`` and
+  recovery cold-starts);
 * :mod:`.kvcache`   — paged KV-cache pool (REFCOUNTED block allocator with
   mid-decode ``grow_table`` + jit-able fused K/V scatters through
   per-sequence block tables, including the chunked-prefill
@@ -215,16 +223,37 @@ environment — turns on the serve-layer observability stack
 A ``None`` obs handle (the default) keeps every hot path to a single
 attribute check; ``benchmarks/obs_overhead_gate.py`` enforces the
 enabled-path budget (2% local, 5% CI).
+
+Durable serving
+---------------
+Off by default, composable on (``docs/robustness.md`` "Durability &
+recovery"): attach a :class:`~repro.serve.journal.Journal` (or pass
+``--state-dir`` to ``repro.launch.serve``) and every request transition
+lands in a checksummed WAL; ``ServeEngine.recover(state_dir)`` replays
+a crashed engine's incomplete requests bit-identically and warm-starts
+the prefix cache from the last ``ServeEngine.snapshot`` (corruption is
+typed ``SnapshotCorrupt`` → cold start, never wrong tokens);
+``ServeEngine.drain(deadline_s=...)`` gates admission and
+checkpoint-preempts residents past the deadline (sync SSM/hybrid rows
+capture recurrent slot state and resume without re-prefill). The
+launcher turns SIGTERM into drain → snapshot → close.
+``benchmarks/journal_overhead_gate.py`` enforces the journaled-path
+budget; the no-journal path is one ``is None`` check per transition.
 """
-from .engine import ServeEngine
+from .engine import JOURNAL_FILE, SNAPSHOT_FILE, ServeEngine
 from .errors import (DeadlineExceeded, EngineClosed, Overloaded,
                      RequestCancelled, RowFailed, ServeError,
-                     WatchdogTimeout)
+                     SnapshotCorrupt, WatchdogTimeout)
 from .faultinject import FaultInjected, FaultInjector
+from .journal import Journal, JournalReplay, replay
 from .kvcache import BlockPool, init_kv_pool
 from .scheduler import Scheduler, ServeRequest
+from .snapshot import read_snapshot, write_snapshot
 
 __all__ = ["ServeEngine", "ServeRequest", "Scheduler", "BlockPool",
            "init_kv_pool", "ServeError", "Overloaded", "DeadlineExceeded",
            "RequestCancelled", "RowFailed", "WatchdogTimeout",
-           "EngineClosed", "FaultInjector", "FaultInjected"]
+           "EngineClosed", "SnapshotCorrupt", "FaultInjector",
+           "FaultInjected", "Journal", "JournalReplay", "replay",
+           "read_snapshot", "write_snapshot", "JOURNAL_FILE",
+           "SNAPSHOT_FILE"]

@@ -141,15 +141,23 @@ from ..obs import TRACK_ENGINE
 from ..obs import from_env as _obs_from_env
 from ..pipeline import DataPipe, DataPipeline, PipeType
 from .errors import (DeadlineExceeded, EngineClosed, Overloaded,
-                     RequestCancelled, RowFailed, WatchdogTimeout)
+                     RequestCancelled, RowFailed, SnapshotCorrupt,
+                     WatchdogTimeout)
 from .faultinject import FaultInjected, FaultInjector
+from .journal import Journal, replay as replay_journal
 from .kvcache import (SINK_BLOCK, BlockPool, copy_blocks,
                       extend_block_tables, init_kv_pool,
                       scatter_prefill_rows, set_carry_rows, set_table_rows)
 from .prefix import PrefixCache
 from .scheduler import Scheduler, ServeRequest
+from .snapshot import corrupt_snapshot, read_snapshot, write_snapshot
 
-__all__ = ["ServeEngine", "ServeRequest"]
+__all__ = ["ServeEngine", "ServeRequest", "JOURNAL_FILE", "SNAPSHOT_FILE"]
+
+#: File names ``recover()`` / ``launch.serve --state-dir`` use inside a
+#: state directory.
+JOURNAL_FILE = "journal.wal"
+SNAPSHOT_FILE = "engine.snap"
 
 
 def _env_mesh_ctx(cfg: ModelConfig) -> Optional[ShardCtx]:
@@ -310,6 +318,7 @@ class ServeEngine:
                  shed_budget_s=None,
                  watchdog_s: Optional[float] = None,
                  fault_inject=None,
+                 journal=None,
                  record_stages: bool = False,
                  obs=None):
         self.cfg = cfg
@@ -368,6 +377,19 @@ class ServeEngine:
         #: uncached bit-exact reference path
         self.prefix_cache = bool(prefix_cache) and self.paged
         self._closing = False
+        # graceful drain: set by drain() — admission stops, residents run
+        # to completion; past _drain_deadline_at the decode stage
+        # checkpoint-preempts every resident so close() can fail the
+        # requeued work typed instead of hanging on it
+        self._draining = False
+        self._drain_deadline_at: Optional[float] = None
+        # request WAL (durability boundary #1, off by default): a
+        # repro.serve.journal.Journal or a path string; every lifecycle
+        # transition appends one checksummed record. The None path is one
+        # `is None` check per transition — bit-exact unchanged.
+        if isinstance(journal, str):
+            journal = Journal(journal)
+        self._journal: Optional[Journal] = journal
         self._broken: Optional[BaseException] = None
         self._stage_log = [] if record_stages else None
         self._log_lock = threading.Lock()
@@ -457,7 +479,9 @@ class ServeEngine:
                       "prefix_hits": 0, "prefix_tokens_saved": 0,
                       "cow_forks": 0, "shed": 0, "expired": 0,
                       "cancelled": 0, "watchdog_fires": 0,
-                      "row_failures": 0}
+                      "row_failures": 0, "recovered": 0,
+                      "replayed_tokens": 0, "drain_preempted": 0,
+                      "warm_started": 0}
 
         self._prefix: Optional[PrefixCache] = None
         self._kv_geom = (kv_blocks, block_size)   # failure-isolation reinit
@@ -581,6 +605,8 @@ class ServeEngine:
             self._pool.set_metrics(metrics)
         if self._prefix is not None:
             self._prefix.set_metrics(metrics)
+        if self._journal is not None:
+            self._journal.set_metrics(metrics)
         if self._pipeline is not None:
             self._pipeline.tracer = self._tr
         #: per-tier TTFT histograms, keyed by priority — populated lazily
@@ -611,7 +637,23 @@ class ServeEngine:
             "cancelled": metrics.counter("serve.cancelled"),
             "watchdog": metrics.counter("serve.watchdog_fires"),
             "row_failed": metrics.counter("serve.row_failures"),
+            "recovered": metrics.counter("serve.recovered"),
+            "replayed": metrics.counter("serve.replayed_tokens"),
         }
+
+    def set_journal(self, journal) -> None:
+        """Attach (or detach, with None) a request :class:`~repro.serve
+        .journal.Journal`. Rebindable while the engine is idle — the
+        journal-overhead gate toggles the WAL on ONE engine the same way
+        :meth:`set_obs` toggles observability. Accepts a path string."""
+        if isinstance(journal, str):
+            journal = Journal(journal)
+        old = self._journal
+        self._journal = journal
+        if journal is not None and self.obs is not None:
+            journal.set_metrics(self.obs.metrics)
+        if old is not None and old is not journal:
+            old.close()
 
     def _phase_begin(self, slot: int, name: str, t: float) -> None:
         self._slot_span[slot] = (name, t)
@@ -642,6 +684,8 @@ class ServeEngine:
     def _note_first_token(self, req, now: float) -> None:
         if req.first_token_at is None:
             req.first_token_at = now
+            if self._journal is not None:
+                self._journal.first_token(req)
             if self._mh is not None and req.submitted_at is not None:
                 ttft = now - req.submitted_at
                 self._mh["ttft"].record(ttft)
@@ -657,6 +701,8 @@ class ServeEngine:
         request was dropped — ``kind`` in ``("expired", "cancelled")``."""
         with self._state_lock:
             self.stats[kind] += 1
+        if self._journal is not None:
+            self._journal.cancel(req, kind)
         if self._mh is not None:
             self._mh[kind].inc()
         if self._tr is not None:
@@ -826,7 +872,10 @@ class ServeEngine:
                 if self._broken is not None:
                     break
                 if self._pipeline.idle() and \
-                        self._scheduler.num_waiting == 0:
+                        (self._scheduler.num_waiting == 0
+                         or self._draining):
+                    # a draining engine never admits its backlog — stop
+                    # waiting on it; the typed fail below settles it
                     break
                 time.sleep(0.005)
         self._wd_stop.set()
@@ -845,6 +894,8 @@ class ServeEngine:
             # device work that fenced it — flush the fence
             while self._pool.num_deferred:
                 self._pool.release_deferred()
+        if self._journal is not None:
+            self._journal.close()
         if self._own_executor and self._executor is not None:
             self._executor.shutdown()
             self._executor = None
@@ -855,6 +906,208 @@ class ServeEngine:
 
     def __exit__(self, *exc) -> None:
         self.close()
+
+    # -------------------------------------------------- durability (drain /
+    # snapshot / restore / recover — see docs/robustness.md)
+    def drain(self, deadline_s: Optional[float] = None,
+              timeout: float = 300.0) -> bool:
+        """Gracefully drain the engine: stop admitting (``submit()`` and
+        the admission stage both gate typed), let resident rows run to
+        completion, and — once ``deadline_s`` elapses — have the decode
+        stage CHECKPOINT-PREEMPT every remaining resident (SSM sync rows
+        capture their exact recurrent state; paged/async rows replay
+        bit-identically later) so the engine settles instead of riding
+        out its longest resident. The drain thread only sets flags and
+        polls: all slot-state mutation stays on the SERIAL decode stage,
+        the single writer. Flushes the journal once settled. Returns
+        True when the engine reached idle within ``timeout``; waiting
+        and preempted requests stay queued — snapshot them, then
+        ``close()`` fails them typed :class:`EngineClosed`. Idempotent."""
+        self._draining = True
+        if deadline_s is not None and self._drain_deadline_at is None:
+            self._drain_deadline_at = time.perf_counter() + deadline_s
+        settled = True
+        if self._pipeline is not None:
+            limit = time.perf_counter() + timeout
+            settled = False
+            while time.perf_counter() < limit:
+                if self._broken is not None:
+                    settled = True
+                    break
+                with self._state_lock:
+                    occupied = any(r is not None for r in self._slot_req)
+                    reserved = self._slots_reserved
+                if self._pipeline.idle() and not occupied \
+                        and reserved == 0:
+                    settled = True
+                    break
+                time.sleep(0.005)
+        if self._journal is not None:
+            self._journal.flush()
+        return settled
+
+    def snapshot(self, path: str) -> int:
+        """Serialize warm state to ``path`` (atomic, checksummed — see
+        :mod:`repro.serve.snapshot`): the prefix trie with its stable
+        blake2b chunk keys and every indexed block's KV page, plus
+        waiting-queue request descriptors. Call at idle (typically right
+        after :meth:`drain`): resident rows are NOT captured — the
+        journal covers them by replay. Returns bytes written. The
+        ``snapshot_corrupt`` fault site flips a payload byte right after
+        the write, for the typed cold-fallback tests."""
+        if self._journal is not None:
+            self._journal.flush()
+        meta: Dict[str, Any] = {"paged": self.paged}
+        arrays: Dict[str, np.ndarray] = {}
+        qdesc = []
+        qtoks: List[np.ndarray] = []
+        for r in self._scheduler.export_waiting():
+            qdesc.append({"id": int(r.id), "max_new": int(r.max_new),
+                          "priority": int(r.priority),
+                          "deadline_s": r.deadline_s})
+            qtoks.append(np.asarray(r.prompt, np.int32))
+        meta["queue"] = qdesc
+        arrays["queue_tokens"] = (np.concatenate(qtoks) if qtoks
+                                  else np.zeros((0,), np.int32))
+        arrays["queue_lens"] = np.asarray([len(t) for t in qtoks],
+                                          np.int32)
+        if self.paged:
+            meta["block_size"] = int(self._pool.block_size)
+        if self._prefix is not None:
+            nodes = self._prefix.export_nodes()
+            meta["prefix"] = [{"parent": n["parent"], "key": n["key"],
+                               "depth": n["depth"], "hits": n["hits"]}
+                              for n in nodes]
+            ptoks = [n["tokens"].astype(np.int32) for n in nodes]
+            arrays["prefix_tokens"] = (np.concatenate(ptoks) if ptoks
+                                       else np.zeros((0,), np.int32))
+            arrays["prefix_lens"] = np.asarray(
+                [len(t) for t in ptoks], np.int32)
+            ids = [n["block"] for n in nodes]
+            hp = np.asarray(jax.device_get(self._pkv))
+            # (L, 2, N, KV, bs, hd): page i on axis 2 is node i's block.
+            # Stored as RAW BYTES (uint8 view): npz round-trips bfloat16
+            # only as opaque void, so the restore side re-views with the
+            # live pool dtype (recorded below for the compat check)
+            pg = np.ascontiguousarray(hp[:, :, ids] if ids
+                                      else hp[:, :, :0])
+            arrays["prefix_pages"] = pg.view(np.uint8)
+            meta["pool_dtype"] = str(hp.dtype)
+        n = write_snapshot(path, meta, arrays)
+        if self._fi is not None and self._fi.fire("snapshot_corrupt"):
+            corrupt_snapshot(path)
+        return n
+
+    def restore(self, path: str) -> List[Dict[str, Any]]:
+        """Warm-start THIS (freshly constructed, idle) engine from a
+        :meth:`snapshot` file: rebuild the prefix trie — fresh pool
+        blocks are allocated, the saved KV pages written into them, and
+        the nodes adopted PARKED and flagged warm, so a known system
+        prompt hits the cache on the first post-restart request
+        (``prefix.warm_hits``) — and return the waiting-queue
+        descriptors for the caller (:meth:`recover` re-submits them when
+        no journal supersedes the snapshot). Raises typed
+        :class:`SnapshotCorrupt` on any integrity or geometry mismatch
+        BEFORE mutating engine state, so callers fall back to a cold
+        start: a snapshot can lose warmth, never serve wrong tokens."""
+        meta, arrays = read_snapshot(path)
+        if bool(meta.get("paged")) != self.paged:
+            raise SnapshotCorrupt(
+                f"snapshot arch mismatch: paged={meta.get('paged')} vs "
+                f"engine paged={self.paged}")
+        queue: List[Dict[str, Any]] = []
+        qlens = arrays.get("queue_lens")
+        qtoks = arrays.get("queue_tokens")
+        if qlens is not None and qtoks is not None:
+            off = 0
+            for d, ln in zip(meta.get("queue", []),
+                             [int(x) for x in qlens]):
+                d = dict(d)
+                d["prompt"] = np.asarray(qtoks[off:off + ln], np.int32)
+                off += ln
+                queue.append(d)
+        entries = meta.get("prefix") or []
+        if entries and self._prefix is not None:
+            pages = arrays["prefix_pages"]
+            plens = [int(x) for x in arrays["prefix_lens"]]
+            # np.array (not asarray): device views are read-only and the
+            # page import writes into this host copy before re-upload
+            hp = np.array(jax.device_get(self._pkv))
+            if meta.get("pool_dtype") != str(hp.dtype):
+                raise SnapshotCorrupt(
+                    f"snapshot pool dtype mismatch: "
+                    f"{meta.get('pool_dtype')!r} vs engine {hp.dtype}")
+            pages = pages.view(hp.dtype)     # stored as raw uint8 bytes
+            want = hp.shape[:2] + (pages.shape[2],) + hp.shape[3:]
+            if int(meta.get("block_size", -1)) != self._pool.block_size \
+                    or pages.shape != want:
+                raise SnapshotCorrupt(
+                    f"snapshot pool geometry mismatch: pages "
+                    f"{pages.shape} / block_size "
+                    f"{meta.get('block_size')} vs engine "
+                    f"{want} / {self._pool.block_size}")
+            off, toks = 0, []
+            for ln in plens:
+                toks.append(np.asarray(
+                    arrays["prefix_tokens"][off:off + ln], np.int32))
+                off += ln
+            for e, t in zip(entries, toks):
+                e["tokens"] = t
+            # leave headroom: warmth must never consume the whole pool
+            n = min(len(entries),
+                    max(0, self._pool.num_free_unreserved - 1))
+            ids = self._pool.alloc(n) if n > 0 else []
+            if ids:
+                hp[:, :, ids] = pages[:, :, :len(ids)]
+                self._pkv = self._place_pool(jnp.asarray(hp))
+                created = self._prefix.import_nodes(entries[:len(ids)],
+                                                    ids)
+                with self._state_lock:
+                    self.stats["warm_started"] += created
+        return queue
+
+    def recover(self, state_dir: str, *, fsync_every: int = 1
+                ) -> Dict[int, ServeRequest]:
+        """Crash/restart recovery against a ``--state-dir``: restore the
+        snapshot if one exists (typed :class:`SnapshotCorrupt` falls
+        back to a cold start — warmth lost, correctness kept), replay
+        the journal and RE-SUBMIT every incomplete request (greedy
+        decode makes the replay bit-identical; deadlines re-arm in
+        full), rotate the consumed journal aside and attach a fresh one
+        at the same path. The snapshot's queue descriptors are used only
+        when no journal exists — with one, its submit records are a
+        superset. Returns ``{old request id: new future}`` so the
+        caller can hand back or verify the replayed results."""
+        os.makedirs(state_dir, exist_ok=True)
+        spath = os.path.join(state_dir, SNAPSHOT_FILE)
+        jpath = os.path.join(state_dir, JOURNAL_FILE)
+        queue: List[Dict[str, Any]] = []
+        if os.path.exists(spath):
+            try:
+                queue = self.restore(spath)
+            except SnapshotCorrupt:
+                queue = []    # cold start; the journal still replays
+        rep = replay_journal(jpath)
+        pending = rep.incomplete if rep.submits else queue
+        if os.path.exists(jpath):
+            os.replace(jpath, jpath + ".replayed")
+        self.set_journal(Journal(jpath, fsync_every=fsync_every))
+        out: Dict[int, ServeRequest] = {}
+        ntok = 0
+        for rec in pending:
+            prompt = np.asarray(rec["prompt"], np.int32)
+            req = self.submit(prompt, int(rec["max_new"]),
+                              priority=int(rec.get("priority", 0)),
+                              deadline_s=rec.get("deadline_s"))
+            out[int(rec["id"])] = req
+            ntok += len(prompt)
+        with self._state_lock:
+            self.stats["recovered"] += len(out)
+            self.stats["replayed_tokens"] += ntok
+        if self._mh is not None and out:
+            self._mh["recovered"].inc(len(out))
+            self._mh["replayed"].inc(ntok)
+        return out
 
     # ------------------------------------------------------- stage callables
     def _log(self, stage: str, token: int, info: Any) -> None:
@@ -879,6 +1132,14 @@ class ServeEngine:
             deps = set(self._cycle_tokens)
             free_slots = len(self._free_slots) - reserved
         waiting = self._scheduler.num_waiting
+        draining = self._draining
+        if draining:
+            # graceful drain: admission is closed. Residents keep decoding
+            # via pump cycles below; anything still waiting is failed typed
+            # by close() after the drain settles. Forcing `waiting` to 0
+            # here lets the idle-stop fire the moment the last resident
+            # retires even with a backlog queued behind the gate.
+            waiting = 0
         if not waiting and not occupied and reserved == 0:
             # fully idle — nothing queued, no live rows, and no admitted
             # group still in flight toward its decode merge: drain so the
@@ -887,7 +1148,9 @@ class ServeEngine:
             pf.stop()
             return None
         group = None
-        if self.paged:
+        if draining:
+            popped = None
+        elif self.paged:
             # phase 1 of two-phase admission: budget the PROMPT footprint
             # only — minus any prompt blocks the prefix cache already holds
             # (peek is conservative: registration can only grow a match
@@ -915,7 +1178,8 @@ class ServeEngine:
                 def need_for(r):
                     return self._pool.blocks_for(r.prompt_len)
                 budget = self._pool.num_free_unreserved
-            popped = self._scheduler.try_admit(free_slots, budget, need_for)
+            popped = self._scheduler.try_admit(free_slots, budget, need_for,
+                                               hopeless=self._hopeless_why)
             if popped is not None:
                 # pin the longest cached prefix per member (ref++ on every
                 # matched block) and allocate only the uncached suffixes
@@ -967,7 +1231,8 @@ class ServeEngine:
         else:
             # slot-state pool: recurrent state is pre-allocated per slot, so
             # admission is bounded by free slots alone
-            popped = self._scheduler.try_admit(free_slots, None)
+            popped = self._scheduler.try_admit(free_slots, None,
+                                               hopeless=self._hopeless_why)
             if popped is not None:
                 group = [(r, None) for r in popped]
         if group is not None:
@@ -999,6 +1264,9 @@ class ServeEngine:
                 for g in group:
                     g[0].set_error(err)
                 return ("pump", None)
+            if self._journal is not None:
+                for g in group:
+                    self._journal.admit(g[0])
             if self._mh is not None:
                 self._mh["admitted"].inc(len(group))
             if self._tr is not None:
@@ -1087,14 +1355,22 @@ class ServeEngine:
             # compiled shape keys on each prompt length, as the grouped
             # baseline's did)
             out = []
+            n_pref = 0
             for req in reqs:
+                if getattr(req, "_ssm_ckpt", None) is not None:
+                    # checkpoint-preempted row (drain deadline / boost in
+                    # sync mode): the exact recurrent state was captured at
+                    # preemption — re-seat it directly, no prefill replay
+                    out.append((req, None, None))
+                    continue
                 logits, cache = self._prefill(
                     self.params, jnp.asarray(req.prompt[None]), None,
                     max_len=req.prompt_len)
                 first = int(np.asarray(jnp.argmax(logits, axis=-1))[0])
                 out.append((req, cache, first))
+                n_pref += 1
             with self._state_lock:
-                self.stats["prefills"] += len(out)
+                self.stats["prefills"] += n_pref
             self._log("prefill", pf.token, [r.id for r in reqs])
             return ("admit", out)
         # one launch for the group's FIRST prompt window: prompts are
@@ -1321,25 +1597,39 @@ class ServeEngine:
         now = time.perf_counter()
         rows_idx, c_len, c_last, c_rem = [], [], [], []
         for req, cache, first in payload:
+            ckpt = getattr(req, "_ssm_ckpt", None)
             with self._state_lock:
                 slot = self._free_slots.pop()
                 self._slots_reserved -= 1
                 self._slot_req[slot] = req
-                self._slot_out[slot] = [first]
                 self._slot_phase[slot] = "decode"
             self._slot_gen[slot] += 1
-            self._write_slot_state(slot, cache, req.prompt_len)
-            self._lengths[slot] = req.prompt_len
-            self._last[slot] = first
-            self._rem[slot] = req.max_new - 1
+            if ckpt is not None:
+                # checkpoint-preempted row: re-seat the exact recurrent
+                # state captured at preemption and resume mid-stream —
+                # no prefill, no token re-emission (out already holds
+                # everything emitted before the preemption)
+                state, length, last, rem, out = ckpt
+                req._ssm_ckpt = None
+                self._restore_slot_state(slot, state)
+                self._slot_out[slot] = list(out)
+                self._lengths[slot] = length
+                self._last[slot] = last
+                self._rem[slot] = rem
+            else:
+                self._write_slot_state(slot, cache, req.prompt_len)
+                self._slot_out[slot] = [first]
+                self._lengths[slot] = req.prompt_len
+                self._last[slot] = first
+                self._rem[slot] = req.max_new - 1
+                self._note_first_token(req, now)
             req.state = "decoding"
-            self._note_first_token(req, now)
             if self._tr is not None:
                 self._note_seated(slot, req, now)
             rows_idx.append(slot)
-            c_len.append(req.prompt_len)
-            c_last.append(first)
-            c_rem.append(req.max_new - 1)
+            c_len.append(int(self._lengths[slot]))
+            c_last.append(int(self._last[slot]))
+            c_rem.append(int(self._rem[slot]))
         if self.async_decode:
             self._scatter_carry(rows_idx, c_len, c_last, c_rem,
                                 pad_to=self._scheduler.max_admit)
@@ -1368,6 +1658,54 @@ class ServeEngine:
             sc, sh = self._sstate["ssm"]
             self._sstate["ssm"] = (sc.at[:, slot].set(conv[:, 0]),
                                    sh.at[:, slot].set(h[:, 0]))
+
+    def _save_slot_state(self, slot: int) -> Dict[str, Any]:
+        """Capture one slot's recurrent state (and zamba2 shared-KV span)
+        to HOST memory — the SSM/hybrid checkpoint-preemption path.
+        Sliced copies, not aliases: the donated ``_sstate`` buffers can be
+        consumed by the next chunk without invalidating the checkpoint.
+        Sync mode only — async's in-flight chunk has already advanced the
+        device state past the host mirrors, so its preemptions replay
+        from the prompt instead (bit-identical either way)."""
+        g = jax.device_get
+        st: Dict[str, Any] = {}
+        if self.cfg.hybrid_attn_every:
+            sc, sh = self._sstate["g_ssm"]
+            st["g_ssm"] = (g(sc[:, :, slot]), g(sh[:, :, slot]))
+            if "tail_ssm" in self._sstate:
+                stc, sth = self._sstate["tail_ssm"]
+                st["tail_ssm"] = (g(stc[:, slot]), g(sth[:, slot]))
+            st["shared_k"] = g(self._sstate["shared_k"][:, slot])
+            st["shared_v"] = g(self._sstate["shared_v"][:, slot])
+        else:
+            sc, sh = self._sstate["ssm"]
+            st["ssm"] = (g(sc[:, slot]), g(sh[:, slot]))
+        return st
+
+    def _restore_slot_state(self, slot: int, st: Dict[str, Any]) -> None:
+        """Scatter a :meth:`_save_slot_state` checkpoint back into a
+        (possibly different) slot of the fixed-slot state pool."""
+        if self.cfg.hybrid_attn_every:
+            conv, h = st["g_ssm"]
+            sc, sh = self._sstate["g_ssm"]
+            self._sstate["g_ssm"] = (
+                sc.at[:, :, slot].set(jnp.asarray(conv)),
+                sh.at[:, :, slot].set(jnp.asarray(h)))
+            if "tail_ssm" in st:
+                tconv, th = st["tail_ssm"]
+                stc, sth = self._sstate["tail_ssm"]
+                self._sstate["tail_ssm"] = (
+                    stc.at[:, slot].set(jnp.asarray(tconv)),
+                    sth.at[:, slot].set(jnp.asarray(th)))
+            self._sstate["shared_k"] = self._sstate["shared_k"] \
+                .at[:, slot].set(jnp.asarray(st["shared_k"]))
+            self._sstate["shared_v"] = self._sstate["shared_v"] \
+                .at[:, slot].set(jnp.asarray(st["shared_v"]))
+        else:
+            conv, h = st["ssm"]
+            sc, sh = self._sstate["ssm"]
+            self._sstate["ssm"] = (sc.at[:, slot].set(jnp.asarray(conv)),
+                                   sh.at[:, slot].set(jnp.asarray(h)))
 
     def _window_prefill_step(self, pf) -> None:
         """Synchronous chunked prefill: build, launch and complete ONE
@@ -1486,7 +1824,7 @@ class ServeEngine:
         req = self._slot_req[v]
         out = self._slot_out[v]
         produced = len(out) if out is not None else 0
-        blocks = self._slot_blocks[v]
+        blocks = self._slot_blocks[v] if self.paged else None
         held = len(blocks) if blocks is not None else 0
         return (-req.priority, produced - held, req.preempted_count,
                 -req.id)
@@ -1765,32 +2103,47 @@ class ServeEngine:
 
     def _preempt(self, slot: int, pf) -> None:
         req = self._slot_req[slot]
+        if not self.paged and not self.async_decode \
+                and self._slot_phase[slot] == "decode":
+            # SSM/hybrid sync mode: recurrent state is O(1)/seq, so a
+            # CHECKPOINT preemption is cheap — capture the slot's exact
+            # state + progress and re-seat it at the next admission with
+            # no prefill replay. Async falls through to plain replay (the
+            # in-flight chunk already advanced the donated state past the
+            # host mirrors, so a capture here would be stale).
+            req._ssm_ckpt = (self._save_slot_state(slot),
+                             int(self._lengths[slot]),
+                             int(self._last[slot]), int(self._rem[slot]),
+                             list(self._slot_out[slot] or []))
         with self._state_lock:
             self._slot_req[slot] = None
             self._slot_out[slot] = None
             self._slot_phase[slot] = None
-            if self.async_decode:
-                # deferred-free FENCE: the chunk in flight at preemption
-                # time (and any prefill window launched this cycle) may
-                # still write these blocks — they return to the pool only
-                # after the engine has synced past that device work
-                self._pool.free_deferred(self._slot_blocks[slot])
-            else:
-                self._pool.free(self._slot_blocks[slot])
-            self._slot_blocks[slot] = None
+            if self.paged:
+                if self.async_decode:
+                    # deferred-free FENCE: the chunk in flight at
+                    # preemption time (and any prefill window launched
+                    # this cycle) may still write these blocks — they
+                    # return to the pool only after the engine has synced
+                    # past that device work
+                    self._pool.free_deferred(self._slot_blocks[slot])
+                else:
+                    self._pool.free(self._slot_blocks[slot])
+                self._slot_blocks[slot] = None
             self._free_slots.append(slot)
             self._inflight.discard(req)
             self.stats["preempted"] += 1
         self._slot_gen[slot] += 1      # in-flight tokens become surplus
         req.preempted_count += 1
-        self._slot_prompt[slot] = None
-        self._wp_valid[slot] = False
-        self._tables[slot] = 0
         self._lengths[slot] = 0
         self._last[slot] = 0
         self._rem[slot] = 0
-        self._stall_rem[slot] = 0
-        self._pref_pos[slot] = 0
+        if self.paged:
+            self._slot_prompt[slot] = None
+            self._wp_valid[slot] = False
+            self._tables[slot] = 0
+            self._stall_rem[slot] = 0
+            self._pref_pos[slot] = 0
         self._clear_row_dev(slot)
         if self._mh is not None:
             self._mh["preempted"].inc()
@@ -1836,6 +2189,8 @@ class ServeEngine:
             self._pref_pos[slot] = 0
         self._clear_row_dev(slot)
         req.set_error(err)
+        if self._journal is not None:
+            self._journal.cancel(req, kind)
         if self._mh is not None:
             self._mh[kind].inc()
             self._note_resident()
@@ -1874,8 +2229,24 @@ class ServeEngine:
                     f"({now - (req.submitted_at or now):.3f}s after "
                     f"submit)"), "expired")
         self._scheduler.expire_waiting(now)
-        if not self.paged:
-            return     # preemption (block release + replay) is paged-only
+        if self._draining and self._drain_deadline_at is not None \
+                and now >= self._drain_deadline_at:
+            # drain deadline: checkpoint-preempt every resident (SSM sync
+            # rows capture exact state; paged/async rows will replay) so
+            # drain() can settle and the snapshot captures them as
+            # waiting-queue descriptors. Runs here — the SERIAL decode
+            # stage is the single writer of slot state — never on the
+            # drain() caller thread.
+            n = 0
+            for b in range(len(self._slot_req)):
+                if self._slot_req[b] is None:
+                    continue
+                self._preempt(b, pf)
+                n += 1
+            if n:
+                with self._state_lock:
+                    self.stats["drain_preempted"] += n
+            return
         head = self._scheduler.peek_head()
         if head is None:
             return
@@ -2042,6 +2413,8 @@ class ServeEngine:
                 time.sleep(self._fi.latency_s("chunk_latency"))
             if self._fi.fire("chunk_sync_exc"):
                 raise FaultInjected("chunk_sync_exc")
+            if self._fi.fire("crash_at"):
+                os._exit(137)          # hard mid-stream death, no cleanup
         toks = np.asarray(toks)        # (B, n): the chunk's device sync
         t2a = time.perf_counter()
         # np.array (not asarray): device views are read-only and these
@@ -2169,6 +2542,8 @@ class ServeEngine:
                     time.sleep(self._fi.latency_s("chunk_latency"))
                 if self._fi.fire("chunk_sync_exc"):
                     raise FaultInjected("chunk_sync_exc")
+                if self._fi.fire("crash_at"):
+                    os._exit(137)      # hard mid-stream death, no cleanup
             toks = np.asarray(pend["toks"])
             wait_s = time.perf_counter() - ts
             for b in np.nonzero(pend["rem_before"] > 0)[0]:
@@ -2290,6 +2665,8 @@ class ServeEngine:
             # epoch check and the frees are atomic against the reset, which
             # swaps the pool under the same lock)
             self._scheduler.finish(req, out, now)
+            if self._journal is not None:
+                self._journal.finish(req, out)
             with self._state_lock:
                 self._inflight.discard(req)
                 self.stats["retired"] += 1
@@ -2405,6 +2782,28 @@ class ServeEngine:
         waves = 1.0 + backlog / float(self._scheduler.max_admit)
         return base * waves
 
+    def _hopeless_why(self, r: ServeRequest) -> Optional[str]:
+        """Preemption-aware deadline check at the admission head: a
+        deadline request whose remaining budget cannot cover its
+        estimated prefill + decode at the observed service rate is
+        failed typed :class:`DeadlineExceeded` NOW, before it steals a
+        slot (and possibly preempts a resident via the admission boost)
+        only to expire mid-decode anyway. Conservative: with no rate
+        signal yet (cold engine) nothing is ever hopeless."""
+        if r.deadline_at is None:
+            return None
+        rate = self._decode_rate
+        if rate <= 0.0:
+            return None
+        remaining = r.deadline_at - time.perf_counter()
+        est = (r.prompt_len + r.max_new) / rate
+        if est <= remaining:
+            return None
+        return (f"hopeless at admission: estimated prefill+decode "
+                f"{est:.3f}s exceeds the remaining deadline budget "
+                f"{remaining:.3f}s at the observed service rate "
+                f"{rate:.1f} tok/s")
+
     def submit(self, prompt, max_new: int = 16, *,
                priority: int = 0,
                deadline_s: Optional[float] = None) -> ServeRequest:
@@ -2426,7 +2825,11 @@ class ServeEngine:
         if self._broken is not None:
             raise RuntimeError("serve pipeline is broken") from self._broken
         if self._closing:
-            raise RuntimeError("engine is closed")
+            raise EngineClosed("engine is closed")
+        if self._draining:
+            raise EngineClosed(
+                "engine is draining: admission stopped; submit to another "
+                "replica (residents run to the drain deadline)")
         req = ServeRequest(prompt, max_new, priority=priority,
                            deadline_s=deadline_s)
         total = req.prompt_len + req.max_new
@@ -2456,6 +2859,8 @@ class ServeEngine:
         req.submitted_at = now
         if req.deadline_s is not None:
             req.deadline_at = now + req.deadline_s
+        if self._journal is not None:
+            self._journal.submit(req)
         self._wd_beat = now
         self._scheduler.enqueue(req)
         self._pump()

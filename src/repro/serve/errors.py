@@ -18,7 +18,12 @@ exception type, raised DIRECTLY from :meth:`ServeRequest.result` (no
   (no sync progress within ``watchdog_s``) and failed all in-flight
   futures with a diagnostic instead of letting ``result()`` hang.
 * :class:`EngineClosed`     — ``close()`` gave up draining (or the
-  engine was torn down) with the request still outstanding.
+  engine was torn down / draining) with the request still outstanding.
+* :class:`SnapshotCorrupt`  — a state snapshot failed integrity checks
+  on restore (bad magic/length/checksum/version). Unlike the others
+  this is raised to the *operator* path, not a request future: callers
+  catch it and cold-start (durability can lose warmth, never serve
+  wrong tokens).
 
 All derive from :class:`ServeError` (a ``RuntimeError``); the
 deadline/watchdog pair additionally subclass :class:`TimeoutError` so
@@ -28,7 +33,7 @@ from __future__ import annotations
 
 __all__ = ["ServeError", "Overloaded", "DeadlineExceeded",
            "RequestCancelled", "RowFailed", "WatchdogTimeout",
-           "EngineClosed"]
+           "EngineClosed", "SnapshotCorrupt"]
 
 
 class ServeError(RuntimeError):
@@ -68,3 +73,8 @@ class WatchdogTimeout(ServeError, TimeoutError):
 
 class EngineClosed(ServeError):
     """The engine was closed/torn down with this request outstanding."""
+
+
+class SnapshotCorrupt(ServeError):
+    """A state snapshot failed integrity verification on restore; the
+    caller must fall back to a cold start."""

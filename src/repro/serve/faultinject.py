@@ -35,6 +35,17 @@ Sites (where the engine consults the injector):
 ``preempt``         force-preempts one resident row (cost-model victim
                     order — benign replay)
 ``evict``           force-evicts one parked prefix block (benign)
+``crash_at``        hard process death (``os._exit``) at the decode
+                    chunk sync point — no cleanup, no atexit, no
+                    journal flush beyond what fsync cadence already
+                    persisted. The kill-and-recover driver uses
+                    ``crash_at:at=N`` for a deterministic mid-stream
+                    crash (``tests/test_serve_recover.py``)
+``snapshot_corrupt``  flips a payload byte in the snapshot file right
+                    after ``ServeEngine.snapshot`` writes it —
+                    exercises the checksum + typed
+                    :class:`~repro.serve.errors.SnapshotCorrupt`
+                    cold-start fallback in ``recover()``
 ==================  =====================================================
 
 Params (one *trigger* per clause — ``p``, ``at`` or ``every``; bare
@@ -65,7 +76,7 @@ __all__ = ["FaultInjected", "FaultInjector", "SITES"]
 
 #: Named injection sites the engine consults (see module docstring).
 SITES = ("alloc_fail", "grow_fail", "chunk_sync_exc", "chunk_latency",
-         "preempt", "evict")
+         "preempt", "evict", "crash_at", "snapshot_corrupt")
 
 _TRIGGERS = ("p", "at", "every")
 _KEYS = _TRIGGERS + ("n", "ms", "seed")

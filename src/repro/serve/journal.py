@@ -1,0 +1,240 @@
+"""Request journal: an append-only WAL for the serve engine.
+
+Durability boundary #1 (see ``docs/robustness.md`` "Durability &
+recovery"): every request lifecycle transition the engine performs —
+``submit`` / ``admit`` / ``first_token`` / ``finish`` / ``cancel`` — is
+appended to a checksummed, line-delimited journal file, with the full
+prompt token ids recorded at submit. Greedy decode is deterministic, so
+the journal alone is enough to recover from a hard crash: on restart,
+:func:`replay` classifies every journaled request as *finished* (a
+terminal ``finish``/``cancel`` record exists — the client already got
+its result, nothing to do) or *incomplete* (no terminal record — the
+process died while it was queued or mid-decode), and the engine
+re-submits the incomplete ones, which replay **bit-identically** on the
+gather oracle.
+
+Record format — one record per line::
+
+    <crc32-hex8> <compact-json>\\n
+
+The CRC covers the JSON bytes. A hard kill can tear the final line
+(partial write); replay detects this via the checksum and truncates at
+the FIRST bad record — everything before it is trusted, everything at
+and after it is dropped and reported (``JournalReplay.dropped``). This
+is standard WAL tail-truncation: a dropped ``finish`` record merely
+causes a benign bit-identical re-run of an already-answered request,
+never a wrong answer.
+
+Write path discipline: records are buffer-written and flushed on every
+append; ``fsync`` runs on a configurable cadence (``fsync_every=N``
+records; ``1`` = every record = maximal durability, ``0`` = only on
+:meth:`Journal.flush`/:meth:`Journal.close`). The ``journal.lag_s``
+gauge exposes how long un-fsynced records have been at risk.
+
+Off by default: an engine without a journal attached takes a single
+``is None`` check per transition — the no-journal path is bit-exact
+unchanged.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+import zlib
+from typing import Any, Dict, List, Optional
+
+__all__ = ["Journal", "JournalReplay", "replay",
+           "TERMINAL_KINDS", "RECORD_KINDS"]
+
+#: Lifecycle transitions the engine journals.
+RECORD_KINDS = ("submit", "admit", "first_token", "finish", "cancel")
+
+#: Kinds that mark a request as settled (never replayed).
+TERMINAL_KINDS = ("finish", "cancel")
+
+
+def _encode(rec: Dict[str, Any]) -> bytes:
+    payload = json.dumps(rec, separators=(",", ":"),
+                         sort_keys=True).encode("utf-8")
+    crc = zlib.crc32(payload) & 0xFFFFFFFF
+    return b"%08x %s\n" % (crc, payload)
+
+
+def _decode(line: bytes) -> Optional[Dict[str, Any]]:
+    """Parse one journal line; None when torn/corrupt."""
+    line = line.rstrip(b"\n")
+    if len(line) < 10 or line[8:9] != b" ":
+        return None
+    try:
+        crc = int(line[:8], 16)
+    except ValueError:
+        return None
+    payload = line[9:]
+    if (zlib.crc32(payload) & 0xFFFFFFFF) != crc:
+        return None
+    try:
+        rec = json.loads(payload)
+    except ValueError:
+        return None
+    return rec if isinstance(rec, dict) and "k" in rec else None
+
+
+class Journal:
+    """Append-only, checksummed request WAL (see module docstring).
+
+    Thread-safe: ``submit`` runs on client threads while ``finish`` runs
+    on the engine's complete stage. One lock per append — journal
+    records are per *request transition*, not per token, so this is far
+    off the decode hot path (the ``journal_gate`` benchmark enforces
+    the overhead budget).
+    """
+
+    def __init__(self, path: str, *, fsync_every: int = 1) -> None:
+        if fsync_every < 0:
+            raise ValueError("fsync_every must be >= 0")
+        self.path = str(path)
+        self.fsync_every = fsync_every
+        self._lock = threading.Lock()
+        self._f = open(self.path, "ab")
+        self._since_sync = 0
+        self._dirty_at: Optional[float] = None
+        self._lag_gauge = None
+        self._rec_counter = None
+        self.records_written = 0
+
+    def set_metrics(self, metrics: Any) -> None:
+        """Bind ``journal.lag_s`` / ``journal.records`` to a registry."""
+        if metrics is None:
+            self._lag_gauge = self._rec_counter = None
+            return
+        self._lag_gauge = metrics.gauge("journal.lag_s")
+        self._rec_counter = metrics.counter("journal.records")
+
+    @property
+    def lag_s(self) -> float:
+        """Seconds the oldest un-fsynced record has been at risk."""
+        with self._lock:
+            return 0.0 if self._dirty_at is None \
+                else time.monotonic() - self._dirty_at
+
+    def append(self, kind: str, **fields: Any) -> None:
+        rec = {"k": kind, "t": round(time.time(), 6)}
+        rec.update(fields)
+        data = _encode(rec)
+        with self._lock:
+            if self._f.closed:
+                return
+            self._f.write(data)
+            self._f.flush()
+            self.records_written += 1
+            self._since_sync += 1
+            if self._dirty_at is None:
+                self._dirty_at = time.monotonic()
+            if self.fsync_every and self._since_sync >= self.fsync_every:
+                self._fsync_locked()
+        if self._rec_counter is not None:
+            self._rec_counter.inc()
+        if self._lag_gauge is not None:
+            self._lag_gauge.set(self.lag_s)
+
+    def _fsync_locked(self) -> None:
+        os.fsync(self._f.fileno())
+        self._since_sync = 0
+        self._dirty_at = None
+
+    # -- engine-facing transition helpers ---------------------------------
+    def submit(self, req: Any) -> None:
+        self.append("submit", id=req.id,
+                    prompt=[int(t) for t in req.prompt],
+                    max_new=int(req.max_new), priority=int(req.priority),
+                    deadline_s=req.deadline_s)
+
+    def admit(self, req: Any) -> None:
+        self.append("admit", id=req.id)
+
+    def first_token(self, req: Any) -> None:
+        self.append("first_token", id=req.id)
+
+    def finish(self, req: Any, tokens: Any) -> None:
+        toks = [int(t) for t in tokens]
+        crc = zlib.crc32(json.dumps(toks).encode()) & 0xFFFFFFFF
+        self.append("finish", id=req.id, n=len(toks), crc=crc)
+
+    def cancel(self, req: Any, kind: str) -> None:
+        """Terminal non-finish record (cancelled / expired / shed)."""
+        self.append("cancel", id=req.id, why=kind)
+
+    # ---------------------------------------------------------------------
+    def flush(self) -> None:
+        """Flush and fsync everything appended so far."""
+        with self._lock:
+            if self._f.closed:
+                return
+            self._f.flush()
+            self._fsync_locked()
+        if self._lag_gauge is not None:
+            self._lag_gauge.set(0.0)
+
+    def close(self) -> None:
+        with self._lock:
+            if self._f.closed:
+                return
+            self._f.flush()
+            self._fsync_locked()
+            self._f.close()
+
+    def __enter__(self) -> "Journal":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()
+
+
+class JournalReplay:
+    """Classification of a journal file (see :func:`replay`).
+
+    ``incomplete`` preserves journal order, so re-submission reproduces
+    the original arrival order (admission order under load may still
+    differ — bit-identity is per-request, guaranteed by greedy decode).
+    """
+
+    def __init__(self) -> None:
+        self.records: List[Dict[str, Any]] = []
+        self.submits: Dict[int, Dict[str, Any]] = {}
+        self.terminal: Dict[int, str] = {}
+        self.finished: Dict[int, Dict[str, Any]] = {}
+        self.dropped = 0          # corrupt/torn lines truncated at tail
+
+    @property
+    def incomplete(self) -> List[Dict[str, Any]]:
+        return [rec for rid, rec in self.submits.items()
+                if rid not in self.terminal]
+
+    @property
+    def replayed_tokens(self) -> int:
+        return sum(len(r["prompt"]) for r in self.incomplete)
+
+
+def replay(path: str) -> JournalReplay:
+    """Read a journal, truncating at the first torn/corrupt record."""
+    rep = JournalReplay()
+    if not os.path.exists(path):
+        return rep
+    with open(path, "rb") as f:
+        lines = f.readlines()
+    for i, line in enumerate(lines):
+        rec = _decode(line)
+        if rec is None:
+            rep.dropped = len(lines) - i
+            break
+        rep.records.append(rec)
+        kind = rec["k"]
+        rid = rec.get("id")
+        if kind == "submit" and rid is not None:
+            rep.submits[rid] = rec
+        elif kind in TERMINAL_KINDS and rid is not None:
+            rep.terminal[rid] = kind
+            if kind == "finish":
+                rep.finished[rid] = rec
+    return rep

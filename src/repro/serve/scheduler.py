@@ -106,6 +106,10 @@ class ServeRequest:
         self.state = "created"
         self.preempted_count = 0       # mid-decode evictions (see above)
         self._cancel_requested = False
+        # SSM/hybrid checkpoint-preemption payload (sync engines): the
+        # slot's exact recurrent state + progress, captured at preemption
+        # and consumed (re-seated, no prefill replay) at re-admission
+        self._ssm_ckpt: Optional[tuple] = None
         # Lifecycle timestamps, all on the time.perf_counter clock (the
         # same clock the tracer uses, so spans and these agree):
         self.submitted_at: Optional[float] = None   # set by the engine
@@ -377,10 +381,22 @@ class Scheduler:
         self._emit(events)
         return len(events)
 
+    def export_waiting(self) -> List[ServeRequest]:
+        """Snapshot copy of every waiting request in admission-scan order
+        (tier, then EDF position) — the engine's snapshot writer persists
+        these so a drained engine's queue survives a restart even without
+        a journal. Pure read; the queues are untouched."""
+        with self._lock:
+            return [r for t in self._tiers_locked()
+                    for r in self._queues[t]
+                    if not r.done() and not r._cancel_requested]
+
     # ------------------------------------------------------------- admission
     def try_admit(self, free_slots: int,
                   blocks_free: Optional[int],
-                  need_for: Optional[Callable[[ServeRequest], int]] = None
+                  need_for: Optional[Callable[[ServeRequest], int]] = None,
+                  hopeless: Optional[Callable[[ServeRequest],
+                                              Optional[str]]] = None
                   ) -> Optional[List[ServeRequest]]:
         """Pop the next admission group, or None (taking nothing) when no
         waiting request can be covered — the engine turns that into either
@@ -404,6 +420,16 @@ class Scheduler:
         the per-tier reserved seats (``tier_targets``) fill for backlogged
         tiers even when the strict pass was blocked. Expired/cancelled
         entries are swept first.
+
+        ``hopeless(req) -> reason | None`` is the engine's preemption-aware
+        deadline check: a head whose remaining deadline budget cannot cover
+        its estimated remaining prefill+decode at the current service rate
+        fails typed :class:`DeadlineExceeded` HERE — popped and failed, no
+        blocks charged, the scan continues past it — instead of seating,
+        decoding for a while, and expiring mid-stream anyway (wasted pool
+        and a doomed preemption). Only consulted for requests the scan is
+        about to admit, so an estimate that later improves (service rate
+        recovers) never pre-fails deep queue entries.
         """
         with self._lock:
             events = self._sweep_locked(time.perf_counter())
@@ -426,6 +452,12 @@ class Scheduler:
                     for r in self._queues[t]:
                         if len(group) >= strict_cap:
                             break
+                        why = hopeless(r) if hopeless is not None else None
+                        if why is not None:
+                            r.set_error(DeadlineExceeded(why))
+                            events.append(("expired", r))
+                            taken[t] = taken.get(t, 0) + 1
+                            continue
                         if budget is not None:
                             need = need_for(r)
                             if need > budget:
@@ -445,6 +477,12 @@ class Scheduler:
                     while want > 0 and taken.get(t, 0) < len(q) \
                             and len(group) < cap:
                         r = q[taken.get(t, 0)]
+                        why = hopeless(r) if hopeless is not None else None
+                        if why is not None:
+                            r.set_error(DeadlineExceeded(why))
+                            events.append(("expired", r))
+                            taken[t] = taken.get(t, 0) + 1
+                            continue
                         if budget is not None:
                             need = need_for(r)
                             if need > budget:

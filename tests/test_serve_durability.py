@@ -1,0 +1,500 @@
+"""Durable serving: journal, snapshot/restore, drain, checkpoint preempt.
+
+Covers durability boundary by boundary (docs/robustness.md "Durability &
+recovery"): the request WAL (checksummed records, torn-tail truncation,
+fsync-lag accounting), the snapshot container (atomic writes, typed
+:class:`SnapshotCorrupt` on any integrity failure), graceful drain
+(admission gate, deadline checkpoint-preemption, typed teardown of the
+un-drained backlog), SSM/hybrid checkpoint preemption (exact state
+capture — no prefill replay, bit-identical output), the
+preemption-aware hopeless-deadline check at admission, warm restart
+(``prefix.warm_hits`` on the first post-restore request), and the
+teardown interplay cases (close during drain, watchdog mid-drain,
+restore from drained vs crashed state).
+
+Bit-identity assertions pin ``paged_impl="gather"`` (the materializing
+oracle) as everywhere else in the serve tests. The kill-and-recover
+subprocess driver lives in test_serve_recover.py.
+"""
+import os
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serve.engine import JOURNAL_FILE, SNAPSHOT_FILE, ServeEngine
+from repro.serve.errors import (DeadlineExceeded, EngineClosed, ServeError,
+                                SnapshotCorrupt)
+from repro.serve.journal import Journal, replay
+from repro.serve.scheduler import Scheduler, ServeRequest
+from repro.serve.snapshot import (corrupt_snapshot, read_snapshot,
+                                  write_snapshot)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("stablelm-1.6b").smoke()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def ssm_setup():
+    cfg = get_config("falcon-mamba-7b").smoke()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompts(cfg, sizes, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab_size, size=n).astype(np.int32)
+            for n in sizes]
+
+
+def _wait(pred, timeout=60.0, what="condition"):
+    """Poll until ``pred()`` — drain() gates admission the instant it is
+    called, so tests must not race it against the admit stage."""
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return
+        time.sleep(0.01)
+    raise AssertionError(f"timed out waiting for {what}")
+
+
+class _Rec:
+    """Minimal request stand-in for journal-only tests."""
+
+    def __init__(self, rid, prompt, max_new=8, priority=0,
+                 deadline_s=None):
+        self.id = rid
+        self.prompt = prompt
+        self.max_new = max_new
+        self.priority = priority
+        self.deadline_s = deadline_s
+
+
+# ----------------------------------------------------------------- journal
+def test_journal_roundtrip_classifies(tmp_path):
+    p = str(tmp_path / "j.wal")
+    a = _Rec(1, np.arange(1, 5, dtype=np.int32))
+    b = _Rec(2, np.arange(5, 12, dtype=np.int32), deadline_s=3.0)
+    c = _Rec(3, np.arange(2, 9, dtype=np.int32))
+    with Journal(p) as j:
+        j.submit(a)
+        j.submit(b)
+        j.admit(a)
+        j.first_token(a)
+        j.finish(a, [7, 8, 9])
+        j.submit(c)
+        j.cancel(c, "cancelled")
+    rep = replay(p)
+    assert rep.dropped == 0
+    assert set(rep.submits) == {1, 2, 3}
+    assert rep.terminal == {1: "finish", 3: "cancel"}
+    inc = rep.incomplete
+    assert [r["id"] for r in inc] == [2]
+    assert inc[0]["prompt"] == list(range(5, 12))
+    assert inc[0]["deadline_s"] == 3.0
+    assert rep.replayed_tokens == 7
+
+
+def test_journal_torn_tail_truncates(tmp_path):
+    p = str(tmp_path / "j.wal")
+    with Journal(p) as j:
+        for i in range(4):
+            j.submit(_Rec(i, np.arange(1, 4, dtype=np.int32)))
+    with open(p, "ab") as f:                    # torn final write
+        f.write(b"deadbeef {\"k\": \"subm")
+    rep = replay(p)
+    assert len(rep.submits) == 4 and rep.dropped == 1
+    # corruption mid-file truncates everything AT and AFTER it
+    lines = open(p, "rb").readlines()
+    lines[2] = b"00000000 {}\n"
+    with open(p, "wb") as f:
+        f.writelines(lines)
+    rep = replay(p)
+    assert len(rep.submits) == 2 and rep.dropped == 3
+
+
+def test_journal_fsync_cadence_and_lag(tmp_path):
+    p = str(tmp_path / "j.wal")
+    j = Journal(p, fsync_every=0)               # fsync only on flush/close
+    j.submit(_Rec(1, np.arange(3, dtype=np.int32)))
+    assert j.lag_s >= 0.0
+    time.sleep(0.02)
+    assert j.lag_s > 0.0                        # un-fsynced data at risk
+    j.flush()
+    assert j.lag_s == 0.0
+    j.close()
+    j.close()                                   # idempotent
+    with pytest.raises(ValueError):
+        Journal(str(tmp_path / "x.wal"), fsync_every=-1)
+
+
+# ---------------------------------------------------------------- snapshot
+def test_snapshot_container_roundtrip(tmp_path):
+    p = str(tmp_path / "s.snap")
+    meta = {"queue": [{"id": 4}], "note": "x"}
+    arrs = {"a": np.arange(12, dtype=np.int32).reshape(3, 4),
+            "b": np.zeros((0,), np.float32)}
+    n = write_snapshot(p, meta, arrs)
+    assert n == os.path.getsize(p)
+    m2, a2 = read_snapshot(p)
+    assert m2["queue"] == [{"id": 4}] and m2["version"] == 1
+    assert np.array_equal(a2["a"], arrs["a"]) and a2["b"].size == 0
+
+
+def test_snapshot_corruption_typed(tmp_path):
+    p = str(tmp_path / "s.snap")
+    write_snapshot(p, {}, {"a": np.arange(64, dtype=np.int32)})
+    blob = open(p, "rb").read()
+    # payload bit flip
+    corrupt_snapshot(p)
+    with pytest.raises(SnapshotCorrupt):
+        read_snapshot(p)
+    # truncation (torn write)
+    with open(p, "wb") as f:
+        f.write(blob[:-7])
+    with pytest.raises(SnapshotCorrupt):
+        read_snapshot(p)
+    # bad magic
+    with open(p, "wb") as f:
+        f.write(b"NOTASNAP" + blob[8:])
+    with pytest.raises(SnapshotCorrupt):
+        read_snapshot(p)
+    # missing file
+    with pytest.raises(SnapshotCorrupt):
+        read_snapshot(str(tmp_path / "missing.snap"))
+    assert issubclass(SnapshotCorrupt, ServeError)
+
+
+# ------------------------------------------------------ scheduler additions
+def test_scheduler_hopeless_head_fails_typed():
+    s = Scheduler(max_admit=4)
+    doomed = ServeRequest(np.arange(1, 9, dtype=np.int32), 64,
+                          deadline_s=0.01)
+    fine = ServeRequest(np.arange(1, 5, dtype=np.int32), 4)
+    now = time.perf_counter()
+    doomed.deadline_at = now + 0.01
+    for r in (doomed, fine):
+        s.enqueue(r)
+    events = []
+    s.on_event = lambda kind, r: events.append((kind, r.id))
+    group = s.try_admit(free_slots=4, blocks_free=None,
+                        hopeless=lambda r: "too slow"
+                        if r is doomed else None)
+    assert group == [fine]
+    assert events == [("expired", doomed.id)]
+    with pytest.raises(DeadlineExceeded):
+        doomed.result(timeout=1.0)
+
+
+def test_scheduler_export_waiting():
+    s = Scheduler(max_admit=4)
+    reqs = [ServeRequest(np.arange(1, 5, dtype=np.int32), 4, priority=p)
+            for p in (1, 0, 1)]
+    for r in reqs:
+        s.enqueue(r)
+    reqs[2].cancel()
+    exported = s.export_waiting()
+    # tier order, cancelled requests excluded
+    assert exported == [reqs[1], reqs[0]]
+
+
+# -------------------------------------------------------------------- drain
+def test_drain_lets_residents_finish_then_gates(setup):
+    cfg, params = setup
+    prompts = _prompts(cfg, (12, 9))
+    with ServeEngine(cfg, params, max_batch=4, kv_blocks=64, block_size=8,
+                     paged_impl="gather") as ref_eng:
+        ref = [ref_eng.result(r)
+               for r in [ref_eng.submit(p, 8) for p in prompts]]
+    eng = ServeEngine(cfg, params, max_batch=4, kv_blocks=64, block_size=8,
+                      paged_impl="gather")
+    reqs = [eng.submit(p, 8) for p in prompts]
+    _wait(lambda: all(r.admitted_at is not None for r in reqs),
+          what="rows seated")
+    assert eng.drain(deadline_s=30.0)           # generous: they finish
+    outs = [eng.result(r) for r in reqs]
+    assert all(np.array_equal(a, b) for a, b in zip(ref, outs))
+    assert eng.stats["drain_preempted"] == 0
+    with pytest.raises(EngineClosed):           # admission gate is typed
+        eng.submit(prompts[0], 4)
+    assert isinstance(EngineClosed("x"), RuntimeError)
+    eng.drain()                                 # idempotent
+    eng.close()
+
+
+def test_drain_deadline_preempts_and_close_fails_backlog_typed(setup):
+    cfg, params = setup
+    prompts = _prompts(cfg, (10, 11, 9), seed=3)
+    eng = ServeEngine(cfg, params, max_batch=2, decode_chunk=2,
+                      kv_blocks=64, block_size=8, paged_impl="gather")
+    # long decodes: the drain deadline lands mid-stream
+    reqs = [eng.submit(p, 200) for p in prompts]
+    _wait(lambda: any(r.first_token_at is not None for r in reqs),
+          what="decode in flight")
+    assert eng.drain(deadline_s=0.05, timeout=60.0)
+    assert eng.stats["drain_preempted"] > 0
+    # preempted + never-admitted requests sit in the gated queue; close
+    # settles every future typed — result() never hangs untyped
+    eng.close(timeout=10.0)
+    for r in reqs:
+        with pytest.raises(ServeError):
+            r.result(timeout=5.0)
+
+
+# --------------------------------------------------- journal on the engine
+def test_journal_records_engine_lifecycle(setup, tmp_path):
+    cfg, params = setup
+    prompts = _prompts(cfg, (12, 9), seed=1)
+    jp = str(tmp_path / JOURNAL_FILE)
+    with ServeEngine(cfg, params, max_batch=4, kv_blocks=64, block_size=8,
+                     paged_impl="gather") as plain:
+        ref = [plain.result(r)
+               for r in [plain.submit(p, 8) for p in prompts]]
+    eng = ServeEngine(cfg, params, max_batch=4, kv_blocks=64, block_size=8,
+                      paged_impl="gather", journal=Journal(jp))
+    outs = [eng.result(r) for r in [eng.submit(p, 8) for p in prompts]]
+    eng.close()
+    # journaling is observational: the served tokens are bit-identical
+    assert all(np.array_equal(a, b) for a, b in zip(ref, outs))
+    rep = replay(jp)
+    kinds = [r["k"] for r in rep.records]
+    assert kinds.count("submit") == 2 and kinds.count("finish") == 2
+    assert kinds.count("admit") == 2 and kinds.count("first_token") == 2
+    assert rep.incomplete == []
+
+
+def test_recover_replays_incomplete_bit_identical(setup, tmp_path):
+    cfg, params = setup
+    prompts = _prompts(cfg, (12, 9, 17), seed=2)
+    with ServeEngine(cfg, params, max_batch=4, kv_blocks=64, block_size=8,
+                     paged_impl="gather") as ref_eng:
+        ref = [ref_eng.result(r)
+               for r in [ref_eng.submit(p, 8) for p in prompts]]
+    # hand-build a crashed journal: 3 submits, only #2 finished
+    state = tmp_path / "state"
+    state.mkdir()
+    with Journal(str(state / JOURNAL_FILE)) as j:
+        for i, p in enumerate(prompts):
+            j.submit(_Rec(10 + i, p, max_new=8))
+        j.finish(_Rec(11, prompts[1]), ref[1])
+    eng = ServeEngine(cfg, params, max_batch=4, kv_blocks=64, block_size=8,
+                      paged_impl="gather")
+    replayed = eng.recover(str(state))
+    assert sorted(replayed) == [10, 12]         # the finished one skipped
+    assert np.array_equal(eng.result(replayed[10]), ref[0])
+    assert np.array_equal(eng.result(replayed[12]), ref[2])
+    assert eng.stats["recovered"] == 2
+    assert eng.stats["replayed_tokens"] == len(prompts[0]) \
+        + len(prompts[2])
+    # the consumed journal rotated aside; the fresh one holds the replays
+    assert (state / (JOURNAL_FILE + ".replayed")).exists()
+    eng.drain()
+    rep = replay(str(state / JOURNAL_FILE))
+    assert len(rep.submits) == 2 and len(rep.incomplete) == 0
+    eng.close()
+
+
+# ------------------------------------------------------------- warm restart
+def test_snapshot_warm_restart_first_request_hits(setup, tmp_path):
+    cfg, params = setup
+    system = np.arange(1, 25, dtype=np.int32)   # shared "system prompt"
+    tails = _prompts(cfg, (8, 6), seed=4)
+    prompts = [np.concatenate([system, t]) for t in tails]
+    state = tmp_path / "state"
+    state.mkdir()
+    eng = ServeEngine(cfg, params, max_batch=4, kv_blocks=64, block_size=8,
+                      paged_impl="gather", prefix_cache=True,
+                      journal=Journal(str(state / JOURNAL_FILE)))
+    ref = [eng.result(r) for r in [eng.submit(p, 8) for p in prompts]]
+    assert eng.drain(deadline_s=10.0)
+    eng.snapshot(str(state / SNAPSHOT_FILE))
+    eng.close()
+
+    eng2 = ServeEngine(cfg, params, max_batch=4, kv_blocks=64,
+                       block_size=8, paged_impl="gather",
+                       prefix_cache=True)
+    assert eng2.recover(str(state)) == {}       # nothing incomplete
+    assert eng2.stats["warm_started"] > 0
+    # the FIRST post-restart request hits the restored prefix trie
+    out = eng2.result(eng2.submit(prompts[0], 8))
+    assert eng2._prefix.stats["warm_hits"] > 0
+    assert np.array_equal(out, ref[0])
+    eng2.close()
+
+
+def test_corrupt_snapshot_falls_back_cold_never_wrong(setup, tmp_path):
+    cfg, params = setup
+    prompts = _prompts(cfg, (12, 9), seed=5)
+    state = tmp_path / "state"
+    state.mkdir()
+    eng = ServeEngine(cfg, params, max_batch=4, kv_blocks=64, block_size=8,
+                      paged_impl="gather", prefix_cache=True)
+    ref = [eng.result(r) for r in [eng.submit(p, 8) for p in prompts]]
+    assert eng.drain()
+    eng.snapshot(str(state / SNAPSHOT_FILE))
+    eng.close()
+    corrupt_snapshot(str(state / SNAPSHOT_FILE))
+
+    eng2 = ServeEngine(cfg, params, max_batch=4, kv_blocks=64,
+                       block_size=8, paged_impl="gather",
+                       prefix_cache=True)
+    with pytest.raises(SnapshotCorrupt):        # restore() itself is typed
+        eng2.restore(str(state / SNAPSHOT_FILE))
+    eng2.recover(str(state))                    # recover() absorbs it: cold
+    assert eng2.stats["warm_started"] == 0
+    outs = [eng2.result(r) for r in [eng2.submit(p, 8) for p in prompts]]
+    assert all(np.array_equal(a, b) for a, b in zip(ref, outs))
+    eng2.close()
+
+
+def test_snapshot_corrupt_fault_site(setup, tmp_path):
+    cfg, params = setup
+    sp = str(tmp_path / SNAPSHOT_FILE)
+    eng = ServeEngine(cfg, params, max_batch=2, kv_blocks=32, block_size=8,
+                      paged_impl="gather", prefix_cache=True,
+                      fault_inject="snapshot_corrupt")
+    eng.result(eng.submit(_prompts(cfg, (12,), seed=6)[0], 4))
+    assert eng.drain()
+    eng.snapshot(sp)
+    eng.close()
+    with pytest.raises(SnapshotCorrupt):
+        read_snapshot(sp)
+
+
+def test_restore_from_drained_snapshot_resubmits_queue(setup, tmp_path):
+    cfg, params = setup
+    prompts = _prompts(cfg, (10, 11, 9), seed=7)
+    with ServeEngine(cfg, params, max_batch=4, kv_blocks=64, block_size=8,
+                     paged_impl="gather") as ref_eng:
+        ref = [ref_eng.result(r)
+               for r in [ref_eng.submit(p, 32) for p in prompts]]
+    state = tmp_path / "state"
+    state.mkdir()
+    # NO journal: the snapshot's queue descriptors are the only record
+    eng = ServeEngine(cfg, params, max_batch=2, decode_chunk=2,
+                      kv_blocks=64, block_size=8, paged_impl="gather")
+    reqs = [eng.submit(p, 32) for p in prompts]
+    _wait(lambda: any(r.admitted_at is not None for r in reqs),
+          what="rows seated")
+    eng.drain(deadline_s=0.0, timeout=60.0)     # checkpoint-preempt now
+    eng.snapshot(str(state / SNAPSHOT_FILE))
+    eng.close()
+    del reqs
+
+    eng2 = ServeEngine(cfg, params, max_batch=2, decode_chunk=2,
+                       kv_blocks=64, block_size=8, paged_impl="gather")
+    replayed = eng2.recover(str(state))
+    assert len(replayed) > 0                    # drained backlog replays
+    for old_id, r in replayed.items():
+        out = eng2.result(r, timeout=120.0)
+        # old ids are 1-based in submission order within the dead engine
+        matches = [np.array_equal(out, x) for x in ref]
+        assert any(matches)
+    eng2.close()
+
+
+# -------------------------------------------------- hopeless-deadline check
+def test_hopeless_deadline_fails_at_admission(setup):
+    cfg, params = setup
+    prompts = _prompts(cfg, (12, 10), seed=8)
+    eng = ServeEngine(cfg, params, max_batch=2, kv_blocks=64, block_size=8,
+                      paged_impl="gather")
+    # warm the service-rate model
+    eng.result(eng.submit(prompts[0], 8))
+    assert eng._decode_rate > 0.0
+    # a deadline far under the work's service time at the observed rate
+    need_s = (len(prompts[1]) + 200) / eng._decode_rate
+    doomed = eng.submit(prompts[1], 200, deadline_s=min(0.05,
+                                                        need_s / 100))
+    with pytest.raises(DeadlineExceeded) as ei:
+        doomed.result(timeout=30.0)
+    assert "hopeless" in str(ei.value) or "deadline" in str(ei.value)
+    eng.close()
+
+
+# --------------------------------------------- SSM checkpoint preemption
+def test_ssm_boost_preempt_checkpoint_no_replay(ssm_setup):
+    cfg, params = ssm_setup
+    prompts = _prompts(cfg, (10, 11, 9), seed=9)
+    with ServeEngine(cfg, params, max_batch=4) as ref_eng:
+        ref = [ref_eng.result(r)
+               for r in [ref_eng.submit(p, 24) for p in prompts]]
+    eng = ServeEngine(cfg, params, max_batch=2, decode_chunk=2)
+    lo = [eng.submit(p, 24, priority=1) for p in prompts[:2]]
+    _wait(lambda: all(r.first_token_at is not None for r in lo),
+          what="low-tier rows decoding")
+    hi = eng.submit(prompts[2], 24, priority=0)
+    outs = [eng.result(r, timeout=120.0) for r in lo] \
+        + [eng.result(hi, timeout=120.0)]
+    assert eng.stats["preempted"] > 0           # boost fired (non-paged!)
+    # checkpoint restore, not replay: one prefill per request even though
+    # a row was preempted mid-decode
+    assert eng.stats["prefills"] == len(prompts)
+    assert all(np.array_equal(a, b) for a, b in zip(ref, outs))
+    eng.close()
+
+
+def test_ssm_drain_deadline_checkpoint_preempts(ssm_setup):
+    cfg, params = ssm_setup
+    prompts = _prompts(cfg, (10, 9), seed=10)
+    eng = ServeEngine(cfg, params, max_batch=2, decode_chunk=2)
+    reqs = [eng.submit(p, 200) for p in prompts]
+    _wait(lambda: all(r.first_token_at is not None for r in reqs),
+          what="rows decoding")
+    assert eng.drain(deadline_s=0.05, timeout=60.0)
+    assert eng.stats["drain_preempted"] > 0
+    # the checkpoints captured exact state on the way out
+    assert all(r._ssm_ckpt is not None or r.done() for r in reqs)
+    eng.close(timeout=10.0)
+    for r in reqs:
+        with pytest.raises(ServeError):
+            r.result(timeout=5.0)
+
+
+# -------------------------------------------------------- teardown interplay
+def test_close_during_active_drain_settles_everything(setup):
+    cfg, params = setup
+    prompts = _prompts(cfg, (10, 11), seed=11)
+    eng = ServeEngine(cfg, params, max_batch=2, decode_chunk=2,
+                      kv_blocks=64, block_size=8, paged_impl="gather")
+    reqs = [eng.submit(p, 200) for p in prompts]
+    _wait(lambda: any(r.first_token_at is not None for r in reqs),
+          what="decode in flight")
+    t = threading.Thread(target=eng.drain,
+                         kwargs={"deadline_s": 120.0, "timeout": 120.0})
+    t.start()
+    time.sleep(0.2)
+    eng.close(timeout=5.0)                      # close races the drain
+    t.join(timeout=30.0)
+    assert not t.is_alive()
+    for r in reqs:                              # typed or done — never hung
+        try:
+            r.result(timeout=5.0)
+        except ServeError:
+            pass
+
+
+def test_watchdog_fires_mid_drain(setup):
+    cfg, params = setup
+    prompts = _prompts(cfg, (10,), seed=12)
+    eng = ServeEngine(cfg, params, max_batch=2, decode_chunk=2,
+                      kv_blocks=64, block_size=8, paged_impl="gather",
+                      watchdog_s=0.3,
+                      fault_inject="chunk_latency:at=2,ms=1500")
+    r = eng.submit(prompts[0], 64)
+    _wait(lambda: r.admitted_at is not None, what="row seated")
+    eng.drain(deadline_s=30.0, timeout=30.0)
+    # the injected stall tripped the watchdog while draining: the future
+    # is typed, drain returned, close is clean — nothing hangs
+    with pytest.raises(ServeError):
+        r.result(timeout=10.0)
+    assert eng.stats["watchdog_fires"] > 0
+    eng.close(timeout=5.0)

@@ -1,0 +1,192 @@
+"""Kill-and-recover chaos tests: the end-to-end durability acceptance.
+
+Each scenario runs the serve engine in a SUBPROCESS with ``--state-dir``
+style durability (journal + snapshot via the engine API), kills it hard
+mid-stream — either the deterministic ``crash_at`` fault site
+(``os._exit(137)`` at the Nth decode-chunk sync point) or a real SIGKILL
+from outside — then starts a FRESH process on the same state directory
+and recovers. The acceptance bar (docs/robustness.md): every request the
+dead process accepted is either already finished (terminal journal
+record — the client got its answer) or replays **bit-identically**
+against the gather-oracle reference run. Both the synchronous decode
+path and the async lookahead path must pass; they share one sync oracle
+because sync/async bit-identity is its own engine invariant.
+
+Subprocess idiom follows test_serve_mesh.py: raw-string scripts that set
+env before importing jax, driven by ``_run_sub``.
+"""
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import pytest
+
+# One engine "incarnation": recover whatever a previous incarnation left
+# in RECOVER_STATE_DIR, then (unless RECOVER_SUBMIT=0) serve 4 fresh
+# requests. Request ids are process-local and deterministic (0..3 in
+# submit order), so the oracle run, the crashed run, and the recovery
+# run all agree on which request is which.
+SERVE_SCRIPT = r"""
+import os
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+if os.environ.get("RECOVER_ASYNC") == "1":
+    os.environ["REPRO_ASYNC_DECODE"] = "1"
+import numpy as np
+import jax
+from repro.configs import get_config
+from repro.models import lm
+from repro.serve.engine import ServeEngine
+
+cfg = get_config("stablelm-1.6b").smoke()
+params = lm.init_params(cfg, jax.random.PRNGKey(0))
+rng = np.random.default_rng(7)
+prompts = [rng.integers(1, cfg.vocab_size, size=n).astype(np.int32)
+           for n in (12, 9, 17, 14)]
+eng = ServeEngine(cfg, params, max_batch=2, decode_chunk=2,
+                  kv_blocks=64, block_size=8, paged_impl="gather",
+                  fault_inject=os.environ.get("RECOVER_FAULTS") or None)
+replayed = eng.recover(os.environ["RECOVER_STATE_DIR"])
+for old_id in sorted(replayed):
+    out = eng.result(replayed[old_id], timeout=300.0)
+    print("REPLAYED", old_id, ",".join(map(str, out.tolist())), flush=True)
+if os.environ.get("RECOVER_SUBMIT", "1") == "1":
+    reqs = [eng.submit(p, 16) for p in prompts]
+    for r in reqs:
+        out = eng.result(r, timeout=300.0)
+        print("DONE", r.id, ",".join(map(str, out.tolist())), flush=True)
+eng.drain(deadline_s=30.0)
+eng.close()
+print("EXIT CLEAN", flush=True)
+"""
+
+
+def _env(state_dir, *, faults=None, submit=True, async_decode=False):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src")
+    env["RECOVER_STATE_DIR"] = str(state_dir)
+    env["RECOVER_FAULTS"] = faults or ""
+    env["RECOVER_SUBMIT"] = "1" if submit else "0"
+    env["RECOVER_ASYNC"] = "1" if async_decode else "0"
+    return env
+
+
+def _run_sub(env, timeout=600.0):
+    return subprocess.run([sys.executable, "-c", SERVE_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+def _parse(stdout):
+    """stdout -> ({id: tokens} finished, {old_id: tokens} replayed)."""
+    done, replayed = {}, {}
+    for line in stdout.strip().splitlines():
+        parts = line.split()
+        if parts and parts[0] == "DONE":
+            done[int(parts[1])] = parts[2]
+        elif parts and parts[0] == "REPLAYED":
+            replayed[int(parts[1])] = parts[2]
+    return done, replayed
+
+
+@pytest.fixture(scope="module")
+def oracle(tmp_path_factory):
+    """Reference tokens per request id from one clean, uncrashed run."""
+    state = tmp_path_factory.mktemp("oracle-state")
+    r = _run_sub(_env(state))
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert r.stdout.strip().splitlines()[-1] == "EXIT CLEAN"
+    done, _ = _parse(r.stdout)
+    assert sorted(done) == [0, 1, 2, 3]
+    return done
+
+
+def _journal_finished_ids(path):
+    """Request ids with a terminal finish record (compact sorted-key
+    JSON: ``"id":N,"k":"finish"``) — no engine import needed."""
+    import re
+    try:
+        blob = open(path, "rb").read()
+    except OSError:
+        return set()
+    return {int(m) for m in re.findall(rb'"id":(\d+),"k":"finish"', blob)}
+
+
+def _assert_recovered(oracle, crashed_out, recovered_out,
+                      journal_finished=()):
+    """Every accepted request is finished-before-crash or bit-identically
+    replayed; none may be lost or answered differently. A request whose
+    ``finish`` hit the WAL in the instant before the kill (terminal in
+    the journal, output print lost with the process) counts as finished."""
+    crash_done, _ = _parse(crashed_out)
+    rec_done, rec_replayed = _parse(recovered_out)
+    assert not rec_done                         # recovery run submits none
+    for rid, want in oracle.items():
+        got = crash_done.get(rid) or rec_replayed.get(rid)
+        if got is None:
+            assert rid in journal_finished, \
+                f"request {rid} lost: neither finished nor replayed"
+            continue
+        assert got == want, f"request {rid} tokens diverged after recovery"
+    # nothing already answered gets answered again
+    assert not (set(crash_done) & set(rec_replayed))
+
+
+def _crash_then_recover(state, oracle, *, async_decode):
+    crash = _run_sub(_env(state, faults="crash_at:at=3",
+                          async_decode=async_decode))
+    assert crash.returncode == 137, \
+        f"rc={crash.returncode}\n{crash.stderr[-3000:]}"
+    assert os.path.exists(os.path.join(str(state), "journal.wal"))
+    rec = _run_sub(_env(state, submit=False, async_decode=async_decode))
+    assert rec.returncode == 0, rec.stderr[-3000:]
+    assert rec.stdout.strip().splitlines()[-1] == "EXIT CLEAN"
+    _assert_recovered(oracle, crash.stdout, rec.stdout)
+    # recovered incarnation left a rotated journal behind
+    assert os.path.exists(os.path.join(str(state),
+                                       "journal.wal.replayed"))
+
+
+@pytest.mark.slow
+def test_crash_at_then_recover_sync(oracle, tmp_path):
+    _crash_then_recover(tmp_path / "state", oracle, async_decode=False)
+
+
+@pytest.mark.slow
+def test_crash_at_then_recover_async(oracle, tmp_path):
+    _crash_then_recover(tmp_path / "state", oracle, async_decode=True)
+
+
+@pytest.mark.slow
+def test_sigkill_then_recover(oracle, tmp_path):
+    state = tmp_path / "state"
+    jpath = os.path.join(str(state), "journal.wal")
+    proc = subprocess.Popen([sys.executable, "-c", SERVE_SCRIPT],
+                            env=_env(state), stdout=subprocess.PIPE,
+                            stderr=subprocess.PIPE, text=True)
+    # kill only after the WAL shows all 4 submits and decode has started
+    # (first_token journaled) so the kill lands mid-stream, not pre-work
+    deadline = time.monotonic() + 300.0
+    try:
+        while time.monotonic() < deadline:
+            if proc.poll() is not None:
+                break                           # outran us: clean finish
+            try:
+                blob = open(jpath, "rb").read()
+            except OSError:
+                blob = b""
+            if blob.count(b'"k":"submit"') >= 4 \
+                    and blob.count(b'"k":"first_token"') >= 1:
+                proc.send_signal(signal.SIGKILL)
+                break
+            time.sleep(0.02)
+        out, err = proc.communicate(timeout=600.0)
+    finally:
+        proc.kill()
+    assert os.path.exists(jpath), err[-3000:]
+    rec = _run_sub(_env(state, submit=False))
+    assert rec.returncode == 0, rec.stderr[-3000:]
+    assert rec.stdout.strip().splitlines()[-1] == "EXIT CLEAN"
+    finished = _journal_finished_ids(jpath + ".replayed")
+    _assert_recovered(oracle, out, rec.stdout, journal_finished=finished)
